@@ -1,0 +1,81 @@
+"""Paper Table 1 + §4: bit-level divergence of float pipelines vs Q16.16.
+
+The paper shows identical code on x86/ARM produces different embedding bits.
+One container can't host two ISAs, so we reproduce the *mechanism* the paper
+blames (§2.1): reduction-order / fusion differences. We evaluate the same
+dot products under 6 float32 summation orders (sequential, reversed, pairwise
+tree, chunked-8/64, sorted-by-magnitude) — a proxy for what different
+SIMD widths/compilers do — and count bit-divergent results; then the same
+inputs through the Q16.16 boundary, where every order must give identical
+bits (integer associativity).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import repro  # noqa: F401
+from benchmarks.common import emit, time_us
+from repro.core import boundary, fixedpoint as fp
+
+
+def _float_sum_orders(x: np.ndarray):
+    yield "seq", np.float32(np.add.reduce(x.astype(np.float32)))
+    yield "rev", np.float32(np.add.reduce(x[::-1].astype(np.float32)))
+    t = x.astype(np.float32)
+    while len(t) > 1:  # pairwise tree
+        if len(t) % 2:
+            t = np.concatenate([t, np.zeros(1, np.float32)])
+        t = t[0::2] + t[1::2]
+    yield "tree", t[0]
+    for chunk in (8, 64):
+        c = x.astype(np.float32)
+        pad = (-len(c)) % chunk
+        c = np.concatenate([c, np.zeros(pad, np.float32)])
+        yield f"chunk{chunk}", np.float32(c.reshape(-1, chunk).sum(axis=1).sum())
+    order = np.argsort(np.abs(x))
+    yield "sorted", np.float32(np.add.reduce(x[order].astype(np.float32)))
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    n_vec, dim = 256, 384
+    vecs = rng.normal(size=(n_vec, dim)).astype(np.float32)
+    q = rng.normal(size=(dim,)).astype(np.float32)
+
+    # float path: products then order-dependent summation
+    float_divergent = 0
+    for v in vecs:
+        prods = (v * q).astype(np.float32)
+        bits = {np.float32(s).tobytes() for _, s in _float_sum_orders(prods)}
+        float_divergent += len(bits) > 1
+
+    # fixed-point path: same permutation game on the wide integer products
+    raw_v = np.asarray(boundary.normalize_embedding(vecs))
+    raw_q = np.asarray(boundary.admit_query(q))
+    fixed_divergent = 0
+    for v in raw_v:
+        prods = v.astype(np.int64) * raw_q.astype(np.int64)
+        base = int(prods.sum())
+        for _ in range(6):
+            perm = rng.permutation(dim)
+            if int(prods[perm].sum()) != base:
+                fixed_divergent += 1
+                break
+
+    us = time_us(
+        lambda: fp.qdot_wide(
+            np_to_jax(raw_v), np_to_jax(np.broadcast_to(raw_q, raw_v.shape))),
+    )
+    emit("table1_divergence", us,
+         f"float_divergent={float_divergent}/{n_vec};"
+         f"q16_divergent={fixed_divergent}/{n_vec}")
+    assert fixed_divergent == 0
+
+
+def np_to_jax(x):
+    import jax.numpy as jnp
+    return jnp.asarray(x)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Paper §8.2: retrieval latency. The paper reports <500 µs/query on an M3;
+this container is a shared CPU, so absolute numbers are a proxy — the table
+reports µs/query for exact search (jnp + Pallas-interpret paths) and HNSW
+across corpus sizes, plus boundary-crossing cost.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import repro  # noqa: F401
+import jax
+import jax.numpy as jnp
+from benchmarks.common import emit, time_us
+from repro.core import boundary, commands, hnsw, machine, search
+from repro.core.state import init_state
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    dim = 128
+    for n in (1_000, 10_000):
+        vecs = boundary.normalize_embedding(
+            rng.normal(size=(n, dim)).astype(np.float32))
+        state = init_state(n, dim, hnsw_levels=1, hnsw_degree=2)
+        state = machine.replay(
+            state, commands.insert_batch(jnp.arange(n, dtype=jnp.int64), vecs))
+        q = boundary.admit_query(rng.normal(size=(16, dim)).astype(np.float32))
+
+        us = time_us(lambda: search.exact_search(state, q, 10))
+        emit(f"sec82_exact_n{n}", us / 16, f"batch16;per_query_us={us/16:.0f}")
+
+        us_k = time_us(lambda: search.exact_search(state, q, 10,
+                                                   use_kernel=True))
+        emit(f"sec82_exact_pallas_n{n}", us_k / 16,
+             "interpret_mode=True;per_query")
+
+    # HNSW on a graph-indexed arena (smaller: incremental insert cost)
+    n = 2_000
+    vecs = boundary.normalize_embedding(
+        rng.normal(size=(n, dim)).astype(np.float32))
+    state = init_state(n, dim)
+    state = machine.replay(
+        state, commands.insert_batch(jnp.arange(n, dtype=jnp.int64), vecs))
+    q1 = boundary.admit_query(rng.normal(size=(dim,)).astype(np.float32))
+    jitted = jax.jit(lambda s, q: hnsw.hnsw_search(s, q, 10, ef=64))
+    us = time_us(lambda: jitted(state, q1))
+    emit(f"sec82_hnsw_n{n}", us, "ef=64;single_query")
+
+    # boundary crossing (quantize + integer normalize)
+    x = rng.normal(size=(256, dim)).astype(np.float32)
+    jb = jax.jit(lambda v: boundary.normalize_embedding(v))
+    us = time_us(lambda: jb(x))
+    emit("sec53_boundary_cross", us / 256, "per_vector_us")
+
+
+if __name__ == "__main__":
+    run()

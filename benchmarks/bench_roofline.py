@@ -1,0 +1,59 @@
+"""Roofline reporter: reads the dry-run artifacts (experiments/dryrun/*.json)
+and emits the per-cell three-term table — the §Roofline deliverable in CSV
+form. Does NOT compile anything (run the sweep first: scripts/dryrun_sweep.sh).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import emit
+from repro.configs import CANONICAL, get_config
+from repro.models.config import SHAPES
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def model_flops_per_device(arch: str, shape_name: str, chips: int) -> float:
+    """MODEL_FLOPS = 6·N_active·D tokens (train) / 2·N·D (inference fwd)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / chips
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n_active * tokens / chips
+
+
+def run() -> None:
+    files = sorted(DRYRUN.glob("*__single.json"))
+    if not files:
+        emit("roofline", 0.0, "no_dryrun_artifacts;run scripts/dryrun_sweep.sh")
+        return
+    for f in files:
+        d = json.loads(f.read_text())
+        name = f"roofline_{d['arch']}_{d['shape']}"
+        if d["status"] == "skip":
+            emit(name, 0.0, f"skip:{d['reason'][:60]}")
+            continue
+        if d["status"] != "ok":
+            emit(name, 0.0, f"error:{d.get('error','')[:60]}")
+            continue
+        r = d["roofline"]
+        mf = model_flops_per_device(d["arch"], d["shape"], d["chips"])
+        useful = mf / max(r["flops"], 1.0)
+        bound_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        # roofline fraction: useful-model-compute time over the binding term
+        frac = (mf / 197e12) / max(bound_s, 1e-30)
+        emit(name, bound_s * 1e6,
+             f"dominant={r['dominant']};compute_s={r['compute_s']:.3e};"
+             f"memory_s={r['memory_s']:.3e};collective_s={r['collective_s']:.3e};"
+             f"model_flops_ratio={useful:.2f};roofline_frac={frac:.3f}")
+
+
+if __name__ == "__main__":
+    run()

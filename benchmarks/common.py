@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (per the harness
+contract); `derived` carries the table-specific payload (hash equality,
+recall, divergence counts, ...).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") or \
+        isinstance(out, (tuple, list)) else None
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.tree.map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
+        out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,0 +1,53 @@
+"""End-to-end driver: serve a small LM with batched, memory-augmented requests.
+
+This is the paper's deployment story (RAG on a deterministic substrate):
+documents are embedded by the model, cross the Q16.16 boundary into Valori
+memory, and retrieval conditions generation. The command log replays to the
+same hash — the audit-trail property for regulated deployments (paper §9).
+
+Run: PYTHONPATH=src python examples/deterministic_rag.py
+"""
+import time
+
+import jax
+import numpy as np
+
+import repro  # noqa: F401
+from repro.configs import get_reduced_config
+from repro.models import transformer as tf
+from repro.serve.engine import MemoryAugmentedEngine, ServeConfig
+
+ARCH = "gemma2_2b"  # reduced config of the paper-assigned flagship arch
+
+cfg = get_reduced_config(ARCH)
+params = tf.init_params(cfg, jax.random.PRNGKey(0))
+engine = MemoryAugmentedEngine(cfg, params, ServeConfig(
+    capacity=512, retrieve_k=3, max_new_tokens=12, s_cache=160,
+    context_tokens=16))
+
+rng = np.random.default_rng(1)
+
+# ingest a corpus of 48 "documents" (token sequences)
+docs = rng.integers(0, cfg.vocab_size, (48, 48), dtype=np.int32)
+ids = engine.insert_documents(docs)
+h0 = engine.memory_hash()
+print(f"[ingest] {len(ids)} docs → memory hash {h0:#x}")
+
+# batched requests
+prompts = rng.integers(0, cfg.vocab_size, (6, 12), dtype=np.int32)
+nn, scores = engine.retrieve(prompts)
+print(f"[retrieve] neighbors: {nn[:, 0].tolist()} (deterministic ids)")
+
+t0 = time.time()
+completions = engine.generate(prompts, augment=True)
+print(f"[generate] {completions.shape} tokens in {time.time()-t0:.2f}s")
+print(completions[:2])
+
+# the regulated-sector property: replay the audit log, get the same memory
+assert engine.replay_log_fresh() == h0
+print("[audit] command-log replay reproduces the memory hash ✓")
+
+# determinism of retrieval results under replay
+nn2, scores2 = engine.retrieve(prompts)
+assert (nn == nn2).all() and (scores == scores2).all()
+print("[audit] retrieval is bit-stable across calls ✓")

@@ -1,0 +1,43 @@
+"""Quickstart: the Valori deterministic memory substrate in 60 lines.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+import repro  # noqa: F401  (enables x64 for exact integer accumulators)
+from repro.core import boundary, commands, hashing, machine, search, snapshot
+from repro.core.contracts import Q16_16
+from repro.core.state import init_state
+
+# 1. Nondeterministic floats (pretend these came from a model on ARM/x86 —
+#    their low bits would differ across machines).
+rng = np.random.default_rng(0)
+embeddings = rng.normal(size=(100, 64)).astype(np.float32)
+
+# 2. Cross the determinism boundary: quantize to Q16.16 + exact integer
+#    L2 normalization. Everything downstream is integer → bit-identical
+#    on any platform.
+raw = boundary.normalize_embedding(embeddings, Q16_16)
+
+# 3. Memory is a state machine: commands in, states out.
+state = init_state(capacity=256, dim=64, contract=Q16_16)
+log = commands.insert_batch(np.arange(100, dtype=np.int64), raw)
+state = machine.replay(state, log)
+print(f"inserted {int(state.count)} vectors; logical time t={int(state.version)}")
+
+# 4. Deterministic search: wide integer scores, (score, id) tie-breaks.
+query = boundary.admit_query(embeddings[:3], Q16_16)
+ids, scores = search.exact_search(state, query, k=5)
+print("top-5 ids per query:\n", np.asarray(ids))
+
+# 5. Snapshot / restore: the paper's H_A == H_B transfer test.
+blob = snapshot.snapshot_bytes(state)
+restored, h = snapshot.restore_bytes(blob)
+assert h == hashing.hash_pytree(state)
+print(f"snapshot {len(blob)} bytes, hash {h:#x} — restore verified")
+
+# 6. Replayability: applying the same log to S0 reproduces the state exactly,
+#    in any chunking.
+s_again = machine.apply_chunked(init_state(256, 64, contract=Q16_16), log, chunk=7)
+assert hashing.hash_pytree(s_again) == hashing.hash_pytree(state)
+print("replay(S0, log) == state ✓ (the paper's §3.1 guarantee)")

@@ -1,0 +1,74 @@
+"""Regenerate the EXPERIMENTS.md tables from experiments/dryrun artifacts.
+
+Usage: PYTHONPATH=src python scripts/make_tables.py > experiments/tables.md
+"""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import repro  # noqa: F401,E402
+from repro.configs import get_config  # noqa: E402
+from repro.models.config import SHAPES  # noqa: E402
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+PEAK = 197e12
+
+
+def model_flops_per_device(arch, shape_name, chips):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len / chips
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len / chips
+    return 2.0 * n_active * shape.global_batch / chips
+
+
+def main():
+    shapes_order = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    print("### §Roofline — per-device terms, single-pod mesh (16×16 = 256 chips)\n")
+    print("| arch | shape | compute s | memory s (min..max) | collective s | "
+          "dominant | MODEL/HLO flops | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for f in sorted(DRYRUN.glob("*__single.json")):
+        d = json.loads(f.read_text())
+        arch, shape = d["arch"], d["shape"]
+        if d["status"] == "skip":
+            print(f"| {arch} | {shape} | — | — | — | SKIP | — | — |")
+            continue
+        if d["status"] != "ok":
+            print(f"| {arch} | {shape} | — | — | — | ERROR | — | — |")
+            continue
+        r = d["roofline"]
+        mf = model_flops_per_device(arch, shape, d["chips"])
+        useful = mf / max(r["flops"], 1.0)
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = (mf / PEAK) / max(bound, 1e-30)
+        mem_hi = r.get("memory_upper_s", r["memory_s"])
+        print(f"| {arch} | {shape} | {r['compute_s']:.2e} | "
+              f"{r['memory_s']:.2e}..{mem_hi:.2e} | {r['collective_s']:.2e} | "
+              f"{r['dominant']} | {useful:.2f} | {frac:.3f} |")
+
+    print("\n### §Dry-run — multi-pod (2×16×16 = 512 chips) status\n")
+    print("| arch | shape | status | per-device args+temp (GiB) | "
+          "wire bytes/device |")
+    print("|---|---|---|---|---|")
+    for f in sorted(DRYRUN.glob("*__multi.json")):
+        d = json.loads(f.read_text())
+        arch, shape = d["arch"], d["shape"]
+        if d["status"] != "ok":
+            print(f"| {arch} | {shape} | {d['status']} | — | — |")
+            continue
+        mem = d.get("memory_analysis", {})
+        gib = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)) / 2**30
+        r = d["roofline"]
+        print(f"| {arch} | {shape} | ok | {gib:.2f} | "
+              f"{r['wire_bytes_per_device']:.2e} |")
+
+
+if __name__ == "__main__":
+    main()

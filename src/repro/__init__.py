@@ -1,0 +1,14 @@
+"""repro: a deterministic-memory JAX framework reproducing the Valori paper.
+
+x64 note: the Valori substrate is built on exact integer arithmetic with
+64-bit accumulators (paper §5.1). JAX disables 64-bit types by default, which
+would silently truncate our accumulators to int32 and break the overflow-
+freedom argument — so we enable x64 here, before any array is created.
+All model/training code keeps explicit dtypes (bf16/f32/int32) so the wider
+defaults never leak into compute graphs.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

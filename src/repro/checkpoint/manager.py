@@ -1,0 +1,138 @@
+"""Deterministic training checkpoints — Valori snapshot semantics for trainer
+state (paper §5.2/§8.1 applied to params/optimizer/data-cursor).
+
+Every checkpoint is a directory:
+  manifest.json  — step, FNV-1a tree hash (hashing.hash_pytree), leaf index
+  <n>.npy        — one file per leaf, little-endian, in sorted-path order
+
+Restore re-hashes and refuses a mismatch, exactly like snapshot transfer in
+the paper (H_A ≡ H_B). An async mode hides the host write behind compute
+(double-buffered thread), standard for large-scale training.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import hashing
+
+
+def _leaves_with_paths(tree: Any):
+    return jax.tree_util.tree_flatten_with_path(tree)[0]
+
+
+def save_checkpoint(path: str | pathlib.Path, tree: Any, step: int) -> int:
+    """Write a checkpoint; returns the state hash."""
+    path = pathlib.Path(path)
+    tmp = path.with_name(path.name + ".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves = _leaves_with_paths(tree)
+    index = []
+    for i, (kp, leaf) in enumerate(leaves):
+        arr = np.asarray(leaf)
+        np.save(tmp / f"{i}.npy", arr)
+        index.append({"path": jax.tree_util.keystr(kp),
+                      "dtype": str(arr.dtype), "shape": list(arr.shape)})
+    h = hashing.hash_pytree(tree)
+    (tmp / "manifest.json").write_text(json.dumps(
+        {"step": step, "hash": f"{h:#x}", "leaves": index}))
+    if path.exists():
+        shutil.rmtree(path)
+    tmp.rename(path)  # atomic-ish publish
+    return h
+
+
+def load_checkpoint(path: str | pathlib.Path, tree_like: Any
+                    ) -> Tuple[Any, int, int]:
+    """Restore into the structure of ``tree_like``; verifies the hash.
+    Returns (tree, step, hash)."""
+    path = pathlib.Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())
+    leaves = _leaves_with_paths(tree_like)
+    assert len(leaves) == len(manifest["leaves"]), "structure mismatch"
+    restored = []
+    for i, ((kp, proto), meta) in enumerate(zip(leaves, manifest["leaves"])):
+        assert jax.tree_util.keystr(kp) == meta["path"], (
+            f"leaf order mismatch at {i}: {jax.tree_util.keystr(kp)} vs "
+            f"{meta['path']}")
+        arr = np.load(path / f"{i}.npy")
+        restored.append(jax.numpy.asarray(arr))
+    treedef = jax.tree_util.tree_structure(tree_like)
+    tree = jax.tree_util.tree_unflatten(treedef, restored)
+    h = hashing.hash_pytree(tree)
+    expect = int(manifest["hash"], 16)
+    if h != expect:
+        raise ValueError(
+            f"checkpoint hash mismatch: manifest {expect:#x}, recomputed {h:#x}"
+        )
+    return tree, int(manifest["step"]), h
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Rotating checkpoints + optional async writes."""
+
+    directory: str
+    keep: int = 3
+    async_save: bool = True
+
+    def __post_init__(self):
+        self._dir = pathlib.Path(self.directory)
+        self._dir.mkdir(parents=True, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self.last_hash: Optional[int] = None
+
+    # ------------------------------------------------------------------ #
+    def _ckpt_path(self, step: int) -> pathlib.Path:
+        return self._dir / f"step_{step:08d}"
+
+    def steps(self):
+        out = []
+        for p in sorted(self._dir.glob("step_*")):
+            if (p / "manifest.json").exists():
+                out.append(int(p.name.split("_")[1]))
+        return out
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, tree: Any, step: int) -> None:
+        # snapshot to host synchronously (cheap vs device compute), write
+        # + rotate in a background thread (the async part that matters)
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self.wait()
+
+        def work():
+            self.last_hash = save_checkpoint(self._ckpt_path(step), host_tree,
+                                             step)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def restore_latest(self, tree_like: Any) -> Optional[Tuple[Any, int, int]]:
+        self.wait()
+        steps = self.steps()
+        if not steps:
+            return None
+        return load_checkpoint(self._ckpt_path(steps[-1]), tree_like)
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._ckpt_path(s), ignore_errors=True)

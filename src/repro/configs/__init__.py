@@ -1,0 +1,64 @@
+"""Assigned-architecture registry: ``get_config(arch_id)`` / ``--arch <id>``.
+
+Each module defines CONFIG (exact published dims) and REDUCED (same family,
+tiny dims) for CPU smoke tests. ``LONG_CONTEXT_OK`` marks archs with a
+sub-quadratic long-context path (ssm/hybrid/swa/local_global) that run the
+long_500k cell; pure full-attention archs skip it (DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "gemma2_2b",
+    "granite_34b",
+    "h2o_danube_1_8b",
+    "codeqwen1_5_7b",
+    "mamba2_130m",
+    "qwen2_vl_7b",
+    "granite_moe_3b_a800m",
+    "phi3_5_moe_42b_a6_6b",
+    "musicgen_large",
+    "zamba2_2_7b",
+]
+
+# canonical ids as listed in the assignment (dashes/dots)
+CANONICAL = {
+    "gemma2-2b": "gemma2_2b",
+    "granite-34b": "granite_34b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "mamba2-130m": "mamba2_130m",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b_a6_6b",
+    "musicgen-large": "musicgen_large",
+    "zamba2-2.7b": "zamba2_2_7b",
+}
+
+
+def _norm(arch: str) -> str:
+    return CANONICAL.get(arch, arch.replace("-", "_").replace(".", "_"))
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(arch)}")
+    return mod.CONFIG
+
+
+def get_reduced_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(arch)}")
+    return mod.REDUCED
+
+
+def long_context_ok(arch: str) -> bool:
+    mod = importlib.import_module(f"repro.configs.{_norm(arch)}")
+    return mod.LONG_CONTEXT_OK
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,27 @@
+"""Valori deterministic memory substrate — the paper's primary contribution.
+
+Public surface:
+  contracts   — Q-format precision contracts (paper §6)
+  fixedpoint  — exact integer arithmetic (paper §5.1)
+  boundary    — the float→fixed determinism boundary (paper §5.3)
+  state       — MemoryState arena pytree (paper §5.2)
+  commands    — integer-encoded replayable command log (paper §3.1)
+  machine     — the pure transition function F + replay (paper §3.1)
+  hashing     — platform-invariant tree hashes (paper §8.1)
+  snapshot    — serialize/restore with hash verification (paper §8.1)
+  search      — exact deterministic k-NN (wide integer scores)
+  hnsw        — deterministic HNSW (paper §7), TPU-adapted
+  distributed — pod-scale sharded memory over shard_map (DESIGN.md §2)
+"""
+from repro.core import (boundary, commands, contracts, distributed, fixedpoint,
+                        hashing, hnsw, machine, search, snapshot, state)
+from repro.core.contracts import (CONTRACTS, DEFAULT_CONTRACT, Q8_8, Q16_16,
+                                  Q32_32, PrecisionContract, get_contract)
+from repro.core.state import MemoryState, init_state
+
+__all__ = [
+    "boundary", "commands", "contracts", "distributed", "fixedpoint",
+    "hashing", "hnsw", "machine", "search", "snapshot", "state",
+    "CONTRACTS", "DEFAULT_CONTRACT", "Q8_8", "Q16_16", "Q32_32",
+    "PrecisionContract", "get_contract", "MemoryState", "init_state",
+]

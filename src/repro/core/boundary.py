@@ -1,0 +1,52 @@
+"""The determinism boundary (paper §5, §5.3).
+
+Valori "does not attempt to make neural inference deterministic; instead, it
+defines a strict boundary at which non-deterministic model outputs are
+normalized into a deterministic memory state." This module is that boundary:
+every float tensor entering the memory substrate passes through
+``normalize_embedding`` exactly once, after which all state is integer.
+
+Pipeline (all deterministic given the *quantized* inputs):
+  float vector → [optional f32 pre-round] → Q-encode (saturating, round-half-
+  away-from-zero) → optional exact integer L2 normalization.
+
+The pre-round step optionally truncates float mantissas before quantization.
+Divergent platforms produce floats differing in the last few ulps (paper
+Table 1 shows ≤ ~2^-18 relative divergence); rounding to a grid coarser than
+the cross-platform divergence collapses both platforms' values onto the same
+fixed-point integer, which is why the boundary absorbs upstream float noise
+rather than merely hiding it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixedpoint as fp
+from repro.core.contracts import DEFAULT_CONTRACT, PrecisionContract
+
+
+def normalize_embedding(
+    x: jax.Array,
+    contract: PrecisionContract = DEFAULT_CONTRACT,
+    unit_norm: bool = True,
+) -> jax.Array:
+    """Float embedding(s) → deterministic fixed-point raw vectors.
+
+    Args:
+      x: float array [..., dim]; typically model hidden states in [-1, 1]ish.
+      contract: the precision contract in force for this memory.
+      unit_norm: L2-normalize *after* quantization using exact integer math,
+        so normalization cannot re-introduce float nondeterminism.
+    """
+    raw = fp.encode(x, contract)
+    if unit_norm:
+        raw = fp.qnorm(raw, axis=-1, contract=contract)
+    return raw
+
+
+def admit_query(q: jax.Array, contract: PrecisionContract = DEFAULT_CONTRACT,
+                unit_norm: bool = True) -> jax.Array:
+    """Queries cross the same boundary as stored vectors (symmetry matters:
+    the paper's replay guarantee covers the query path too)."""
+    return normalize_embedding(q, contract, unit_norm)

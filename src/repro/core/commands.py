@@ -1,0 +1,181 @@
+"""Integer-encoded command log (paper §3.1, §5.2).
+
+Commands are the ONLY way memory state changes; the log is the replayable
+audit trail. Encoding is a struct-of-arrays pytree so a whole log can be
+applied with one ``lax.scan`` and serialized alongside snapshots.
+
+Opcodes:
+  NOP=0, INSERT=1, DELETE=2, LINK=3, UNLINK=4, SET_META=5
+
+Fields per record:
+  opcode int32; arg0 int64 (id / src id); arg1 int64 (dst id / meta slot);
+  arg2 int64 (meta value); vec storage[dim] (INSERT payload, zeros otherwise).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.contracts import DEFAULT_CONTRACT, PrecisionContract
+
+NOP, INSERT, DELETE, LINK, UNLINK, SET_META = range(6)
+NUM_OPCODES = 6
+
+OPCODE_NAMES = ["NOP", "INSERT", "DELETE", "LINK", "UNLINK", "SET_META"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CommandLog:
+    opcode: jax.Array  # [n] int32
+    arg0: jax.Array    # [n] int64
+    arg1: jax.Array    # [n] int64
+    arg2: jax.Array    # [n] int64
+    vec: jax.Array     # [n, dim] contract storage dtype
+
+    def __len__(self) -> int:
+        return self.opcode.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.vec.shape[1]
+
+    def record(self, i) -> "CommandLog":
+        """Single record (still a CommandLog of length semantics removed)."""
+        return CommandLog(
+            opcode=self.opcode[i], arg0=self.arg0[i], arg1=self.arg1[i],
+            arg2=self.arg2[i], vec=self.vec[i],
+        )
+
+    def concat(self, other: "CommandLog") -> "CommandLog":
+        return CommandLog(
+            opcode=jnp.concatenate([self.opcode, other.opcode]),
+            arg0=jnp.concatenate([self.arg0, other.arg0]),
+            arg1=jnp.concatenate([self.arg1, other.arg1]),
+            arg2=jnp.concatenate([self.arg2, other.arg2]),
+            vec=jnp.concatenate([self.vec, other.vec]),
+        )
+
+    def slice(self, start: int, stop: int) -> "CommandLog":
+        return CommandLog(
+            opcode=self.opcode[start:stop], arg0=self.arg0[start:stop],
+            arg1=self.arg1[start:stop], arg2=self.arg2[start:stop],
+            vec=self.vec[start:stop],
+        )
+
+
+def empty_log(dim: int, contract: PrecisionContract = DEFAULT_CONTRACT) -> CommandLog:
+    return CommandLog(
+        opcode=jnp.zeros((0,), jnp.int32),
+        arg0=jnp.zeros((0,), jnp.int64),
+        arg1=jnp.zeros((0,), jnp.int64),
+        arg2=jnp.zeros((0,), jnp.int64),
+        vec=jnp.zeros((0, dim), contract.storage_dtype),
+    )
+
+
+def _mk(opcode, dim, contract, a0=0, a1=0, a2=0, vec=None) -> CommandLog:
+    v = jnp.zeros((1, dim), contract.storage_dtype) if vec is None else vec[None]
+    return CommandLog(
+        opcode=jnp.asarray([opcode], jnp.int32),
+        arg0=jnp.asarray([a0], jnp.int64),
+        arg1=jnp.asarray([a1], jnp.int64),
+        arg2=jnp.asarray([a2], jnp.int64),
+        vec=v.astype(contract.storage_dtype),
+    )
+
+
+def insert_cmd(ext_id, raw_vec, contract: PrecisionContract = DEFAULT_CONTRACT) -> CommandLog:
+    """raw_vec must already be fixed-point (post-boundary)."""
+    return _mk(INSERT, raw_vec.shape[-1], contract, a0=ext_id, vec=raw_vec)
+
+
+def delete_cmd(ext_id, dim, contract: PrecisionContract = DEFAULT_CONTRACT) -> CommandLog:
+    return _mk(DELETE, dim, contract, a0=ext_id)
+
+
+def link_cmd(src_id, dst_id, dim, contract: PrecisionContract = DEFAULT_CONTRACT) -> CommandLog:
+    return _mk(LINK, dim, contract, a0=src_id, a1=dst_id)
+
+
+def unlink_cmd(src_id, dst_id, dim, contract: PrecisionContract = DEFAULT_CONTRACT) -> CommandLog:
+    return _mk(UNLINK, dim, contract, a0=src_id, a1=dst_id)
+
+
+def set_meta_cmd(ext_id, slot, value, dim,
+                 contract: PrecisionContract = DEFAULT_CONTRACT) -> CommandLog:
+    return _mk(SET_META, dim, contract, a0=ext_id, a1=slot, a2=value)
+
+
+def insert_batch(ext_ids: jax.Array, raw_vecs: jax.Array,
+                 contract: PrecisionContract = DEFAULT_CONTRACT) -> CommandLog:
+    """Batch of INSERTs in *canonical (sorted-by-id) order* — paper §7.1:
+    'items are processed in a verified, sorted order (usually by ID) to
+    prevent race conditions or insertion-order dependencies'."""
+    order = jnp.argsort(ext_ids)
+    ext_ids = ext_ids[order]
+    raw_vecs = raw_vecs[order]
+    n, dim = raw_vecs.shape
+    return CommandLog(
+        opcode=jnp.full((n,), INSERT, jnp.int32),
+        arg0=ext_ids.astype(jnp.int64),
+        arg1=jnp.zeros((n,), jnp.int64),
+        arg2=jnp.zeros((n,), jnp.int64),
+        vec=raw_vecs.astype(contract.storage_dtype),
+    )
+
+
+def canonicalize_batch(log: CommandLog) -> CommandLog:
+    """Sort a batch of same-opcode commands by (arg0, arg1) — the paper's
+    'verified, sorted order'. Only safe for order-free batches (pure inserts
+    or pure links); mixed logs define their own order by construction."""
+    key = log.arg0 * jnp.int64(1 << 20) + jnp.clip(log.arg1, 0, (1 << 20) - 1)
+    order = jnp.argsort(key)
+    return jax.tree.map(lambda a: a[order], log)
+
+
+# ---------------------------------------------------------------------------#
+# host-side serialization (audit trail files)
+# ---------------------------------------------------------------------------#
+
+
+def log_to_bytes(log: CommandLog) -> bytes:
+    """Canonical little-endian serialization of a command log."""
+    parts = []
+    header = np.asarray(
+        [len(log), log.dim, np.asarray(log.vec).dtype.itemsize], dtype="<i8"
+    )
+    parts.append(header.tobytes())
+    for name in ("opcode", "arg0", "arg1", "arg2", "vec"):
+        arr = np.asarray(getattr(log, name))
+        parts.append(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+    return b"".join(parts)
+
+
+def log_from_bytes(data: bytes, contract: PrecisionContract = DEFAULT_CONTRACT) -> CommandLog:
+    n, dim, isz = np.frombuffer(data[:24], dtype="<i8")
+    n, dim, isz = int(n), int(dim), int(isz)
+    off = 24
+    def take(dtype, count):
+        nonlocal off
+        nbytes = np.dtype(dtype).itemsize * count
+        arr = np.frombuffer(data[off:off + nbytes], dtype=dtype)
+        off += nbytes
+        return arr
+    opcode = take("<i4", n)
+    arg0 = take("<i8", n)
+    arg1 = take("<i8", n)
+    arg2 = take("<i8", n)
+    vdt = {1: "<i1", 2: "<i2", 4: "<i4", 8: "<i8"}[isz]
+    vec = take(vdt, n * dim).reshape(n, dim)
+    return CommandLog(
+        opcode=jnp.asarray(opcode, jnp.int32),
+        arg0=jnp.asarray(arg0, jnp.int64),
+        arg1=jnp.asarray(arg1, jnp.int64),
+        arg2=jnp.asarray(arg2, jnp.int64),
+        vec=jnp.asarray(vec, contract.storage_dtype),
+    )

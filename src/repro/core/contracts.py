@@ -1,0 +1,117 @@
+"""Precision contracts (paper §6): numeric precision as a configurable memory contract.
+
+A contract fixes the Q-format used inside the deterministic domain. Determinism
+is preserved for *any* contract because all in-kernel arithmetic is integer
+arithmetic (associative, exact); the contract only trades range/resolution
+against storage and bandwidth.
+
+The storage dtype is the narrowest signed integer that holds
+``int_bits + frac_bits`` (plus sign); accumulation always happens in a wider
+integer type (``acc_dtype``) so dot products over large dimensions cannot
+overflow before the final renormalization — mirroring the paper's "i64 (or
+wider) intermediates" rule (§5.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionContract:
+    """A Q(int_bits).(frac_bits) fixed-point memory contract."""
+
+    name: str
+    int_bits: int   # integer bits excluding the sign bit
+    frac_bits: int
+
+    # ------------------------------------------------------------------ #
+    @property
+    def total_bits(self) -> int:
+        return 1 + self.int_bits + self.frac_bits
+
+    @property
+    def storage_dtype(self):
+        bits = self.total_bits
+        if bits <= 8:
+            return jnp.int8
+        if bits <= 16:
+            return jnp.int16
+        if bits <= 32:
+            return jnp.int32
+        if bits <= 64:
+            return jnp.int64
+        raise ValueError(f"contract {self.name} needs {bits} bits > 64")
+
+    @property
+    def acc_dtype(self):
+        """Accumulator type for sums of products (always 2x storage width)."""
+        bits = self.total_bits
+        if bits <= 16:
+            return jnp.int32
+        return jnp.int64
+
+    @property
+    def one(self) -> int:
+        """Fixed-point representation of 1.0."""
+        return 1 << self.frac_bits
+
+    @property
+    def max_raw(self) -> int:
+        return (1 << (self.int_bits + self.frac_bits)) - 1
+
+    @property
+    def min_raw(self) -> int:
+        return -(1 << (self.int_bits + self.frac_bits))
+
+    @property
+    def max_value(self) -> float:
+        return self.max_raw / self.one
+
+    @property
+    def min_value(self) -> float:
+        return self.min_raw / self.one
+
+    @property
+    def resolution(self) -> float:
+        return 1.0 / self.one
+
+    # numpy equivalents (for host-side serialization) ------------------- #
+    @property
+    def np_storage_dtype(self):
+        return np.dtype(jnp.dtype(self.storage_dtype).name)
+
+    def describe(self) -> str:
+        return (
+            f"{self.name}: range [{self.min_value}, {self.max_value}], "
+            f"resolution {self.resolution:.2e}, storage {jnp.dtype(self.storage_dtype).name}, "
+            f"accum {jnp.dtype(self.acc_dtype).name}"
+        )
+
+
+# The paper's contract ladder (Table 2). Q64.64/Q128 exceed 64-bit storage and
+# are listed as future work in the paper; we expose the ones realizable with
+# native integer dtypes and keep the ladder extensible.
+Q8_8 = PrecisionContract("Q8.8", int_bits=7, frac_bits=8)
+Q16_16 = PrecisionContract("Q16.16", int_bits=15, frac_bits=16)
+Q32_32 = PrecisionContract("Q32.32", int_bits=31, frac_bits=32)
+# narrow wire format used by the gradient-compression path
+Q2_13 = PrecisionContract("Q2.13", int_bits=2, frac_bits=13)
+
+CONTRACTS: Dict[str, PrecisionContract] = {
+    c.name: c for c in (Q8_8, Q16_16, Q32_32, Q2_13)
+}
+
+DEFAULT_CONTRACT = Q16_16
+
+
+def get_contract(name: str) -> PrecisionContract:
+    try:
+        return CONTRACTS[name]
+    except KeyError as e:
+        raise KeyError(
+            f"unknown precision contract {name!r}; have {sorted(CONTRACTS)}"
+        ) from e

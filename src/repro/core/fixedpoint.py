@@ -1,0 +1,285 @@
+"""Q-format fixed-point arithmetic in JAX (paper §5.1).
+
+All values are stored as signed integers where the low ``frac_bits`` bits are
+the fractional part. Because every operation here reduces to integer ALU
+instructions, results are bit-identical on any backend (CPU/TPU/GPU/WASM) and
+invariant to reduction order, SIMD width, and compiler fusion — the property
+the paper builds its determinism argument on.
+
+Conventions
+-----------
+* "raw" values are the integer representations (dtype = contract.storage_dtype).
+* Multiplication widens to ``contract.acc_dtype`` before the shift-back;
+  dot products accumulate in the wide type and renormalize once at the end
+  (exactly the paper's i64-accumulator rule).
+* All narrowing saturates (clamps) rather than wrapping, matching the paper's
+  "checking for saturation" overhead note (§8.2).
+* Rounding is round-half-up via ``(x + half) >> frac_bits`` on the widened
+  value: fully defined, branch-free, platform-independent.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.contracts import DEFAULT_CONTRACT, PrecisionContract
+
+# --------------------------------------------------------------------------- #
+# encode / decode across the float <-> fixed boundary
+# --------------------------------------------------------------------------- #
+
+
+def encode(x: jax.Array, contract: PrecisionContract = DEFAULT_CONTRACT) -> jax.Array:
+    """Quantize floats into raw fixed-point integers (saturating).
+
+    This is THE determinism boundary: floats produced by nondeterministic
+    model inference enter; deterministic integers leave. Round-half-away-from-
+    zero on the scaled value, then clamp to the contract range.
+
+    Canonically computed in float32: every step (mul, abs, +0.5, floor) is a
+    single correctly-rounded IEEE op — bit-identical on any IEEE machine and
+    representable on TPU (no f64 there), so the Pallas qboundary kernel and
+    this reference produce the same bits. Exactness note: for |x·one| < 2^23
+    (e.g. |x| ≤ 128 at Q16.16 — embeddings are unit-norm, far inside) the
+    f32 pipeline rounds identically to infinite precision.
+    """
+    scaled = jnp.asarray(x, jnp.float32) * jnp.float32(contract.one)
+    # round half away from zero: sign(x) * floor(|x| + 0.5)
+    rounded = jnp.sign(scaled) * jnp.floor(jnp.abs(scaled) + jnp.float32(0.5))
+    lo, hi = _f32_safe_bounds(contract)
+    clamped = jnp.clip(rounded, lo, hi)
+    return clamped.astype(contract.storage_dtype)
+
+
+def _f32_safe_bounds(contract: PrecisionContract):
+    """Largest/smallest float32 clamp bounds that convert exactly into the
+    storage integer range (float32(2^31-1) would round UP to 2^31 and
+    overflow the convert)."""
+    import numpy as np
+
+    hi = np.float32(contract.max_raw)
+    if hi > contract.max_raw:
+        hi = np.nextafter(hi, np.float32(0), dtype=np.float32)
+    lo = np.float32(contract.min_raw)
+    if lo < contract.min_raw:
+        lo = np.nextafter(lo, np.float32(0), dtype=np.float32)
+    return lo, hi
+
+
+def decode(raw: jax.Array, contract: PrecisionContract = DEFAULT_CONTRACT) -> jax.Array:
+    """Raw fixed-point → float64 (exact: every raw value is representable)."""
+    return raw.astype(jnp.float64) / contract.one
+
+
+def decode_f32(raw: jax.Array, contract: PrecisionContract = DEFAULT_CONTRACT) -> jax.Array:
+    return raw.astype(jnp.float32) / jnp.float32(contract.one)
+
+
+# --------------------------------------------------------------------------- #
+# saturating helpers
+# --------------------------------------------------------------------------- #
+
+
+def saturate(wide: jax.Array, contract: PrecisionContract = DEFAULT_CONTRACT) -> jax.Array:
+    """Clamp a wide-integer value into the contract's raw range and narrow."""
+    clamped = jnp.clip(
+        wide,
+        jnp.asarray(contract.min_raw, wide.dtype),
+        jnp.asarray(contract.max_raw, wide.dtype),
+    )
+    return clamped.astype(contract.storage_dtype)
+
+
+def _shift_back(wide: jax.Array, contract: PrecisionContract) -> jax.Array:
+    """Divide a wide product by 2^frac_bits with round-half-up (arith shift)."""
+    half = jnp.asarray(1 << (contract.frac_bits - 1), wide.dtype)
+    return (wide + half) >> contract.frac_bits
+
+
+# --------------------------------------------------------------------------- #
+# arithmetic
+# --------------------------------------------------------------------------- #
+
+
+def qadd(a: jax.Array, b: jax.Array, contract: PrecisionContract = DEFAULT_CONTRACT) -> jax.Array:
+    wide = a.astype(contract.acc_dtype) + b.astype(contract.acc_dtype)
+    return saturate(wide, contract)
+
+
+def qsub(a: jax.Array, b: jax.Array, contract: PrecisionContract = DEFAULT_CONTRACT) -> jax.Array:
+    wide = a.astype(contract.acc_dtype) - b.astype(contract.acc_dtype)
+    return saturate(wide, contract)
+
+
+def _require_wide_products(contract: PrecisionContract) -> None:
+    """Products need 2x the storage width; int64 storage would need int128.
+
+    Q32.32 (the paper's Table 2 "future" enterprise contract) is served by
+    the dedicated limb-based routines below (qmul_q32 / qdot_q32) — the
+    generic narrow-contract paths refuse loudly instead of wrapping.
+    """
+    if jnp.dtype(contract.storage_dtype).itemsize >= 8:
+        raise NotImplementedError(
+            f"{contract.name}: products need >64-bit accumulation; "
+            "use qmul_q32/qdot_q32 (core.limbs) for Q32.32"
+        )
+
+
+# --------------------------------------------------------------------------- #
+# Q32.32 via 128-bit limb arithmetic (core.limbs) — the paper's "future"
+# enterprise contract, realized. Exact, order-invariant, saturating.
+# --------------------------------------------------------------------------- #
+
+
+def qmul_q32(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Exact Q32.32 multiply: 64×64→128-bit limbs, >>32, saturate to int64."""
+    from repro.core import limbs
+    return limbs.q32_dot_to_q32(a[..., None], b[..., None], axis=-1)
+
+
+def qdot_q32(a: jax.Array, b: jax.Array, axis: int = -1) -> jax.Array:
+    """Exact Q32.32 dot product (128-bit accumulation), Q32.32 result."""
+    from repro.core import limbs
+    if axis != -1:
+        a = jnp.moveaxis(a, axis, -1)
+        b = jnp.moveaxis(b, axis, -1)
+    return limbs.q32_dot_to_q32(a, b, axis=-1)
+
+
+def qmul(a: jax.Array, b: jax.Array, contract: PrecisionContract = DEFAULT_CONTRACT) -> jax.Array:
+    """Fixed-point multiply: widen, multiply exactly, shift back, saturate."""
+    _require_wide_products(contract)
+    wide = a.astype(contract.acc_dtype) * b.astype(contract.acc_dtype)
+    return saturate(_shift_back(wide, contract), contract)
+
+
+def qneg(a: jax.Array, contract: PrecisionContract = DEFAULT_CONTRACT) -> jax.Array:
+    return saturate(-a.astype(contract.acc_dtype), contract)
+
+
+def qdiv(a: jax.Array, b: jax.Array, contract: PrecisionContract = DEFAULT_CONTRACT) -> jax.Array:
+    """Fixed-point divide. b == 0 saturates to the signed max of matching sign."""
+    wide_a = a.astype(contract.acc_dtype) << contract.frac_bits
+    wide_b = b.astype(contract.acc_dtype)
+    safe_b = jnp.where(wide_b == 0, jnp.ones_like(wide_b), wide_b)
+    q = _int_div_round_to_nearest(wide_a, safe_b)
+    sat = jnp.where(
+        a >= 0,
+        jnp.asarray(contract.max_raw, contract.acc_dtype),
+        jnp.asarray(contract.min_raw, contract.acc_dtype),
+    )
+    q = jnp.where(wide_b == 0, sat, q)
+    return saturate(q, contract)
+
+
+def _int_div_round_to_nearest(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Integer division rounded to nearest (half away from zero), exact.
+
+    Works from the truncating |a|//|b| so behaviour is symmetric in sign.
+    """
+    abs_a, abs_b = jnp.abs(a), jnp.abs(b)
+    q = abs_a // abs_b
+    rem = abs_a - abs_b * q
+    adjust = (2 * rem >= abs_b).astype(a.dtype)
+    sign = jnp.where((a < 0) ^ (b < 0), -1, 1).astype(a.dtype)
+    return sign * (q + adjust)
+
+
+# --------------------------------------------------------------------------- #
+# reductions: the heart of the determinism argument
+# --------------------------------------------------------------------------- #
+
+
+def qdot(a: jax.Array, b: jax.Array, axis: int = -1,
+         contract: PrecisionContract = DEFAULT_CONTRACT) -> jax.Array:
+    """Fixed-point dot product along ``axis``.
+
+    Products are exact in the wide accumulator; the sum over the axis is an
+    integer sum (order-invariant); a single shift-back at the end renormalizes.
+    For Q16.16 over D ≤ 2^15 dimensions with |x| ≤ 1 this cannot overflow i64.
+    """
+    _require_wide_products(contract)
+    wa = a.astype(contract.acc_dtype)
+    wb = b.astype(contract.acc_dtype)
+    acc = jnp.sum(wa * wb, axis=axis)
+    return saturate(_shift_back(acc, contract), contract)
+
+
+def qdot_wide(a: jax.Array, b: jax.Array, axis: int = -1,
+              contract: PrecisionContract = DEFAULT_CONTRACT) -> jax.Array:
+    """Like qdot but returns the *wide* (unshifted) accumulator.
+
+    Used by the search path: raw Q(2f)-scaled scores preserve full precision
+    for ranking (monotone in the true dot product) and stay exactly integer.
+    """
+    _require_wide_products(contract)
+    wa = a.astype(contract.acc_dtype)
+    wb = b.astype(contract.acc_dtype)
+    return jnp.sum(wa * wb, axis=axis)
+
+
+def ql2sq_wide(a: jax.Array, b: jax.Array, axis: int = -1,
+               contract: PrecisionContract = DEFAULT_CONTRACT) -> jax.Array:
+    """Squared L2 distance in the wide accumulator (exact, Q(2f) scale)."""
+    wa = a.astype(contract.acc_dtype)
+    wb = b.astype(contract.acc_dtype)
+    d = wa - wb
+    return jnp.sum(d * d, axis=axis)
+
+
+def qsum(a: jax.Array, axis=None, contract: PrecisionContract = DEFAULT_CONTRACT) -> jax.Array:
+    wide = jnp.sum(a.astype(contract.acc_dtype), axis=axis)
+    return saturate(wide, contract)
+
+
+def qmean(a: jax.Array, axis=None, contract: PrecisionContract = DEFAULT_CONTRACT) -> jax.Array:
+    wide = jnp.sum(a.astype(contract.acc_dtype), axis=axis)
+    n = a.shape[axis] if isinstance(axis, int) else a.size
+    return saturate(_int_div_round_to_nearest(wide, jnp.asarray(n, wide.dtype)), contract)
+
+
+# --------------------------------------------------------------------------- #
+# integer sqrt + normalization (needed for cosine / unit-norm boundary)
+# --------------------------------------------------------------------------- #
+
+
+def isqrt(x: jax.Array) -> jax.Array:
+    """Exact integer floor-sqrt for non-negative int64 via bit-by-bit method.
+
+    32 iterations of the classic branch-free digit recurrence (bit runs over
+    every power of four from 2^62 down); fully deterministic, no floating
+    point anywhere. Shapes are preserved.
+    """
+    x = x.astype(jnp.int64)
+
+    def body(i, carry):
+        rem, res = carry
+        bit = jnp.int64(1) << (62 - 2 * i)
+        take = rem >= res + bit
+        rem = jnp.where(take, rem - (res + bit), rem)
+        res = jnp.where(take, (res >> 1) + bit, res >> 1)
+        return rem, res
+
+    _, res = jax.lax.fori_loop(0, 32, body, (x, jnp.zeros_like(x)))
+    return res
+
+
+def qnorm(v: jax.Array, axis: int = -1,
+          contract: PrecisionContract = DEFAULT_CONTRACT) -> jax.Array:
+    """L2-normalize fixed-point vectors, staying entirely in integers.
+
+    ||v||^2 is exact in the wide accumulator at Q(2f) scale, so
+    isqrt(sum v_i^2) is the norm at Q(f) scale. Each component is then
+    (v_i << f) / norm_raw, rounded to nearest — deterministic unit vectors.
+    Zero vectors pass through unchanged.
+    """
+    wide = v.astype(contract.acc_dtype)
+    sq = jnp.sum(wide * wide, axis=axis, keepdims=True)
+    norm_raw = isqrt(sq.astype(jnp.int64)).astype(contract.acc_dtype)  # Q(f) scale
+    safe = jnp.where(norm_raw == 0, jnp.ones_like(norm_raw), norm_raw)
+    num = wide << contract.frac_bits
+    out = _int_div_round_to_nearest(num, safe)
+    out = jnp.where(norm_raw == 0, wide, out)
+    return saturate(out, contract)

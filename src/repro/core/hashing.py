@@ -1,0 +1,158 @@
+"""Deterministic state hashing (paper §8.1 "Snapshot Transfer" / §9 consensus).
+
+Two-level scheme, identical on host (numpy) and device (jit):
+
+  1. per-leaf digest: the leaf's canonical little-endian words are mixed with
+     an order-sensitive multiply-xor (uint64, wraparound exact in both numpy
+     and JAX) and folded with XOR — parallel/vectorizable but order-sensitive,
+     so permuted contents hash differently;
+  2. the per-leaf digests (xor'd with an FNV-1a hash of the leaf's tree path,
+     dtype and shape) enter a sequential FNV-1a chain in sorted-path order.
+
+Integer ops only ⇒ the hash is bit-identical across platforms, in/out of jit,
+and under any sharding — which is exactly what the paper's snapshot-transfer
+experiment (x86 → ARM, H_A ≡ H_B) requires. ``hash_pytree`` (host) and
+``hash_state_device`` (jittable) return the same value for the same tree; the
+test suite asserts this equivalence.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+MIX_GOLDEN = 0x9E3779B97F4A7C15
+MIX_PRIME = 0xC2B2AE3D27D4EB4F
+_U64 = (1 << 64) - 1
+
+
+# --------------------------------------------------------------------------- #
+# canonical word view
+# --------------------------------------------------------------------------- #
+
+
+def _host_words(leaf: Any) -> np.ndarray:
+    """Canonical uint64-word sequence of an array's little-endian bytes.
+
+    Words are itemsize-granular (one word per element; 8-byte elements split
+    into lo,hi), matching the device bitcast decomposition exactly.
+    """
+    arr = np.asarray(leaf)
+    if arr.dtype == np.bool_:
+        arr = arr.astype(np.uint8)
+    b = arr.tobytes()  # C order
+    itemsize = arr.dtype.itemsize
+    if itemsize == 8:
+        w = np.frombuffer(b, dtype="<u8")
+        lo = w & np.uint64(0xFFFFFFFF)
+        hi = w >> np.uint64(32)
+        return np.stack([lo, hi], axis=-1).reshape(-1)
+    if itemsize == 4:
+        return np.frombuffer(b, dtype="<u4").astype(np.uint64)
+    if itemsize == 2:
+        return np.frombuffer(b, dtype="<u2").astype(np.uint64)
+    if itemsize == 1:
+        return np.frombuffer(b, dtype="u1").astype(np.uint64)
+    raise TypeError(f"unhashable dtype {arr.dtype}")
+
+
+def _device_words(leaf: jax.Array) -> jax.Array:
+    leaf = jnp.asarray(leaf)
+    if leaf.dtype == jnp.bool_:
+        leaf = leaf.astype(jnp.uint8)
+    flat = leaf.reshape(-1)
+    itemsize = flat.dtype.itemsize
+    if itemsize == 8:
+        w = jax.lax.bitcast_convert_type(flat, jnp.uint64)
+        lo = w & jnp.uint64(0xFFFFFFFF)
+        hi = w >> jnp.uint64(32)
+        return jnp.stack([lo, hi], axis=-1).reshape(-1)
+    if itemsize == 4:
+        return jax.lax.bitcast_convert_type(flat, jnp.uint32).astype(jnp.uint64)
+    if itemsize == 2:
+        return jax.lax.bitcast_convert_type(flat, jnp.uint16).astype(jnp.uint64)
+    if itemsize == 1:
+        return jax.lax.bitcast_convert_type(flat, jnp.uint8).astype(jnp.uint64)
+    raise TypeError(f"unhashable dtype {leaf.dtype}")
+
+
+# --------------------------------------------------------------------------- #
+# level 1: order-sensitive parallel fold
+# --------------------------------------------------------------------------- #
+
+
+def _mix_fold_host(words: np.ndarray) -> int:
+    if words.size == 0:
+        return 0
+    with np.errstate(over="ignore"):
+        idx = np.arange(words.shape[0], dtype=np.uint64)
+        mixed = (words ^ (idx * np.uint64(MIX_GOLDEN))) * np.uint64(MIX_PRIME)
+        return int(np.bitwise_xor.reduce(mixed))
+
+
+def _mix_fold_device(words: jax.Array) -> jax.Array:
+    if words.shape[0] == 0:
+        return jnp.uint64(0)
+    idx = jnp.arange(words.shape[0], dtype=jnp.uint64)
+    mixed = (words ^ (idx * jnp.uint64(MIX_GOLDEN))) * jnp.uint64(MIX_PRIME)
+    return jax.lax.reduce(mixed, jnp.uint64(0), jax.lax.bitwise_xor, dimensions=[0])
+
+
+# --------------------------------------------------------------------------- #
+# level 2: FNV-1a chain over (path ^ digest) entries
+# --------------------------------------------------------------------------- #
+
+
+def _fnv1a_bytes(data: bytes, h: int = FNV_OFFSET) -> int:
+    for ch in data:
+        h = ((h ^ ch) * FNV_PRIME) & _U64
+    return h
+
+
+def _leaf_meta_hash(path, leaf) -> int:
+    """Static per-leaf salt: tree path + dtype + shape (host-computable even
+    for tracers, since metadata is static under jit)."""
+    h = _fnv1a_bytes(jax.tree_util.keystr(path).encode())
+    dt = jnp.asarray(leaf).dtype if hasattr(leaf, "dtype") else np.asarray(leaf).dtype
+    h = _fnv1a_bytes(str(dt).encode(), h)
+    for s in np.shape(leaf):
+        h = ((h ^ (s & _U64)) * FNV_PRIME) & _U64
+    return h
+
+
+def _fnv_chain_host(entries) -> int:
+    h = FNV_OFFSET
+    for e in entries:
+        h = ((h ^ (int(e) & _U64)) * FNV_PRIME) & _U64
+    return h
+
+
+def hash_pytree(tree: Any) -> int:
+    """Deterministic 64-bit hash of a pytree of arrays, on host."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    entries = []
+    for path, leaf in leaves:
+        digest = _mix_fold_host(_host_words(leaf))
+        entries.append(digest ^ _leaf_meta_hash(path, leaf))
+    return _fnv_chain_host(entries)
+
+
+def hash_state_device(tree: Any) -> jax.Array:
+    """Jittable tree hash; bit-identical to ``hash_pytree`` on the same tree."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    entries = []
+    for path, leaf in leaves:
+        digest = _mix_fold_device(_device_words(leaf))
+        entries.append(digest ^ jnp.uint64(_leaf_meta_hash(path, leaf)))
+    prime = jnp.uint64(FNV_PRIME)
+
+    h = jnp.uint64(FNV_OFFSET)
+    if entries:
+        def step(h, e):
+            return (h ^ e) * prime, None
+        h, _ = jax.lax.scan(step, h, jnp.stack(entries))
+    return h

@@ -1,0 +1,370 @@
+"""Deterministic HNSW (paper §7), adapted from pointer-chasing to TPU form.
+
+The paper removes the three stochastic ingredients of classic HNSW:
+  1. *Fixed ordering* — batches are applied in sorted id order (see
+     ``commands.canonicalize_batch``); the command log fixes the order.
+  2. *Data-dependent level assignment* — instead of an RNG draw, a node's
+     level is a pure function of its external id (trailing-zero count of a
+     SplitMix64 avalanche), giving the same geometric(1/2) level profile with
+     zero state.
+  3. *Fixed entry point* — the first inserted node is the entry forever.
+     (Consequence: node levels are capped at the entry's level; higher levels
+     would be unreachable from the fixed entry. Recorded deviation: classic
+     HNSW promotes the entry, the paper pins it.)
+
+TPU adaptation (DESIGN.md §2): the adjacency is a dense
+``[levels, capacity, degree]`` int32 array; search is a ``lax.while_loop``
+beam over gathered neighbor rows; all distance comparisons use *wide* integer
+L2 scores with (distance, slot) lexicographic tie-breaks, so every decision
+is a pure integer comparison — bit-identical everywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import MemoryState
+
+# large sentinel distance: safely above any real wide score, well below int64 max
+INF = jnp.int64(1) << 62
+
+
+# --------------------------------------------------------------------------- #
+# level assignment: deterministic, data-dependent (paper §7.2)
+# --------------------------------------------------------------------------- #
+
+
+def splitmix64(x: jax.Array) -> jax.Array:
+    """SplitMix64 avalanche — the stable 'randomness' source. uint64 wraps."""
+    z = x.astype(jnp.uint64) + jnp.uint64(0x9E3779B97F4A7C15)
+    z = (z ^ (z >> jnp.uint64(30))) * jnp.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> jnp.uint64(27))) * jnp.uint64(0x94D049BB133111EB)
+    return z ^ (z >> jnp.uint64(31))
+
+
+def level_of_id(ext_id: jax.Array, max_levels: int) -> jax.Array:
+    """Geometric(1/2) level from the id's hash: count trailing ones.
+
+    P(level ≥ k) = 2^-k exactly, like HNSW's mL=1/ln(2) draw, but replayable.
+    """
+    h = splitmix64(ext_id)
+    # trailing ones of h == trailing zeros of ~h
+    tz = jnp.int32(0)
+
+    def body(i, carry):
+        tz, done = carry
+        bit = (h >> jnp.uint64(i)) & jnp.uint64(1)
+        take = jnp.logical_and(jnp.logical_not(done), bit == 1)
+        tz = jnp.where(take, tz + 1, tz)
+        done = jnp.logical_or(done, bit == 0)
+        return tz, done
+
+    tz, _ = jax.lax.fori_loop(0, max_levels - 1, body, (tz, jnp.bool_(False)))
+    return jnp.minimum(tz, max_levels - 1).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------- #
+# distances
+# --------------------------------------------------------------------------- #
+
+
+def _wide_l2(state: MemoryState, q_raw: jax.Array, slots: jax.Array) -> jax.Array:
+    """Exact wide squared-L2 from query to the given slots; invalid → INF."""
+    rows = state.vectors[slots].astype(jnp.int64)  # [n, dim]
+    d = rows - q_raw.astype(jnp.int64)[None, :]
+    dist = jnp.sum(d * d, axis=-1)
+    ok = (slots >= 0) & state.valid[jnp.clip(slots, 0, state.capacity - 1)]
+    return jnp.where(ok, dist, INF)
+
+
+def _lex_less(d_a, s_a, d_b, s_b):
+    """(distance, slot) lexicographic less-than — the deterministic tie-break."""
+    return (d_a < d_b) | ((d_a == d_b) & (s_a < s_b))
+
+
+def _sort_by_dist(d: jax.Array, s: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Sort candidate arrays by (distance, slot): a single integer key sort.
+
+    Key packs distance (< 2^62) and slot into a sortable composite via
+    stable two-key lax.sort.
+    """
+    d_sorted, s_sorted = jax.lax.sort((d, s), num_keys=2)
+    return d_sorted, s_sorted
+
+
+def _sort_dedup(d: jax.Array, s: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Sort by (distance, slot) and blank duplicate slots.
+
+    A duplicated slot has an identical (d, s) pair, so duplicates are
+    adjacent post-sort; the second copy is replaced by the (INF, pad)
+    sentinel and a re-sort pushes it to the tail. Pure integer ops.
+    """
+    pad = jnp.int32(2**31 - 1)
+    d, s = jax.lax.sort((d, s), num_keys=2)
+    dup = jnp.zeros_like(s, dtype=jnp.bool_).at[1:].set(
+        (s[1:] == s[:-1]) & (s[1:] != pad))
+    d = jnp.where(dup, INF, d)
+    s = jnp.where(dup, pad, s)
+    return jax.lax.sort((d, s), num_keys=2)
+
+
+# --------------------------------------------------------------------------- #
+# greedy descent (beam = 1) for upper levels
+# --------------------------------------------------------------------------- #
+
+
+def greedy_step_level(state: MemoryState, q_raw: jax.Array, level: jax.Array,
+                      start_slot: jax.Array) -> jax.Array:
+    """Walk to the locally-nearest node at ``level`` starting from start_slot."""
+
+    def cond(carry):
+        cur, cur_d, moved, it = carry
+        return moved & (it < jnp.int32(state.capacity))
+
+    def body(carry):
+        cur, cur_d, _, it = carry
+        nbrs = jax.lax.dynamic_index_in_dim(
+            state.hnsw_neighbors, level, axis=0, keepdims=False
+        )[cur]  # [degree]
+        nd = _wide_l2(state, q_raw, nbrs)
+        best = jnp.argmin(nd)  # ties → lowest index; nbr lists are sorted by (d,slot)
+        best_d = nd[best]
+        best_s = nbrs[best]
+        better = _lex_less(best_d, best_s, cur_d, cur)
+        nxt = jnp.where(better, best_s, cur)
+        nxt_d = jnp.where(better, best_d, cur_d)
+        return nxt.astype(jnp.int32), nxt_d, better, it + 1
+
+    d0 = _wide_l2(state, q_raw, start_slot[None])[0]
+    cur, _, _, _ = jax.lax.while_loop(
+        cond, body, (start_slot.astype(jnp.int32), d0, jnp.bool_(True), jnp.int32(0))
+    )
+    return cur
+
+
+# --------------------------------------------------------------------------- #
+# beam search at one level
+# --------------------------------------------------------------------------- #
+
+
+def search_layer(
+    state: MemoryState,
+    q_raw: jax.Array,
+    entry_slot: jax.Array,
+    level: jax.Array,
+    ef: int,
+    max_iters: int | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """ef-beam search at ``level``; returns (dists[ef], slots[ef]) sorted.
+
+    Carries fixed-size arrays + a capacity-sized expansion mask. Every merge
+    is a (distance, slot) sort — deterministic including ties.
+    """
+    capacity = state.capacity
+    degree = state.hnsw_degree
+    if max_iters is None:
+        max_iters = 2 * ef + 8
+
+    d0 = jnp.full((ef,), INF, dtype=jnp.int64)
+    s0 = jnp.full((ef,), jnp.int32(2**31 - 1), dtype=jnp.int32)
+    d0 = d0.at[0].set(_wide_l2(state, q_raw, entry_slot[None])[0])
+    s0 = s0.at[0].set(entry_slot.astype(jnp.int32))
+    seen0 = jnp.zeros((capacity,), jnp.bool_).at[entry_slot].set(True)
+    expanded0 = jnp.zeros((capacity,), jnp.bool_)
+
+    neighbors_l = jax.lax.dynamic_index_in_dim(
+        state.hnsw_neighbors, level, axis=0, keepdims=False
+    )  # [capacity, degree]
+
+    def cond(carry):
+        d, s, seen, expanded, it = carry
+        safe = jnp.clip(s, 0, capacity - 1)
+        unexp = (~expanded[safe]) & (d < INF)
+        return jnp.any(unexp) & (it < max_iters)
+
+    def body(carry):
+        d, s, seen, expanded, it = carry
+        safe = jnp.clip(s, 0, capacity - 1)
+        unexp = (~expanded[safe]) & (d < INF)
+        # nearest unexpanded candidate (arrays are kept sorted, so argmax of
+        # the first True is the nearest)
+        pick = jnp.argmax(unexp)  # first True in sorted order
+        cur = safe[pick]
+        expanded = expanded.at[cur].set(True)
+        nbrs = neighbors_l[cur]  # [degree]
+        nbr_safe = jnp.clip(nbrs, 0, capacity - 1)
+        fresh = (nbrs >= 0) & (~seen[nbr_safe])
+        nd = _wide_l2(state, q_raw, nbrs)
+        nd = jnp.where(fresh, nd, INF)
+        ns = jnp.where(fresh, nbr_safe, jnp.int32(2**31 - 1))
+        seen = seen.at[nbr_safe].set(seen[nbr_safe] | (nbrs >= 0))
+        # merge + keep ef best (deduped: rows may repeat a neighbor)
+        md = jnp.concatenate([d, nd])
+        ms = jnp.concatenate([s, ns])
+        md, ms = _sort_dedup(md, ms)
+        return md[:ef], ms[:ef], seen, expanded, it + 1
+
+    d, s, _, _, _ = jax.lax.while_loop(cond, body, (d0, s0, seen0, expanded0, jnp.int32(0)))
+    return d, s
+
+
+# --------------------------------------------------------------------------- #
+# insert
+# --------------------------------------------------------------------------- #
+
+
+def _add_bidirectional_edges(
+    state_neighbors: jax.Array,  # [capacity, degree] at one level
+    vectors: jax.Array,          # [capacity, dim] raw
+    valid: jax.Array,
+    new_slot: jax.Array,
+    cand_d: jax.Array,           # [ef] sorted candidate distances to new node
+    cand_s: jax.Array,           # [ef]
+    m: int,
+    active: jax.Array,           # bool: is this level active for the new node
+) -> jax.Array:
+    """Connect new_slot ↔ its M nearest candidates, pruning to degree by
+    (distance-to-owner, slot). Pure integer ordering ⇒ deterministic."""
+    capacity, degree = state_neighbors.shape
+    pad = jnp.int32(2**31 - 1)
+
+    # forward edges: M best candidates (already sorted by (d, slot)), -1 padded
+    idx = jnp.arange(degree)
+    src = jnp.clip(idx, 0, cand_s.shape[0] - 1)
+    fwd_slots = jnp.where(
+        (idx < m) & (cand_d[src] < INF), cand_s[src], jnp.int32(-1)
+    ).astype(jnp.int32)
+    fwd = jnp.where(active, fwd_slots, state_neighbors[new_slot])
+    state_neighbors = state_neighbors.at[new_slot].set(fwd)
+
+    # reverse edges: for each of the M candidates, insert new_slot and prune
+    new_vec = vectors[new_slot].astype(jnp.int64)
+
+    def rev_one(i, nbrs_arr):
+        c = cand_s[i]
+        is_real = active & (cand_d[i] < INF) & (i < m) & (c != new_slot)
+
+        def do(nbrs_arr):
+            owner_vec = vectors[c].astype(jnp.int64)
+            cur = nbrs_arr[c]  # [degree]
+            cur_safe = jnp.clip(cur, 0, capacity - 1)
+            cur_vecs = vectors[cur_safe].astype(jnp.int64)
+            dd = jnp.sum((cur_vecs - owner_vec[None, :]) ** 2, axis=-1)
+            dd = jnp.where(cur >= 0, dd, INF)
+            d_new = jnp.sum((new_vec - owner_vec) ** 2)
+            alld = jnp.concatenate([dd, d_new[None]])
+            alls = jnp.concatenate(
+                [jnp.where(cur >= 0, cur, pad), new_slot[None].astype(jnp.int32)]
+            )
+            alld, alls = _sort_dedup(alld, alls)
+            kept = jnp.where(alld[:degree] < INF, alls[:degree], jnp.int32(-1))
+            return nbrs_arr.at[c].set(kept)
+
+        return jax.lax.cond(is_real, do, lambda a: a, nbrs_arr)
+
+    state_neighbors = jax.lax.fori_loop(0, cand_s.shape[0], rev_one, state_neighbors)
+    return state_neighbors
+
+
+def hnsw_insert(state: MemoryState, new_slot: jax.Array, *, ef_construction: int = 32,
+                m: int | None = None) -> MemoryState:
+    """Incrementally insert the (already stored) row at ``new_slot``.
+
+    Fully deterministic: level from id hash, entry fixed at first node,
+    all selections tie-broken by slot id.
+    """
+    if m is None:
+        m = state.hnsw_degree // 2
+    max_levels = state.hnsw_max_levels
+    q_raw = state.vectors[new_slot]
+    ext_id = state.ids[new_slot]
+
+    is_first = state.hnsw_entry < 0
+    raw_level = level_of_id(ext_id, max_levels)
+    entry = jnp.where(is_first, new_slot.astype(jnp.int32), state.hnsw_entry)
+    entry_level = jnp.where(
+        is_first, raw_level, state.hnsw_levels[jnp.clip(entry, 0, state.capacity - 1)]
+    )
+    # paper: entry fixed to first node ⇒ cap level so all nodes stay reachable
+    node_level = jnp.minimum(raw_level, entry_level)
+
+    state = dataclasses.replace(
+        state,
+        hnsw_levels=state.hnsw_levels.at[new_slot].set(node_level),
+        hnsw_entry=entry.astype(jnp.int32),
+    )
+
+    def not_first_insert(state: MemoryState) -> MemoryState:
+        # phase 1: greedy descent from the entry's top level to node_level+1
+        def descend(lvl_rev, cur):
+            lvl = jnp.int32(max_levels - 1 - lvl_rev)
+            do = (lvl <= entry_level) & (lvl > node_level)
+            return jnp.where(
+                do, greedy_step_level(state, q_raw, lvl, cur), cur
+            ).astype(jnp.int32)
+
+        cur = jax.lax.fori_loop(0, max_levels, descend, entry.astype(jnp.int32))
+
+        # phase 2: beam search + connect at levels node_level..0
+        neighbors = state.hnsw_neighbors
+
+        def connect(lvl_rev, carry):
+            neighbors, cur = carry
+            lvl = jnp.int32(max_levels - 1 - lvl_rev)
+            active = lvl <= node_level
+            # search against a state view with current neighbor arrays
+            st = dataclasses.replace(state, hnsw_neighbors=neighbors)
+            d, s = search_layer(st, q_raw, cur, lvl, ef_construction)
+            # exclude self from candidates
+            d = jnp.where(s == new_slot, INF, d)
+            s = jnp.where(s == new_slot, jnp.int32(2**31 - 1), s)
+            d, s = _sort_dedup(d, s)
+            lvl_nbrs = jax.lax.dynamic_index_in_dim(neighbors, lvl, 0, keepdims=False)
+            lvl_nbrs = _add_bidirectional_edges(
+                lvl_nbrs, state.vectors, state.valid, new_slot.astype(jnp.int32),
+                d, s, m, active
+            )
+            neighbors = jax.lax.dynamic_update_index_in_dim(neighbors, lvl_nbrs, lvl, 0)
+            # next level starts from the best found here (when this level ran)
+            nxt = jnp.where(active & (d[0] < INF), s[0], cur).astype(jnp.int32)
+            return neighbors, nxt
+
+        neighbors, _ = jax.lax.fori_loop(0, max_levels, connect, (neighbors, cur))
+        return dataclasses.replace(state, hnsw_neighbors=neighbors)
+
+    return jax.lax.cond(jnp.logical_not(is_first), not_first_insert, lambda s: s, state)
+
+
+# --------------------------------------------------------------------------- #
+# query
+# --------------------------------------------------------------------------- #
+
+
+def hnsw_search(state: MemoryState, q_raw: jax.Array, k: int, *, ef: int = 64
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """ANN search: returns (ids[k] int64, dists[k] wide int64, slots[k]).
+
+    Missing results are (-1, INF, -1). Deterministic for a fixed state.
+    """
+    max_levels = state.hnsw_max_levels
+    entry = state.hnsw_entry
+    have_graph = entry >= 0
+    entry_safe = jnp.clip(entry, 0, state.capacity - 1)
+    entry_level = jnp.where(have_graph, state.hnsw_levels[entry_safe], 0)
+
+    def descend(lvl_rev, cur):
+        lvl = jnp.int32(max_levels - 1 - lvl_rev)
+        do = (lvl <= entry_level) & (lvl > 0) & have_graph
+        return jnp.where(do, greedy_step_level(state, q_raw, lvl, cur), cur).astype(jnp.int32)
+
+    cur = jax.lax.fori_loop(0, max_levels, descend, entry_safe.astype(jnp.int32))
+    d, s = search_layer(state, q_raw, cur, jnp.int32(0), ef)
+    d, s = d[:k], s[:k]
+    ok = (d < INF) & have_graph
+    slots = jnp.where(ok, s, jnp.int32(-1))
+    ids = jnp.where(ok, state.ids[jnp.clip(s, 0, state.capacity - 1)], jnp.int64(-1))
+    dists = jnp.where(ok, d, INF)
+    return ids, dists, slots

@@ -1,0 +1,165 @@
+"""The pure state-machine transition function F (paper §3.1, §5.2).
+
+``S_{t+1} = F(S_t, C_t)``: a single jittable function dispatching on opcode
+via ``lax.switch``. ``replay`` folds a whole command log with ``lax.scan`` —
+the paper's replayability guarantee is literally this scan. Every branch
+returns a full next-state so the switch is shape-stable.
+
+Semantics (all deterministic, total — invalid commands are no-ops that still
+advance logical time, so a log replays identically even past rejections):
+
+* INSERT(id, vec): upsert. Existing id → overwrite row in place (graph edges
+  and HNSW links for that slot are rebuilt from the new vector lazily via the
+  next index touch; vector content is what distance math reads). New id →
+  lowest free slot; HNSW incremental insert runs for new rows.
+* DELETE(id): clear valid bit (tombstone). Slot becomes reusable; HNSW keeps
+  the tombstoned node as a traversal waypoint (classic soft-delete) but it
+  can never be returned (search masks on ``valid``).
+* LINK(a, b) / UNLINK(a, b): typed user edges in ``links`` (first free /
+  matching entry). Distinct from HNSW adjacency.
+* SET_META(id, slot, value): write a metadata word.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hnsw
+from repro.core.commands import (DELETE, INSERT, LINK, NOP, NUM_OPCODES,
+                                 SET_META, UNLINK, CommandLog)
+from repro.core.state import MemoryState, slot_of_id
+
+
+def _bump(state: MemoryState) -> MemoryState:
+    return dataclasses.replace(state, version=state.version + 1)
+
+
+# --------------------------------------------------------------------------- #
+# opcode handlers — each: (state, rec) -> state
+# --------------------------------------------------------------------------- #
+
+
+def _op_nop(state: MemoryState, rec: CommandLog, ef_construction: int) -> MemoryState:
+    return state
+
+
+def _op_insert(state: MemoryState, rec: CommandLog, ef_construction: int) -> MemoryState:
+    ext_id = rec.arg0
+    existing = slot_of_id(state, ext_id)
+    has_existing = existing >= 0
+    free_mask = ~state.valid
+    any_free = jnp.any(free_mask)
+    free_slot = jnp.argmax(free_mask).astype(jnp.int32)  # lowest free slot
+    slot = jnp.where(has_existing, existing, free_slot)
+    can_write = has_existing | any_free  # full arena rejects new ids
+
+    def write(state: MemoryState) -> MemoryState:
+        vectors = state.vectors.at[slot].set(rec.vec)
+        ids = state.ids.at[slot].set(ext_id)
+        valid = state.valid.at[slot].set(True)
+        count = state.count + jnp.where(has_existing, 0, 1).astype(jnp.int32)
+        cursor = jnp.maximum(state.cursor, slot + 1)
+        new_state = dataclasses.replace(
+            state, vectors=vectors, ids=ids, valid=valid,
+            count=count, cursor=cursor,
+        )
+        # fresh rows enter the HNSW graph; overwrites keep their links
+        return jax.lax.cond(
+            has_existing,
+            lambda s: s,
+            lambda s: hnsw.hnsw_insert(s, slot, ef_construction=ef_construction),
+            new_state,
+        )
+
+    return jax.lax.cond(can_write, write, lambda s: s, state)
+
+
+def _op_delete(state: MemoryState, rec: CommandLog, ef_construction: int) -> MemoryState:
+    slot = slot_of_id(state, rec.arg0)
+    found = slot >= 0
+    safe = jnp.clip(slot, 0, state.capacity - 1)
+    valid = state.valid.at[safe].set(jnp.where(found, False, state.valid[safe]))
+    ids = state.ids.at[safe].set(jnp.where(found, jnp.int64(-1), state.ids[safe]))
+    count = state.count - jnp.where(found, 1, 0).astype(jnp.int32)
+    return dataclasses.replace(state, valid=valid, ids=ids, count=count)
+
+
+def _op_link(state: MemoryState, rec: CommandLog, ef_construction: int) -> MemoryState:
+    a = slot_of_id(state, rec.arg0)
+    b = slot_of_id(state, rec.arg1)
+    ok = (a >= 0) & (b >= 0)
+    sa = jnp.clip(a, 0, state.capacity - 1)
+    row = state.links[sa]  # [max_links]
+    already = jnp.any(row == b)
+    free = row < 0
+    has_free = jnp.any(free)
+    pos = jnp.argmax(free)
+    do = ok & has_free & ~already
+    new_row = jnp.where(
+        do, row.at[pos].set(b.astype(jnp.int32)), row
+    )
+    return dataclasses.replace(state, links=state.links.at[sa].set(new_row))
+
+
+def _op_unlink(state: MemoryState, rec: CommandLog, ef_construction: int) -> MemoryState:
+    a = slot_of_id(state, rec.arg0)
+    b = slot_of_id(state, rec.arg1)
+    ok = (a >= 0) & (b >= 0)
+    sa = jnp.clip(a, 0, state.capacity - 1)
+    row = state.links[sa]
+    new_row = jnp.where(ok & (row == b), jnp.int32(-1), row)
+    return dataclasses.replace(state, links=state.links.at[sa].set(new_row))
+
+
+def _op_set_meta(state: MemoryState, rec: CommandLog, ef_construction: int) -> MemoryState:
+    slot = slot_of_id(state, rec.arg0)
+    ok = slot >= 0
+    safe = jnp.clip(slot, 0, state.capacity - 1)
+    mslot = jnp.clip(rec.arg1, 0, state.meta.shape[1] - 1).astype(jnp.int32)
+    cur = state.meta[safe, mslot]
+    val = jnp.where(ok, rec.arg2, cur)
+    return dataclasses.replace(state, meta=state.meta.at[safe, mslot].set(val))
+
+
+_HANDLERS = [_op_nop, _op_insert, _op_delete, _op_link, _op_unlink, _op_set_meta]
+
+
+# --------------------------------------------------------------------------- #
+# F and replay
+# --------------------------------------------------------------------------- #
+
+
+def apply_command(state: MemoryState, rec: CommandLog,
+                  *, ef_construction: int = 32) -> MemoryState:
+    """S_{t+1} = F(S_t, C_t). Total function; always advances ``version``."""
+    op = jnp.clip(rec.opcode, 0, NUM_OPCODES - 1)
+    branches = [partial(h, ef_construction=ef_construction) for h in _HANDLERS]
+    state = jax.lax.switch(op, branches, state, rec)
+    return _bump(state)
+
+
+@partial(jax.jit, static_argnames=("ef_construction",))
+def replay(state: MemoryState, log: CommandLog,
+           *, ef_construction: int = 32) -> MemoryState:
+    """Apply a whole log: the paper's Apply(S_0, {C_i}). One lax.scan."""
+
+    def step(s, rec):
+        return apply_command(s, rec, ef_construction=ef_construction), None
+
+    final, _ = jax.lax.scan(step, state, log)
+    return final
+
+
+def apply_chunked(state: MemoryState, log: CommandLog, chunk: int,
+                  *, ef_construction: int = 32) -> MemoryState:
+    """Replay in host-driven chunks (used by tests to prove that batch
+    boundaries cannot affect the final state)."""
+    n = len(log)
+    for start in range(0, n, chunk):
+        state = replay(state, log.slice(start, min(start + chunk, n)),
+                       ef_construction=ef_construction)
+    return state

@@ -1,0 +1,90 @@
+"""Exact deterministic k-NN over the fixed-point arena.
+
+The throughput-oriented counterpart of hnsw.py (DESIGN.md §2): scoring is a
+blocked integer matmul (delegated to the Pallas qgemm kernel when enabled,
+pure jnp otherwise) and selection is a (score, id) lexicographic top-k, so
+results — including tie order — are bit-identical everywhere.
+
+Scores are *wide* (unshifted Q(2f)) integers: exact, monotone in the true
+metric, never rounded before ranking.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import MemoryState
+
+INF = jnp.int64(1) << 62
+
+METRIC_L2 = "l2"
+METRIC_DOT = "dot"
+
+
+def score_block(queries_raw: jax.Array, db_raw: jax.Array, metric: str = METRIC_L2,
+                use_kernel: bool = False) -> jax.Array:
+    """Wide integer scores [nq, nd]; lower = better for both metrics
+    (dot scores are negated so selection logic is uniform)."""
+    if use_kernel:
+        from repro.kernels.qgemm import ops as qgemm_ops
+        wide_dot = qgemm_ops.qgemm(queries_raw, db_raw)
+    else:
+        wide_dot = jnp.einsum(
+            "qd,nd->qn",
+            queries_raw.astype(jnp.int64),
+            db_raw.astype(jnp.int64),
+        )
+    if metric == METRIC_DOT:
+        return -wide_dot
+    if metric == METRIC_L2:
+        qq = jnp.sum(queries_raw.astype(jnp.int64) ** 2, axis=-1)  # [nq]
+        nn = jnp.sum(db_raw.astype(jnp.int64) ** 2, axis=-1)  # [nd]
+        return qq[:, None] - 2 * wide_dot + nn[None, :]
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def topk_by_score(scores: jax.Array, ids: jax.Array, k: int
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Deterministic top-k smallest scores with (score, id) tie-break.
+
+    scores [nq, n] int64, ids [n] int64 → (scores [nq,k], ids [nq,k]).
+    """
+    nq, n = scores.shape
+    ids_b = jnp.broadcast_to(ids[None, :], (nq, n))
+    s_sorted, i_sorted = jax.lax.sort((scores, ids_b), num_keys=2, dimension=1)
+    return s_sorted[:, :k], i_sorted[:, :k]
+
+
+@partial(jax.jit, static_argnames=("k", "metric", "use_kernel"))
+def exact_search(state: MemoryState, queries_raw: jax.Array, k: int,
+                 *, metric: str = METRIC_L2, use_kernel: bool = False
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """k-NN over all live rows. Returns (ids [nq,k] int64, scores [nq,k]).
+
+    Missing results (fewer than k live rows) are (-1, INF).
+    """
+    scores = score_block(queries_raw, state.vectors, metric, use_kernel)
+    scores = jnp.where(state.valid[None, :], scores, INF)
+    # tombstoned ids are -1; give them +inf-ish id so they sort last among ties
+    ids = jnp.where(state.valid, state.ids, jnp.int64(1) << 62)
+    s, i = topk_by_score(scores, ids, k)
+    found = s < INF
+    return jnp.where(found, i, jnp.int64(-1)), jnp.where(found, s, INF)
+
+
+def merge_topk(scores_a: jax.Array, ids_a: jax.Array,
+               scores_b: jax.Array, ids_b: jax.Array, k: int
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Merge two sorted top-k lists into one — the deterministic combine step
+    used by the sharded memory (integer compare ⇒ order-invariant)."""
+    s = jnp.concatenate([scores_a, scores_b], axis=-1)
+    i = jnp.concatenate([ids_a, ids_b], axis=-1)
+    # re-mask tombstones so (-1) padding never wins ties
+    i_key = jnp.where(s < INF, i, jnp.int64(1) << 62)
+    s_sorted, i_sorted = jax.lax.sort((s, i_key), num_keys=2, dimension=s.ndim - 1)
+    s_out = s_sorted[..., :k]
+    i_out = i_sorted[..., :k]
+    return s_out, jnp.where(s_out < INF, i_out, jnp.int64(-1))

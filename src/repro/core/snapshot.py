@@ -1,0 +1,127 @@
+"""Snapshot / restore with hash verification (paper §5.2, §8.1).
+
+A snapshot is the canonical little-endian serialization of every MemoryState
+leaf plus a manifest holding the FNV tree hash. Restoring on any machine and
+re-hashing must reproduce the manifest hash exactly — the paper's
+"Snapshot Transfer" experiment (H_A ≡ H_B) as an executable artifact.
+
+Format (all little-endian):
+  magic 'VLRI' | version u32 | contract name (len u32 + utf8)
+  | leaf count u32 | per leaf: path (len+utf8), dtype str (len+utf8),
+    ndim u32, dims u64..., payload bytes
+  | trailer: fnv hash u64 (hash_pytree of the state)
+"""
+from __future__ import annotations
+
+import io
+import struct
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.core.contracts import get_contract
+from repro.core.state import MemoryState
+
+MAGIC = b"VLRI"
+FORMAT_VERSION = 1
+
+
+def _write_str(buf: io.BytesIO, s: str) -> None:
+    b = s.encode()
+    buf.write(struct.pack("<I", len(b)))
+    buf.write(b)
+
+
+def _read_str(buf: io.BytesIO) -> str:
+    (n,) = struct.unpack("<I", buf.read(4))
+    return buf.read(n).decode()
+
+
+def snapshot_bytes(state: MemoryState) -> bytes:
+    """Serialize a state. The embedded hash covers the *state tree*, so any
+    bit flip in any leaf is detected at restore time."""
+    buf = io.BytesIO()
+    buf.write(MAGIC)
+    buf.write(struct.pack("<I", FORMAT_VERSION))
+    _write_str(buf, state.contract_name)
+
+    leaves = jax.tree_util.tree_flatten_with_path(state)[0]
+    buf.write(struct.pack("<I", len(leaves)))
+    for path, leaf in leaves:
+        arr = np.asarray(leaf)
+        _write_str(buf, jax.tree_util.keystr(path))
+        _write_str(buf, str(arr.dtype))
+        buf.write(struct.pack("<I", arr.ndim))
+        for d in arr.shape:
+            buf.write(struct.pack("<Q", d))
+        canonical = arr.astype(arr.dtype.newbyteorder("<"), copy=False)
+        buf.write(canonical.tobytes())
+
+    h = hashing.hash_pytree(state)
+    buf.write(struct.pack("<Q", h))
+    return buf.getvalue()
+
+
+def restore_bytes(data: bytes) -> Tuple[MemoryState, int]:
+    """Restore a state; verifies the manifest hash. Returns (state, hash)."""
+    buf = io.BytesIO(data)
+    if buf.read(4) != MAGIC:
+        raise ValueError("not a Valori snapshot")
+    (ver,) = struct.unpack("<I", buf.read(4))
+    if ver != FORMAT_VERSION:
+        raise ValueError(f"unsupported snapshot version {ver}")
+    contract_name = _read_str(buf)
+    get_contract(contract_name)  # validates
+
+    (n_leaves,) = struct.unpack("<I", buf.read(4))
+    leaves = {}
+    for _ in range(n_leaves):
+        path = _read_str(buf)
+        dtype = np.dtype(_read_str(buf))
+        (ndim,) = struct.unpack("<I", buf.read(4))
+        shape = tuple(struct.unpack("<Q", buf.read(8))[0] for _ in range(ndim))
+        count = int(np.prod(shape)) if shape else 1
+        payload = buf.read(count * dtype.itemsize)
+        arr = np.frombuffer(payload, dtype=dtype.newbyteorder("<")).astype(dtype)
+        leaves[path] = arr.reshape(shape)
+
+    (stored_hash,) = struct.unpack("<Q", buf.read(8))
+
+    def leaf_for(field: str):
+        return jnp.asarray(leaves[f".{field}"])
+
+    state = MemoryState(
+        vectors=leaf_for("vectors"),
+        ids=leaf_for("ids"),
+        valid=leaf_for("valid"),
+        links=leaf_for("links"),
+        meta=leaf_for("meta"),
+        hnsw_neighbors=leaf_for("hnsw_neighbors"),
+        hnsw_levels=leaf_for("hnsw_levels"),
+        hnsw_entry=leaf_for("hnsw_entry"),
+        cursor=leaf_for("cursor"),
+        count=leaf_for("count"),
+        version=leaf_for("version"),
+        contract_name=contract_name,
+    )
+    actual = hashing.hash_pytree(state)
+    if actual != stored_hash:
+        raise ValueError(
+            f"snapshot hash mismatch: stored {stored_hash:#x}, got {actual:#x}"
+        )
+    return state, actual
+
+
+def save(path: str, state: MemoryState) -> int:
+    data = snapshot_bytes(state)
+    with open(path, "wb") as f:
+        f.write(data)
+    return hashing.hash_pytree(state)
+
+
+def load(path: str) -> Tuple[MemoryState, int]:
+    with open(path, "rb") as f:
+        return restore_bytes(f.read())

@@ -1,0 +1,119 @@
+"""MemoryState: the Valori kernel state as a JAX pytree (paper §5.2).
+
+The Rust reference keeps vectors, graph and metadata inside a ``Kernel``
+struct on the heap; the TPU adaptation is a statically-shaped arena:
+
+* ``vectors``   int{8,16,32}[capacity, dim]   raw Q-format rows
+* ``ids``       int64[capacity]               external ids (-1 = empty slot)
+* ``valid``     bool[capacity]                live mask (delete = clear bit)
+* ``links``     int32[capacity, max_links]    typed graph edges (`link` cmd)
+* ``meta``      int64[capacity, meta_slots]   opaque per-row metadata words
+* ``hnsw_*``    deterministic HNSW adjacency (see hnsw.py)
+* scalars: ``cursor`` (next insert slot), ``count`` (live rows), ``version``
+  (logical time t — increments once per applied command).
+
+Everything is integer-typed; no float ever lives in the state, so the state
+hash is platform-invariant by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.contracts import DEFAULT_CONTRACT, PrecisionContract, get_contract
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MemoryState:
+    # arena
+    vectors: jax.Array      # [capacity, dim] raw fixed-point
+    ids: jax.Array          # [capacity] int64, -1 = empty
+    valid: jax.Array        # [capacity] bool
+    links: jax.Array        # [capacity, max_links] int32 slot indices, -1 = none
+    meta: jax.Array         # [capacity, meta_slots] int64
+
+    # hnsw graph (dense, fixed degree per level; -1 = no edge)
+    hnsw_neighbors: jax.Array  # [levels, capacity, degree] int32
+    hnsw_levels: jax.Array     # [capacity] int32 — top level of each node, -1 empty
+    hnsw_entry: jax.Array      # [] int32 — entry slot (paper: fixed to first node)
+
+    # scalars
+    cursor: jax.Array       # [] int32
+    count: jax.Array        # [] int32
+    version: jax.Array      # [] int64 — logical time t
+
+    # static metadata (aux_data, not traced)
+    contract_name: str = dataclasses.field(
+        default=DEFAULT_CONTRACT.name, metadata=dict(static=True)
+    )
+
+    # ------------------------------------------------------------------ #
+    @property
+    def capacity(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[1]
+
+    @property
+    def contract(self) -> PrecisionContract:
+        return get_contract(self.contract_name)
+
+    @property
+    def max_links(self) -> int:
+        return self.links.shape[1]
+
+    @property
+    def hnsw_degree(self) -> int:
+        return self.hnsw_neighbors.shape[2]
+
+    @property
+    def hnsw_max_levels(self) -> int:
+        return self.hnsw_neighbors.shape[0]
+
+
+def init_state(
+    capacity: int,
+    dim: int,
+    *,
+    contract: PrecisionContract = DEFAULT_CONTRACT,
+    max_links: int = 4,
+    meta_slots: int = 2,
+    hnsw_levels: int = 4,
+    hnsw_degree: int = 16,
+) -> MemoryState:
+    """A fresh, empty kernel state S_0. Deterministic: all-zero/all-empty."""
+    return MemoryState(
+        vectors=jnp.zeros((capacity, dim), dtype=contract.storage_dtype),
+        ids=jnp.full((capacity,), -1, dtype=jnp.int64),
+        valid=jnp.zeros((capacity,), dtype=jnp.bool_),
+        links=jnp.full((capacity, max_links), -1, dtype=jnp.int32),
+        meta=jnp.zeros((capacity, meta_slots), dtype=jnp.int64),
+        hnsw_neighbors=jnp.full(
+            (hnsw_levels, capacity, hnsw_degree), -1, dtype=jnp.int32
+        ),
+        hnsw_levels=jnp.full((capacity,), -1, dtype=jnp.int32),
+        hnsw_entry=jnp.asarray(-1, dtype=jnp.int32),
+        cursor=jnp.asarray(0, dtype=jnp.int32),
+        count=jnp.asarray(0, dtype=jnp.int32),
+        version=jnp.asarray(0, dtype=jnp.int64),
+        contract_name=contract.name,
+    )
+
+
+def live_mask(state: MemoryState) -> jax.Array:
+    return state.valid
+
+
+def slot_of_id(state: MemoryState, ext_id: jax.Array) -> jax.Array:
+    """Slot index holding ``ext_id`` (or -1). Deterministic linear probe:
+    ids are unique among valid rows, argmax of the match mask is stable."""
+    match = (state.ids == ext_id) & state.valid
+    any_match = jnp.any(match)
+    slot = jnp.argmax(match).astype(jnp.int32)
+    return jnp.where(any_match, slot, jnp.int32(-1))

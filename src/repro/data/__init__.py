@@ -1,0 +1,2 @@
+from repro.data.pipeline import (DataConfig, DeterministicPipeline,  # noqa: F401
+                                 feistel_permute)

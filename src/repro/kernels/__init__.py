@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the substrate's compute hot-spots.
+
+Each kernel ships three files (kernel.py: pl.pallas_call + BlockSpec VMEM
+tiling; ops.py: jit'd public wrapper with padding/fallbacks; ref.py: pure-jnp
+oracle) and is validated BITWISE against its oracle across shape sweeps —
+integer kernels admit no tolerance.
+
+  qgemm     — exact fixed-point scoring matmul; int64 accumulation realized
+              as three int32 limb planes (TPU has no native int64)
+  qtopk     — deterministic k-smallest with tie keys over dual-plane scores
+  qboundary — fused float→Q-encode→integer-L2-normalize (the paper's §5.3
+              determinism boundary, the hottest serving entry point)
+
+Kernels run in interpret mode on the CPU container (exact semantics); on TPU
+the same BlockSpecs drive Mosaic compilation.
+"""

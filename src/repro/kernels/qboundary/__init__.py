@@ -1,0 +1,1 @@
+from repro.kernels.qboundary.ops import qboundary  # noqa: F401

@@ -1,0 +1,37 @@
+"""jit'd wrapper for the fused boundary kernel (padding + contract plumbing)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.contracts import DEFAULT_CONTRACT, PrecisionContract
+from repro.kernels.qboundary import kernel as _kernel
+
+
+@partial(jax.jit, static_argnames=("contract", "unit_norm", "interpret",
+                                   "use_pallas"))
+def qboundary(x: jax.Array, contract: PrecisionContract = DEFAULT_CONTRACT,
+              *, unit_norm: bool = True, interpret: bool = True,
+              use_pallas: bool = True) -> jax.Array:
+    """float [n, d] → raw fixed-point unit vectors [n, d] int32.
+
+    Bit-identical to core.boundary.normalize_embedding (the ref oracle);
+    only contracts with int32 storage are kernelized.
+    """
+    if not use_pallas or jnp.dtype(contract.storage_dtype) != jnp.int32:
+        from repro.kernels.qboundary import ref
+        return ref.qboundary_ref(x, contract, unit_norm)
+    n, d = x.shape
+    br = min(128, n) if n % 8 == 0 or n < 8 else 1
+    while n % br:
+        br //= 2
+    br = max(br, 1)
+    pad = (-n) % br
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pad), (0, 0)))
+    out = _kernel.qboundary_pallas(
+        xp, one=contract.one, min_raw=contract.min_raw,
+        max_raw=contract.max_raw, unit_norm=unit_norm, block_rows=br,
+        interpret=interpret)
+    return out[:n]

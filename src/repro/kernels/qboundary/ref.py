@@ -1,0 +1,12 @@
+"""Oracle: the boundary as composed pure-jnp core ops (encode ∘ qnorm)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import boundary
+from repro.core.contracts import PrecisionContract
+
+
+def qboundary_ref(x: jax.Array, contract: PrecisionContract,
+                  unit_norm: bool = True) -> jax.Array:
+    return boundary.normalize_embedding(x, contract, unit_norm=unit_norm)

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: exact fixed-point scoring matmul (paper §5.1, hot spot).
+
+The paper's dot products accumulate in i64. TPUs have no native int64, so the
+TPU-native adaptation (DESIGN.md §2) decomposes each Q16.16 raw value into
+8-bit limbs
+
+    raw = h * 2^8 + l,   h = raw >> 8 (signed),  l = raw & 0xFF (unsigned)
+
+and computes three int32 partial-sum planes
+
+    S_hh = Σ h·h',   S_hl = Σ (h·l' + l·h'),   S_ll = Σ l·l'
+
+whose exact int64 combination is  (S_hh << 16) + (S_hl << 8) + S_ll.
+
+Range analysis (why int32 accumulation is exact): boundary-normalized vectors
+satisfy |raw| ≤ 2^16, so |h| ≤ 2^8, l < 2^8, giving
+    |S_hh| ≤ 2^16·D,  |S_hl| ≤ 2^17·D,  |S_ll| < 2^16·D,
+all < 2^31 for D ≤ 2^13 = 8192 — checked by ops.py. The combination step runs
+outside the kernel where XLA's int64 emulation is available.
+
+Tiling: grid (nq/BQ, nn/BN, nd/BK); Q and DB tiles live in VMEM; the output
+tile [BQ, BN, 3] accumulates across the BK grid axis (revisited, 'arbitrary'
+semantics). All matmuls are lax.dot_general with int32 preferred type — on
+TPU these map to MXU/VPU integer paths; in interpret mode they are exact
+NumPy-level ops, so CPU validation is bit-exact against ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _qgemm_kernel(q_ref, d_ref, out_ref):
+    """One (BQ, BN) output tile, accumulated across the K grid dimension."""
+    k = pl.program_id(2)
+
+    q = q_ref[...]  # [BQ, BK] int32
+    d = d_ref[...]  # [BN, BK] int32
+
+    qh = q >> 8
+    ql = q & 0xFF
+    dh = d >> 8
+    dl = d & 0xFF
+
+    dot = functools.partial(
+        jax.lax.dot_general,
+        dimension_numbers=(((1,), (1,)), ((), ())),  # contract BK, no batch
+        preferred_element_type=jnp.int32,
+    )
+    s_hh = dot(qh, dh)
+    s_hl = dot(qh, dl) + dot(ql, dh)
+    s_ll = dot(ql, dl)
+
+    planes = jnp.stack([s_hh, s_hl, s_ll], axis=-1)  # [BQ, BN, 3]
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = planes
+
+    @pl.when(k != 0)
+    def _accum():
+        out_ref[...] += planes
+
+
+def qgemm_planes_pallas(
+    queries: jax.Array,   # [nq, d] int32 raw fixed-point
+    database: jax.Array,  # [nn, d] int32 raw fixed-point
+    *,
+    block_q: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns the three int32 partial planes [nq, nn, 3].
+
+    Shapes must be multiples of the block sizes (ops.py pads).
+    """
+    nq, d = queries.shape
+    nn, d2 = database.shape
+    assert d == d2, (d, d2)
+    assert nq % block_q == 0 and nn % block_n == 0 and d % block_k == 0
+
+    grid = (nq // block_q, nn // block_n, d // block_k)
+    return pl.pallas_call(
+        _qgemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_n, block_k), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_n, 3), lambda i, j, k: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nq, nn, 3), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(queries, database)

@@ -1,0 +1,64 @@
+"""jit'd public wrapper for the qgemm kernel: padding, range checks, combine."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qgemm import kernel as _kernel
+
+# |raw| ≤ RAW_BOUND keeps all three int32 planes overflow-free up to MAX_DIM.
+RAW_BOUND = 1 << 16
+MAX_DIM = 1 << 13
+
+
+def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _pick_blocks(nq: int, nn: int, d: int):
+    bq = min(128, max(8, nq))
+    bn = 128 if nn >= 128 else max(8, nn)
+    bk = 512 if d >= 512 else max(128, d) if d >= 128 else d
+    return bq, bn, bk
+
+
+@partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def qgemm_planes(queries: jax.Array, database: jax.Array, *,
+                 interpret: bool = True, use_pallas: bool = True) -> jax.Array:
+    """Three int32 limb planes [nq, nn, 3] for raw fixed-point inputs."""
+    if queries.shape[-1] > MAX_DIM:
+        raise ValueError(
+            f"qgemm exactness bound needs dim ≤ {MAX_DIM}, got {queries.shape[-1]}"
+        )
+    nq, d = queries.shape
+    nn = database.shape[0]
+    if not use_pallas:
+        from repro.kernels.qgemm import ref
+        return ref.qgemm_planes_ref(queries, database)
+    bq, bn, bk = _pick_blocks(nq, nn, d)
+    qp = _pad_to(queries.astype(jnp.int32), bq, bk)
+    dp = _pad_to(database.astype(jnp.int32), bn, bk)
+    planes = _kernel.qgemm_planes_pallas(
+        qp, dp, block_q=bq, block_n=bn, block_k=bk, interpret=interpret
+    )
+    return planes[:nq, :nn]
+
+
+@partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def qgemm(queries: jax.Array, database: jax.Array, *,
+          interpret: bool = True, use_pallas: bool = True) -> jax.Array:
+    """Exact wide int64 dot scores [nq, nn] — kernel planes + int64 combine.
+
+    Bit-identical to ref.qgemm_ref for boundary-normalized inputs
+    (|raw| ≤ 2^16, dim ≤ 8192).
+    """
+    planes = qgemm_planes(
+        queries, database, interpret=interpret, use_pallas=use_pallas
+    ).astype(jnp.int64)
+    return (planes[..., 0] << 16) + (planes[..., 1] << 8) + planes[..., 2]

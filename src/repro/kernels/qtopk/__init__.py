@@ -1,0 +1,1 @@
+from repro.kernels.qtopk.ops import qtopk  # noqa: F401

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: deterministic k-smallest selection over wide scores.
+
+Input scores are int64 conceptually, carried as two int32 planes:
+    hi = s >> 32,  lo = (s & 0xFFFFFFFF) XOR 0x80000000  (sign-bias)
+so that signed lexicographic (hi, lo) comparison equals int64 comparison —
+again because the target TPU has no native int64 (DESIGN.md §2).
+
+Selection is deterministic by construction: ties on (hi, lo) are broken by
+the smallest int32 tie key (caller supplies arena positions or external ids).
+
+Tiling: grid (nq/BQ, n/BN). Each grid step extracts its block's k best
+candidates with k passes of a three-stage vectorized min reduction
+(hi → lo → key), writing [BQ, k] triples per block. The host-side ops.py
+merges the per-block candidates (n/BN × k per query) with one small sort.
+A k-pass VPU reduction keeps everything in registers/VMEM — no cross-lane
+sort network needed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+I32_MAX = 2**31 - 1  # Python int: folded into the kernel as an immediate
+
+
+def _qtopk_kernel(hi_ref, lo_ref, key_ref, out_hi_ref, out_lo_ref, out_key_ref, *, k: int):
+    hi = hi_ref[...]           # [BQ, BN] int32
+    lo = lo_ref[...]           # [BQ, BN] int32 (sign-biased)
+    key = key_ref[...]         # [1, BN] int32 tie keys (broadcast over BQ)
+    bq, bn = hi.shape
+    key = jnp.broadcast_to(key, (bq, bn))
+
+    for t in range(k):
+        min_hi = jnp.min(hi, axis=1, keepdims=True)
+        on_hi = hi == min_hi
+        lo_m = jnp.where(on_hi, lo, I32_MAX)
+        min_lo = jnp.min(lo_m, axis=1, keepdims=True)
+        on_lo = on_hi & (lo_m == min_lo)
+        key_m = jnp.where(on_lo, key, I32_MAX)
+        min_key = jnp.min(key_m, axis=1, keepdims=True)
+        chosen = key_m == min_key  # exactly one lane per row
+
+        out_hi_ref[:, t] = min_hi[:, 0]
+        out_lo_ref[:, t] = min_lo[:, 0]
+        out_key_ref[:, t] = min_key[:, 0]
+
+        # retire the chosen lane
+        hi = jnp.where(chosen, I32_MAX, hi)
+        lo = jnp.where(chosen, I32_MAX, lo)
+
+
+def qtopk_pallas(
+    hi: jax.Array,   # [nq, n] int32
+    lo: jax.Array,   # [nq, n] int32 sign-biased
+    key: jax.Array,  # [1, n] int32 tie keys
+    k: int,
+    *,
+    block_q: int = 128,
+    block_n: int = 1024,
+    interpret: bool = True,
+):
+    """Per-block candidates: three int32 arrays [nq, n_blocks * k]."""
+    nq, n = hi.shape
+    assert nq % block_q == 0 and n % block_n == 0
+    n_blocks = n // block_n
+    grid = (nq // block_q, n_blocks)
+
+    kern = lambda *refs: _qtopk_kernel(*refs, k=k)
+    out_shape = [jax.ShapeDtypeStruct((nq, n_blocks * k), jnp.int32)] * 3
+    out_spec = pl.BlockSpec((block_q, k), lambda i, j: (i, j))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_q, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=[out_spec, out_spec, out_spec],
+        out_shape=out_shape,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        interpret=interpret,
+    )(hi, lo, key)

@@ -1,0 +1,68 @@
+"""jit'd public wrapper for qtopk: plane split, padding, final candidate merge."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qtopk import kernel as _kernel
+
+_BIAS = jnp.uint32(0x80000000)
+I64_MAX = jnp.int64(2**63 - 1)
+
+
+def split_planes(scores: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """int64 scores → (hi int32, sign-biased lo int32); lex order preserved."""
+    s = scores.astype(jnp.int64)
+    hi = (s >> 32).astype(jnp.int32)
+    lo_u = (s & jnp.int64(0xFFFFFFFF)).astype(jnp.uint32) ^ _BIAS
+    return hi, lo_u.astype(jnp.int32)
+
+
+def combine_planes(hi: jax.Array, lo: jax.Array) -> jax.Array:
+    lo_u = (jax.lax.bitcast_convert_type(lo.astype(jnp.int32), jnp.uint32)
+            ^ _BIAS).astype(jnp.int64)
+    return (hi.astype(jnp.int64) << 32) | lo_u
+
+
+@partial(jax.jit, static_argnames=("k", "interpret", "use_pallas"))
+def qtopk(scores: jax.Array, keys: jax.Array, k: int, *,
+          interpret: bool = True, use_pallas: bool = True
+          ) -> Tuple[jax.Array, jax.Array]:
+    """Deterministic k smallest (score, key) per row.
+
+    scores [nq, n] int64 wide scores; keys [n] int32 tie keys (unique).
+    Returns (scores [nq, k] int64, keys [nq, k] int32), sorted.
+    Bit-identical to ref.qtopk_ref.
+    """
+    if not use_pallas:
+        from repro.kernels.qtopk import ref
+        return ref.qtopk_ref(scores, keys, k)
+
+    nq, n = scores.shape
+    bq = min(128, max(8, nq))
+    bn = 1024 if n >= 1024 else max(128, n) if n >= 128 else n
+    hi, lo = split_planes(scores)
+
+    pq = (-nq) % bq
+    pn = (-n) % bn
+    if pq or pn:
+        hi = jnp.pad(hi, ((0, pq), (0, pn)), constant_values=2**31 - 1)
+        lo = jnp.pad(lo, ((0, pq), (0, pn)), constant_values=2**31 - 1)
+    keys_p = jnp.pad(
+        keys.astype(jnp.int32), (0, pn), constant_values=2**31 - 1
+    )[None, :]
+
+    kk = min(k, bn)
+    c_hi, c_lo, c_key = _kernel.qtopk_pallas(
+        hi, lo, keys_p, kk, block_q=bq, block_n=bn, interpret=interpret
+    )
+    # final merge over n_blocks*k candidates (small): exact int64 sort
+    cand_scores = combine_planes(c_hi, c_lo)[:nq]
+    cand_keys = c_key[:nq]
+    s, i = jax.lax.sort(
+        (cand_scores, cand_keys.astype(jnp.int32)), num_keys=2, dimension=1
+    )
+    return s[:, :k], i[:, :k]

@@ -1,0 +1,72 @@
+"""Memory-augmented serving driver (the paper-native e2e example).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --reduced \
+      --docs 64 --requests 8
+
+Boots a model, ingests documents through the Valori boundary, serves batched
+retrieval-augmented generation, and proves the audit-trail property: replaying
+the command log reproduces the memory hash bit-for-bit.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+import repro  # noqa: F401
+from repro.configs import get_config, get_reduced_config
+from repro.models import transformer as tf
+from repro.serve.engine import MemoryAugmentedEngine, ServeConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--docs", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--doc-len", type=int, default=64)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    if cfg.external_embeddings:
+        raise SystemExit(f"{cfg.name} takes stub embeddings; pick a token arch")
+
+    rng = np.random.default_rng(args.seed)
+    params = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
+    engine = MemoryAugmentedEngine(cfg, params, ServeConfig(
+        capacity=max(args.docs * 2, 256), max_new_tokens=args.max_new,
+        s_cache=args.doc_len + args.prompt_len + args.max_new + 32,
+        context_tokens=min(32, args.doc_len)))
+
+    docs = rng.integers(0, cfg.vocab_size, (args.docs, args.doc_len),
+                        dtype=np.int32)
+    t0 = time.time()
+    ids = engine.insert_documents(docs)
+    print(f"ingested {len(ids)} docs in {time.time() - t0:.2f}s; "
+          f"memory hash {engine.memory_hash():#x}")
+
+    prompts = rng.integers(0, cfg.vocab_size, (args.requests, args.prompt_len),
+                           dtype=np.int32)
+    nn_ids, scores = engine.retrieve(prompts)
+    print("retrieved neighbors:", nn_ids[:, 0].tolist())
+
+    t0 = time.time()
+    out = engine.generate(prompts)
+    dt = time.time() - t0
+    print(f"generated {args.requests}x{args.max_new} tokens in {dt:.2f}s "
+          f"({args.requests * args.max_new / dt:.1f} tok/s)")
+
+    replay_hash = engine.replay_log_fresh()
+    live_hash = engine.memory_hash()
+    assert replay_hash == live_hash, "replay diverged!"
+    print(f"audit: replay(S0, log) hash {replay_hash:#x} == live state ✓")
+
+
+if __name__ == "__main__":
+    main()

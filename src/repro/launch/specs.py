@@ -1,0 +1,155 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape × mesh) dry-run cell.
+
+No device allocation anywhere: params/optimizer/caches come from
+jax.eval_shape and are re-wrapped with their NamedShardings; batches are
+built directly. ``build_cell`` returns everything dryrun.py needs to lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, long_context_ok
+from repro.models import sharding as shd
+from repro.models import transformer as tf
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.train import step as step_lib
+
+
+def _with_shardings(shape_tree: Any, sharding_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shape_tree, sharding_tree,
+    )
+
+
+def params_struct(cfg: ModelConfig, mesh: Mesh) -> Any:
+    shapes = jax.eval_shape(lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
+    shardings = shd.param_shardings(shapes, cfg, mesh)
+    return _with_shardings(shapes, shardings)
+
+
+def opt_struct(cfg: ModelConfig, mesh: Mesh, params_sds: Any) -> Any:
+    shapes = jax.eval_shape(adamw_init, params_sds)
+    # m/v mirror params; step is replicated
+    p_shard = shd.param_shardings(
+        jax.tree.map(lambda s: s, params_sds), cfg, mesh
+    )
+    rep = NamedSharding(mesh, P())
+    shardings = {"m": p_shard, "v": p_shard, "step": rep}
+    return _with_shardings(shapes, shardings)
+
+
+def train_batch_struct(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig) -> Any:
+    B, L = shape.global_batch, shape.seq_len
+    specs = shd.train_batch_specs(cfg, mesh, B)
+    out = {}
+    if cfg.external_embeddings:
+        out["embeds"] = jax.ShapeDtypeStruct(
+            (B, L, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=NamedSharding(mesh, specs["embeds"]))
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct(
+            (B, L), jnp.int32, sharding=NamedSharding(mesh, specs["tokens"]))
+    out["labels"] = jax.ShapeDtypeStruct(
+        (B, L), jnp.int32, sharding=NamedSharding(mesh, specs["labels"]))
+    return out
+
+
+def cache_struct(cfg: ModelConfig, mesh: Mesh, batch: int, s_cache: int) -> Any:
+    shapes = jax.eval_shape(lambda: tf.init_caches(cfg, batch, s_cache))
+    specs = shd.cache_specs(cfg, mesh, batch, shapes)
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return _with_shardings(shapes, shardings)
+
+
+# --------------------------------------------------------------------------- #
+# cells
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    cfg: ModelConfig
+    step_fn: Callable
+    args: Tuple[Any, ...]
+    donate: Tuple[int, ...]
+    skip_reason: str = ""
+    # explicit output shardings: required — shard_map(EP) inside scan produces
+    # GSPMD shardings jax cannot infer back to NamedShardings (KeyError in
+    # parse_flatten_op_sharding); specifying outputs sidesteps inference.
+    out_shardings: Any = None
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               optc: AdamWConfig | None = None) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    optc = optc or AdamWConfig()
+
+    if shape.name == "long_500k" and not long_context_ok(arch):
+        return Cell(arch, shape, cfg, None, (), (), skip_reason=(
+            "pure full-attention arch: 500k-context decode cache/attention "
+            "has no sub-quadratic path (DESIGN.md §Arch-applicability)"))
+
+    rep = NamedSharding(mesh, P())
+
+    def shardings_of(tree):
+        return jax.tree.map(lambda s: s.sharding, tree)
+
+    if shape.kind == "train":
+        fn = step_lib.make_train_step(cfg, optc)
+        p = params_struct(cfg, mesh)
+        o = opt_struct(cfg, mesh, p)
+        b = train_batch_struct(cfg, mesh, shape)
+        metrics_sh = {k: rep for k in ("loss", "ce", "aux", "grad_norm", "lr")}
+        outs = (shardings_of(p), shardings_of(o), metrics_sh)
+        return Cell(arch, shape, cfg, fn, (p, o, b), donate=(0, 1),
+                    out_shardings=outs)
+
+    bspec = shd._bspec(cfg, mesh, shape.global_batch)
+    logits_sh = NamedSharding(
+        mesh, P(bspec, "model" if cfg.padded_vocab % mesh.shape["model"] == 0
+                else None))
+
+    if shape.kind == "prefill":
+        fn = step_lib.make_prefill_step(cfg, s_cache=shape.seq_len)
+        p = params_struct(cfg, mesh)
+        b = train_batch_struct(cfg, mesh, shape)
+        b.pop("labels")
+        c = cache_struct(cfg, mesh, shape.global_batch, s_cache=shape.seq_len)
+        outs = (logits_sh, shardings_of(c))
+        return Cell(arch, shape, cfg, fn, (p, b), donate=(),
+                    out_shardings=outs)
+
+    # decode: one new token against a seq_len-deep cache
+    B = shape.global_batch
+    p = params_struct(cfg, mesh)
+    c = cache_struct(cfg, mesh, B, s_cache=shape.seq_len)
+    tok_sh = NamedSharding(mesh, P(bspec, None))
+    positions = jax.ShapeDtypeStruct((B, 1), jnp.int32, sharding=tok_sh)
+    outs = (logits_sh, shardings_of(c))
+    if cfg.external_embeddings:
+        emb = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.dtype(cfg.dtype),
+                                   sharding=NamedSharding(mesh, P(bspec, None, None)))
+        base = step_lib.make_decode_step(cfg)
+        fn = lambda params, caches, positions, embeds: base(
+            params, caches, None, positions, embeds=embeds)
+        return Cell(arch, shape, cfg, fn, (p, c, positions, emb), donate=(1,),
+                    out_shardings=outs)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32, sharding=tok_sh)
+    fn = step_lib.make_decode_step(cfg)
+    return Cell(arch, shape, cfg, fn, (p, c, tokens, positions), donate=(1,),
+                out_shardings=outs)

@@ -1,0 +1,87 @@
+"""Decoder blocks: attention+FFN (dense/MoE) and shared-attention (zamba2).
+
+Block param layout is uniform so layers stack for lax.scan. Norm styles:
+  pre      : h += f(norm(h))                       (llama family)
+  pre_post : h += post_norm(f(pre_norm(h)))        (gemma2 sandwich)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import attention as attn_lib
+from repro.models.layers import moe as moe_lib
+from repro.models.layers import ssm as ssm_lib
+from repro.models.layers.mlp import init_mlp, mlp
+from repro.models.layers.norms import init_rmsnorm, rmsnorm
+
+
+def init_decoder_block(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    p = {
+        "ln_attn": init_rmsnorm(cfg.d_model, cfg.params_dtype),
+        "ln_ffn": init_rmsnorm(cfg.d_model, cfg.params_dtype),
+        "attn": attn_lib.init_attention(ks[0], cfg),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_lib.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.activation,
+                            cfg.params_dtype)
+    if cfg.norm_style == "pre_post":
+        p["ln_attn_post"] = init_rmsnorm(cfg.d_model, cfg.params_dtype)
+        p["ln_ffn_post"] = init_rmsnorm(cfg.d_model, cfg.params_dtype)
+    return p
+
+
+def decoder_block(
+    params: dict,
+    h: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    *,
+    local: bool,
+    mode: str,
+    cache_slice: Optional[dict] = None,
+    angles: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Returns (h, new_cache, aux_loss)."""
+    a_in = rmsnorm(params["ln_attn"], h, cfg.rms_eps)
+    a_out, new_cache = attn_lib.attention(
+        params["attn"], a_in, positions, cfg,
+        local=local, mode=mode, cache_slice=cache_slice, angles=angles,
+    )
+    if cfg.norm_style == "pre_post":
+        a_out = rmsnorm(params["ln_attn_post"], a_out, cfg.rms_eps)
+    h = h + a_out
+
+    f_in = rmsnorm(params["ln_ffn"], h, cfg.rms_eps)
+    if cfg.family == "moe":
+        f_out, aux = moe_lib.moe_ffn(params["moe"], f_in, cfg)
+    else:
+        f_out = mlp(params["mlp"], f_in, cfg.activation)
+        aux = jnp.zeros((), jnp.float32)
+    if cfg.norm_style == "pre_post":
+        f_out = rmsnorm(params["ln_ffn_post"], f_out, cfg.rms_eps)
+    h = h + f_out
+    return h, new_cache, aux
+
+
+def init_mamba_layer(key, cfg: ModelConfig) -> dict:
+    return {
+        "ln": init_rmsnorm(cfg.d_model, cfg.params_dtype),
+        "mamba": ssm_lib.init_mamba(key, cfg),
+    }
+
+
+def mamba_layer(params: dict, h: jax.Array, cfg: ModelConfig, *, mode: str,
+                cache_slice: Optional[dict] = None
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    m_in = rmsnorm(params["ln"], h, cfg.rms_eps)
+    m_out, new_cache = ssm_lib.mamba_block(
+        params["mamba"], m_in, cfg, mode=mode, cache_slice=cache_slice
+    )
+    return h + m_out, new_cache

@@ -1,0 +1,21 @@
+"""Deterministic parameter initializers (explicit dtypes, truncated normal)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, param_dtype, *, fan_in: int | None = None):
+    """Truncated-normal with 1/sqrt(fan_in) scale (fan_in = shape[-2] default)."""
+    if fan_in is None:
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(param_dtype)
+
+
+def embed_init(key, shape, param_dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            ).astype(param_dtype)

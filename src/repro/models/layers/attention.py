@@ -1,0 +1,376 @@
+"""GQA attention: naive, flash-chunked (memory-O(L)), and decode paths.
+
+Covers every attention variant in the assigned pool:
+  * GQA / MQA / MHA via num_kv_heads
+  * RoPE / M-RoPE (qwen2-vl)
+  * sliding-window (h2o-danube, gemma2 local layers) incl. ring-buffer decode
+  * logit softcapping (gemma2)
+  * qkv bias (qwen family)
+
+The flash path is a pure-JAX online-softmax: vmap over query chunks (parallel
+on device), lax.scan over KV chunks (sequential reduction). Baseline masks
+the full causal square (HLO FLOPs ≈ 2x ideal — see EXPERIMENTS.md §Perf for
+the balanced-pair optimization that removes the waste).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.initializers import dense_init
+from repro.models import pspec
+from repro.models.layers import rope as rope_lib
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# params
+# --------------------------------------------------------------------------- #
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    D, H, KV, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    pd = cfg.params_dtype
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, (D, H, Dh), pd, fan_in=D),
+        "wk": dense_init(k2, (D, KV, Dh), pd, fan_in=D),
+        "wv": dense_init(k3, (D, KV, Dh), pd, fan_in=D),
+        "wo": dense_init(k4, (H, Dh, D), pd, fan_in=H * Dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, Dh), pd)
+        p["bk"] = jnp.zeros((KV, Dh), pd)
+        p["bv"] = jnp.zeros((KV, Dh), pd)
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# qkv projection + rope
+# --------------------------------------------------------------------------- #
+
+
+def _project_qkv(params, x, cfg: ModelConfig, angles):
+    dtype = x.dtype
+    q = jnp.einsum("bld,dhk->blhk", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bld,dhk->blhk", x, params["wk"].astype(dtype))
+    v = jnp.einsum("bld,dhk->blhk", x, params["wv"].astype(dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dtype)
+        k = k + params["bk"].astype(dtype)
+        v = v + params["bv"].astype(dtype)
+    q = rope_lib.apply_rope(q, angles)
+    k = rope_lib.apply_rope(k, angles)
+    return q, k, v
+
+
+def _softcap(logits, cap: float):
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def _mask_bias(q_pos, k_pos, window: Optional[int]):
+    """[..., Lq, Lk] additive bias: 0 where attendable, NEG_INF otherwise."""
+    ok = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        ok &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------- #
+# naive attention (short sequences, smoke tests)
+# --------------------------------------------------------------------------- #
+
+
+def _naive_attend(q, k, v, q_pos, k_pos, cfg: ModelConfig, window):
+    B, Lq, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Lq, KV, G, Dh)
+    logits = jnp.einsum("blkgd,bmkd->bkglm", qg, k).astype(jnp.float32)
+    logits = _softcap(logits * cfg.query_scale, cfg.attn_logit_softcap)
+    logits = logits + _mask_bias(q_pos, k_pos, window)[:, None, None]
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkglm,bmkd->blkgd", w, v)
+    return out.reshape(B, Lq, H, Dh)
+
+
+# --------------------------------------------------------------------------- #
+# flash attention (pure JAX online softmax)
+# --------------------------------------------------------------------------- #
+
+
+def _flash_attend(q, k, v, q_pos, k_pos, cfg: ModelConfig, window):
+    """Memory-O(chunk) attention. q [B,Lq,H,Dh]; k,v [B,Lk,KV,Dh]."""
+    B, Lq, H, Dh = q.shape
+    Lk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qc = min(cfg.flash_q_chunk, Lq)
+    kc = min(cfg.flash_kv_chunk, Lk)
+    assert Lq % qc == 0 and Lk % kc == 0, (Lq, qc, Lk, kc)
+    nq, nk = Lq // qc, Lk // kc
+
+    qg = q.reshape(B, nq, qc, KV, G, Dh)
+    qp = q_pos.reshape(B, nq, qc)
+    kg = k.reshape(B, nk, kc, KV, Dh)
+    vg = v.reshape(B, nk, kc, KV, Dh)
+    kp = k_pos.reshape(B, nk, kc)
+    scale = cfg.query_scale
+    cap = cfg.attn_logit_softcap
+
+    def per_qchunk(q_blk, qpos_blk):
+        # q_blk [B, qc, KV, G, Dh]; qpos_blk [B, qc]
+        def kv_step(carry, blk):
+            m, l, acc = carry
+            k_blk, v_blk, kpos_blk = blk  # [B, kc, KV, Dh], [B, kc]
+            s = jnp.einsum("bqkgd,bmkd->bkgqm", q_blk, k_blk).astype(jnp.float32)
+            s = _softcap(s * scale, cap)
+            bias = _mask_bias(qpos_blk, kpos_blk, window)  # [B, qc, kc]
+            ok = (bias > NEG_INF / 2)[:, None, None]       # [B,1,1,qc,kc]
+            s = s + bias[:, None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            # explicit zeroing: a fully-masked block has s == m_new == -1e30,
+            # where exp(s - m_new) would wrongly be 1 (classic online-softmax
+            # pitfall caught by tests/test_models.py flash-vs-naive)
+            p = jnp.where(ok, jnp.exp(s - m_new[..., None]), 0.0)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqm,bmkd->bkgqd", p.astype(v_blk.dtype), v_blk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        acc0 = jnp.zeros((B, KV, G, qc, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, acc0),
+            (jnp.moveaxis(kg, 1, 0), jnp.moveaxis(vg, 1, 0), jnp.moveaxis(kp, 1, 0)),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.moveaxis(out, 3, 1)  # [B, qc, KV, G, Dh]
+
+    out = jax.vmap(per_qchunk, in_axes=(1, 1), out_axes=1)(qg, qp)
+    return out.reshape(B, Lq, H, Dh).astype(q.dtype)
+
+
+def _flash_attend_zigzag(q, k, v, q_pos, k_pos, cfg: ModelConfig):
+    """Work-balanced causal flash attention (beyond-paper §Perf).
+
+    The masked-full baseline computes nq×nk blocks and throws half away to
+    causality. Pairing q-chunk i with q-chunk nq-1-i makes every pair need
+    exactly nq+1 kv-blocks (i+1 for the early member, nq-i for the late one),
+    so a static-shape scan of nq+1 steps per pair does the *exact* causal
+    work: FLOPs drop ~2× at identical results (validated vs naive attention
+    in tests/test_models.py). Requires full-causal (no window), Lq == Lk,
+    and an even chunk count — callers fall back to _flash_attend otherwise.
+    """
+    B, Lq, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qc = min(cfg.flash_q_chunk, Lq)
+    nq = Lq // qc
+    kc = qc  # equal chunking keeps the pairing arithmetic exact
+    qg = q.reshape(B, nq, qc, KV, G, Dh)
+    qp = q_pos.reshape(B, nq, qc)
+    kg = k.reshape(B, nq, kc, KV, Dh)
+    vg = v.reshape(B, nq, kc, KV, Dh)
+    kp = k_pos.reshape(B, nq, kc)
+    scale = cfg.query_scale
+    cap = cfg.attn_logit_softcap
+
+    def per_pair(p):
+        i = p
+        j = nq - 1 - p
+        q_i = qg[:, i]
+        q_j = qg[:, j]
+        qp_i = qp[:, i]
+        qp_j = qp[:, j]
+
+        def step(carry, t):
+            m, l, acc = carry          # [2, B, KV, G, qc(, Dh)]
+            late = t > i
+            member = late.astype(jnp.int32)
+            kv_idx = jnp.where(late, t - (i + 1), t)
+            q_blk = jnp.where(late, q_j, q_i)
+            qpos_blk = jnp.where(late, qp_j, qp_i)
+            k_blk = jax.lax.dynamic_index_in_dim(kg, kv_idx, 1, keepdims=False)
+            v_blk = jax.lax.dynamic_index_in_dim(vg, kv_idx, 1, keepdims=False)
+            kpos_blk = jax.lax.dynamic_index_in_dim(kp, kv_idx, 1, keepdims=False)
+
+            s = jnp.einsum("bqkgd,bmkd->bkgqm", q_blk, k_blk).astype(jnp.float32)
+            s = _softcap(s * scale, cap)
+            bias = _mask_bias(qpos_blk, kpos_blk, None)
+            ok = (bias > NEG_INF / 2)[:, None, None]
+            s = s + bias[:, None, None]
+
+            m_sel = m[member]
+            l_sel = l[member]
+            acc_sel = acc[member]
+            m_new = jnp.maximum(m_sel, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_sel - m_new)
+            pblk = jnp.where(ok, jnp.exp(s - m_new[..., None]), 0.0)
+            l_new = l_sel * alpha + jnp.sum(pblk, axis=-1)
+            acc_new = acc_sel * alpha[..., None] + jnp.einsum(
+                "bkgqm,bmkd->bkgqd", pblk.astype(v_blk.dtype), v_blk
+            ).astype(jnp.float32)
+            m = m.at[member].set(m_new)
+            l = l.at[member].set(l_new)
+            acc = acc.at[member].set(acc_new)
+            return (m, l, acc), None
+
+        m0 = jnp.full((2, B, KV, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((2, B, KV, G, qc), jnp.float32)
+        acc0 = jnp.zeros((2, B, KV, G, qc, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, acc0), jnp.arange(nq + 1, dtype=jnp.int32))
+        out = acc / jnp.maximum(l[..., None], 1e-30)   # [2,B,KV,G,qc,Dh]
+        return jnp.moveaxis(out, 4, 2)                 # [2,B,qc,KV,G,Dh]
+
+    outs = jax.vmap(per_pair, out_axes=1)(jnp.arange(nq // 2))
+    # outs [2, nq/2, B, qc, KV, G, Dh] → reassemble chunk order
+    early = outs[0]                        # pair p ↔ chunk p
+    late = outs[1][::-1]                   # pair p ↔ chunk nq-1-p
+    full = jnp.concatenate([early, late], axis=0)  # [nq, B, qc, ...]
+    full = jnp.moveaxis(full, 0, 1)        # [B, nq, qc, KV, G, Dh]
+    return full.reshape(B, Lq, H, Dh).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# KV cache (decode). Ring buffer when S_cache < total positions.
+# --------------------------------------------------------------------------- #
+
+
+def init_cache(batch: int, s_cache: int, cfg: ModelConfig, n_stack: int) -> dict:
+    KV, Dh = cfg.num_kv_heads, cfg.head_dim_
+    dt = cfg.compute_dtype
+    return {
+        "k": jnp.zeros((n_stack, batch, s_cache, KV, Dh), dt),
+        "v": jnp.zeros((n_stack, batch, s_cache, KV, Dh), dt),
+        "pos": jnp.full((n_stack, batch, s_cache), -1, jnp.int32),
+    }
+
+
+def _decode_attend(params, x, positions, cfg: ModelConfig, cache_slice, window):
+    """x [B, 1, D]; cache_slice {k,v [B,S,KV,Dh], pos [B,S]}. Ring write."""
+    B = x.shape[0]
+    S = cache_slice["k"].shape[1]
+    angles = rope_lib.rope_angles(positions, cfg.head_dim_, cfg.rope_theta)
+    q, k_new, v_new = _project_qkv(params, x, cfg, angles)
+
+    write_idx = (positions[:, 0] % S).astype(jnp.int32)  # [B]
+    bidx = jnp.arange(B)
+    k_cache = cache_slice["k"].at[bidx, write_idx].set(k_new[:, 0])
+    v_cache = cache_slice["v"].at[bidx, write_idx].set(v_new[:, 0])
+    pos_cache = cache_slice["pos"].at[bidx, write_idx].set(positions[:, 0])
+
+    KV, Dh, H = cfg.num_kv_heads, cfg.head_dim_, cfg.num_heads
+    G = H // KV
+    qg = q.reshape(B, KV, G, Dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    s = _softcap(s * cfg.query_scale, cfg.attn_logit_softcap)
+    ok = (pos_cache >= 0) & (pos_cache <= positions)  # [B, S]
+    if window is not None:
+        ok &= (positions - pos_cache) < window
+    s = jnp.where(ok[:, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v_cache).reshape(B, 1, H, Dh)
+    o = jnp.einsum("blhd,hdo->blo", out, params["wo"].astype(x.dtype))
+    new_cache = {"k": k_cache, "v": v_cache, "pos": pos_cache}
+    return o, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# public entry
+# --------------------------------------------------------------------------- #
+
+
+def attention(
+    params: dict,
+    x: jax.Array,              # [B, L, D]
+    positions: jax.Array,      # [B, L] int32 absolute positions
+    cfg: ModelConfig,
+    *,
+    local: bool,
+    mode: str,                 # train | prefill | decode
+    cache_slice: Optional[dict] = None,
+    angles: Optional[jax.Array] = None,  # precomputed (M-RoPE path)
+) -> Tuple[jax.Array, Optional[dict]]:
+    window = cfg.sliding_window if local else None
+
+    if mode == "decode":
+        return _decode_attend(params, x, positions, cfg, cache_slice, window)
+
+    if angles is None:
+        angles = rope_lib.rope_angles(positions, cfg.head_dim_, cfg.rope_theta)
+    q, k, v = _project_qkv(params, x, cfg, angles)
+
+    L = x.shape[1]
+    if pspec.model_divides(cfg.num_heads):
+        # tensor parallelism over heads (Megatron): q/k/v head-sharded
+        q = pspec.constrain(q, "batch", None, "model", None)
+        if pspec.model_divides(cfg.num_kv_heads):
+            k = pspec.constrain(k, "batch", None, "model", None)
+            v = pspec.constrain(v, "batch", None, "model", None)
+    else:
+        # sequence-parallel attention: q's sequence dim over `model`; k/v
+        # replicated across model ranks (cheap for GQA). Each model rank
+        # computes attention for L/model query rows — no score collectives.
+        q = pspec.constrain(q, "batch", "model", None, None)
+        k = pspec.constrain(k, "batch", None, None, None)
+        v = pspec.constrain(v, "batch", None, None, None)
+    use_flash = (cfg.attn_impl in ("flash", "latency")) or (
+        cfg.attn_impl == "auto" and L >= cfg.flash_threshold
+    )
+    qc = min(cfg.flash_q_chunk, L)
+    # zigzag only where attention is head-TP (or unsharded): under
+    # sequence-parallel attention the pair/chunk reshape fights the L-dim
+    # sharding (+86% wire measured on gemma2 — EXPERIMENTS.md §Perf)
+    mesh_free = pspec._mesh() is None
+    zigzag_ok = (
+        use_flash and window is None and cfg.attn_impl != "flash"
+        and L % qc == 0 and (L // qc) % 2 == 0 and L // qc >= 2
+        and (mesh_free or pspec.model_divides(cfg.num_heads))
+    )
+    if zigzag_ok:
+        ctx = _flash_attend_zigzag(q, k, v, positions, positions, cfg)
+    elif use_flash:
+        ctx = _flash_attend(q, k, v, positions, positions, cfg, window)
+    else:
+        ctx = _naive_attend(q, k, v, positions, positions, cfg, window)
+    out = jnp.einsum("blhd,hdo->blo", ctx, params["wo"].astype(x.dtype))
+    # NB: do NOT constrain `out` back to batch-only sharding here — measured
+    # on gemma2 train_4k that the eager re-gather costs +31% wire and +27%
+    # flops (GSPMD adds pre-wo gathers); deferring lets it pick the cheaper
+    # point (EXPERIMENTS.md §Perf gemma2 it3, refuted)
+
+    new_cache = None
+    if mode == "prefill":
+        assert cache_slice is not None
+        S = cache_slice["k"].shape[1]
+        # keep the last S positions (ring layout: slot = pos % S)
+        if L <= S:
+            idx = positions % S  # [B, L]
+            bidx = jnp.arange(x.shape[0])[:, None]
+            new_cache = {
+                "k": cache_slice["k"].at[bidx, idx].set(k),
+                "v": cache_slice["v"].at[bidx, idx].set(v),
+                "pos": cache_slice["pos"].at[bidx, idx].set(positions),
+            }
+        else:
+            keep = S
+            k_tail, v_tail = k[:, -keep:], v[:, -keep:]
+            p_tail = positions[:, -keep:]
+            idx = p_tail % S
+            bidx = jnp.arange(x.shape[0])[:, None]
+            new_cache = {
+                "k": cache_slice["k"].at[bidx, idx].set(k_tail),
+                "v": cache_slice["v"].at[bidx, idx].set(v_tail),
+                "pos": cache_slice["pos"].at[bidx, idx].set(p_tail),
+            }
+    return out, new_cache

@@ -1,0 +1,32 @@
+"""Feed-forward blocks: SwiGLU / GeGLU (gated) and plain GELU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.initializers import dense_init
+
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str, param_dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, (d_model, d_ff), param_dtype),
+            "w_up": dense_init(k2, (d_model, d_ff), param_dtype),
+            "w_down": dense_init(k3, (d_ff, d_model), param_dtype),
+        }
+    return {
+        "w_up": dense_init(k1, (d_model, d_ff), param_dtype),
+        "w_down": dense_init(k2, (d_ff, d_model), param_dtype),
+    }
+
+
+def mlp(params: dict, x: jax.Array, activation: str) -> jax.Array:
+    dtype = x.dtype
+    if activation in ("swiglu", "geglu"):
+        gate = x @ params["w_gate"].astype(dtype)
+        up = x @ params["w_up"].astype(dtype)
+        act = jax.nn.silu(gate) if activation == "swiglu" else jax.nn.gelu(gate)
+        return (act * up) @ params["w_down"].astype(dtype)
+    h = jax.nn.gelu(x @ params["w_up"].astype(dtype))
+    return h @ params["w_down"].astype(dtype)

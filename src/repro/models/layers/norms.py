@@ -1,0 +1,25 @@
+"""RMSNorm variants (plain + gemma's (1+w) form). Param dict style."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_rmsnorm(d: int, param_dtype) -> dict:
+    return {"scale": jnp.zeros((d,), param_dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float, *, gemma_style: bool = True
+            ) -> jax.Array:
+    """Computed in f32 for stability, cast back to the input dtype.
+
+    ``gemma_style``: scale is stored zero-centered and applied as (1 + w) —
+    matches gemma/llama-modern checkpoints and makes zero-init the identity.
+    """
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    w = params["scale"].astype(jnp.float32)
+    w = 1.0 + w if gemma_style else w
+    return (xf * w).astype(dtype)

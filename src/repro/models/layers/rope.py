@@ -1,0 +1,64 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE.
+
+All tables are computed in float32 on the fly from integer positions (no
+persistent buffers — keeps the param pytree pure and the dry-run clean).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _freqs(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # [head_dim/2]
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> jax.Array:
+    """positions [...,] int → angles [..., head_dim/2] f32."""
+    return positions.astype(jnp.float32)[..., None] * _freqs(head_dim, theta)
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x [..., n_heads, head_dim], angles [..., head_dim/2] (broadcast over heads).
+
+    Rotate-half convention (llama): pairs are (x[..:d/2], x[..d/2:]).
+    """
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    d2 = x.shape[-1] // 2
+    x1, x2 = xf[..., :d2], xf[..., d2:]
+    cos = jnp.cos(angles)[..., None, :]  # add head axis
+    sin = jnp.sin(angles)[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+def mrope_angles(positions_3d: jax.Array, head_dim: int, theta: float,
+                 sections: Sequence[int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    positions_3d [3, B, L] (temporal, height, width). The head_dim/2 frequency
+    slots are partitioned into ``sections`` (e.g. 16/24/24); each section takes
+    its angle from the corresponding positional stream. For pure text the three
+    streams are identical and M-RoPE reduces to standard RoPE exactly.
+
+    Returns angles [B, L, head_dim/2].
+    """
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    freqs = _freqs(head_dim, theta)  # [d2]
+    # angles per stream: [3, B, L, d2]
+    ang = positions_3d.astype(jnp.float32)[..., None] * freqs
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang[i, ..., start:start + sec])
+        start += sec
+    return jnp.concatenate(parts, axis=-1)  # [B, L, d2]
+
+
+def text_positions_3d(positions: jax.Array) -> jax.Array:
+    """Lift text positions [B, L] → [3, B, L] (all streams equal)."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)

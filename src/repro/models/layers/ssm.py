@@ -1,0 +1,254 @@
+"""Mamba2 SSD (state-space duality) block — chunked matmul form + decode.
+
+Follows the minimal SSD reference (Dao & Gu 2024, alg. listing): sequence is
+split into chunks; within-chunk outputs use the quadratic (attention-like)
+form via a decay-masked matmul — MXU-friendly, the reason SSD maps well to
+TPU — and cross-chunk state is carried by a short lax.scan over chunks.
+
+Decode is the O(1) recurrence: state [B, H, P, N] per layer; no KV cache, no
+dependence on context length — this is why the ssm/hybrid archs run the
+long_500k cell (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.initializers import dense_init
+from repro.models.layers.norms import rmsnorm
+
+
+# --------------------------------------------------------------------------- #
+# params
+# --------------------------------------------------------------------------- #
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    Din, N, G, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_nheads
+    conv_dim = Din + 2 * G * N
+    pd = cfg.params_dtype
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * Din + 2 * G * N + H), pd, fan_in=D),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_dim), pd, fan_in=cfg.ssm_conv),
+        "conv_b": jnp.zeros((conv_dim,), pd),
+        "A_log": jnp.zeros((H,), pd),       # A = -exp(A_log) → A=-1 at init
+        "D_skip": jnp.ones((H,), pd),
+        "dt_bias": jnp.zeros((H,), pd),
+        "norm_scale": jnp.zeros((Din,), pd),
+        "out_proj": dense_init(ks[2], (Din, D), pd, fan_in=Din),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# SSD core
+# --------------------------------------------------------------------------- #
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x [..., cs] → [..., cs, cs] with out[i,j] = sum_{k=j+1..i} x_k (i ≥ j),
+    -inf above the diagonal. Stable cumsum-difference construction."""
+    cs = x.shape[-1]
+    csum = jnp.cumsum(x, axis=-1)
+    diff = csum[..., :, None] - csum[..., None, :]
+    i = jnp.arange(cs)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array,
+        chunk: int, init_state: Optional[jax.Array] = None
+        ) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan.
+
+    x [b,l,h,p]; dt [b,l,h] (post-softplus); A [h] (negative);
+    B, C [b,l,g,n] with h % g == 0. Returns (y [b,l,h,p], final_state [b,h,p,n]).
+    Computation in f32 throughout (decays are exponentials).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    cs = min(chunk, l)
+    pad = (-l) % cs
+    if pad:
+        # dt=0 padding is an exact identity step: decay exp(0·A)=1 and the
+        # input contribution dt·B·x = 0 — state and real outputs unaffected
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    l_pad = l + pad
+    nc = l_pad // cs
+
+    f32 = jnp.float32
+    x = x.astype(f32)
+    dt = dt.astype(f32)
+    Bh = jnp.repeat(B.astype(f32), rep, axis=2)  # [b,l,h,n]
+    Ch = jnp.repeat(C.astype(f32), rep, axis=2)
+
+    xb = x * dt[..., None]                       # input-scaled x̄
+    dA = dt * A.astype(f32)[None, None, :]       # [b,l,h] log-decay per step
+
+    # chunked views: [b, nc, cs, ...]
+    xc = xb.reshape(b, nc, cs, h, p)
+    Bc = Bh.reshape(b, nc, cs, h, n)
+    Cc = Ch.reshape(b, nc, cs, h, n)
+    dAc = dA.reshape(b, nc, cs, h)
+
+    dA_cum = jnp.cumsum(dAc, axis=2)             # [b,nc,cs,h]
+    dA_total = dA_cum[:, :, -1]                  # [b,nc,h]
+
+    # ---- intra-chunk (quadratic/attention-like form) -------------------- #
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dAc, 3, 2)))  # [b,nc,h,cs,cs]
+    scores = jnp.einsum("bzihn,bzjhn->bzhij", Cc, Bc)  # [b,nc,h,cs,cs]
+    y_diag = jnp.einsum("bzhij,bzjhp->bzihp", scores * Lmat, xc)
+
+    # ---- chunk boundary states ----------------------------------------- #
+    decay_to_end = jnp.exp(dA_total[:, :, None, :] - dA_cum)   # [b,nc,cs,h]
+    chunk_states = jnp.einsum("bzchn,bzch,bzchp->bzhpn", Bc, decay_to_end, xc)
+
+    # ---- inter-chunk recurrence over nc --------------------------------- #
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), f32)
+
+    def chunk_step(carry, inp):
+        s_prev = carry                            # [b,h,p,n]
+        states_z, total_z = inp                   # [b,h,p,n], [b,h]
+        s_new = s_prev * jnp.exp(total_z)[:, :, None, None] + states_z
+        return s_new, s_prev
+
+    (final_state, prev_states) = jax.lax.scan(
+        chunk_step, init_state.astype(f32),
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(dA_total, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [b,nc,h,p,n] state entering chunk
+
+    # ---- inter-chunk contribution to outputs ---------------------------- #
+    state_decay = jnp.exp(dA_cum)                  # [b,nc,cs,h]
+    y_off = jnp.einsum("bzchn,bzhpn,bzch->bzchp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, l_pad, h, p)[:, :l]
+    return y, final_state
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array, A: jax.Array,
+                    B: jax.Array, C: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrence. state [b,h,p,n]; x [b,h,p]; dt [b,h];
+    B, C [b,g,n]. Returns (y [b,h,p], new_state)."""
+    b, h, p = x.shape
+    g, n = B.shape[1], B.shape[2]
+    rep = h // g
+    f32 = jnp.float32
+    Bh = jnp.repeat(B.astype(f32), rep, axis=1)   # [b,h,n]
+    Ch = jnp.repeat(C.astype(f32), rep, axis=1)
+    dA = jnp.exp(dt.astype(f32) * A.astype(f32)[None, :])  # [b,h]
+    xb = x.astype(f32) * dt.astype(f32)[..., None]
+    new_state = state * dA[:, :, None, None] + jnp.einsum("bhp,bhn->bhpn", xb, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y, new_state
+
+
+# --------------------------------------------------------------------------- #
+# full mamba2 block
+# --------------------------------------------------------------------------- #
+
+
+def init_ssm_cache(batch: int, cfg: ModelConfig, n_stack: int) -> dict:
+    Din, N, G, H, P = (cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups,
+                       cfg.ssm_nheads, cfg.ssm_headdim)
+    conv_dim = Din + 2 * G * N
+    return {
+        "ssm": jnp.zeros((n_stack, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((n_stack, batch, cfg.ssm_conv - 1, conv_dim),
+                          jnp.dtype(cfg.dtype)),
+    }
+
+
+def _split_proj(z_x_bc_dt: jax.Array, cfg: ModelConfig):
+    Din, N, G, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_nheads
+    z = z_x_bc_dt[..., :Din]
+    x = z_x_bc_dt[..., Din:2 * Din]
+    B = z_x_bc_dt[..., 2 * Din:2 * Din + G * N]
+    C = z_x_bc_dt[..., 2 * Din + G * N:2 * Din + 2 * G * N]
+    dt = z_x_bc_dt[..., 2 * Din + 2 * G * N:]
+    return z, x, B, C, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array,
+                 tail: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv via shifted adds (width ≤ 4 ⇒ cheaper than
+    conv_general for these shapes, and trivially deterministic).
+
+    xbc [b, l, c]; w [k, c]; tail [b, k-1, c] (decode/prefill continuation).
+    """
+    kw = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((xbc.shape[0], kw - 1, xbc.shape[2]), xbc.dtype)
+    padded = jnp.concatenate([tail.astype(xbc.dtype), xbc], axis=1)
+    out = jnp.zeros_like(xbc)
+    L = xbc.shape[1]
+    for i in range(kw):
+        out = out + padded[:, i:i + L] * w[i].astype(xbc.dtype)
+    return out + bias.astype(xbc.dtype)
+
+
+def mamba_block(params: dict, h: jax.Array, cfg: ModelConfig, *,
+                mode: str, cache_slice: Optional[dict] = None
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    """h [B, L, D] → [B, L, D]; cache carries (ssm state, conv tail)."""
+    B_, L, D = h.shape
+    dtype = h.dtype
+    Din, N, G, H, P = (cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups,
+                       cfg.ssm_nheads, cfg.ssm_headdim)
+    proj = h @ params["in_proj"].astype(dtype)
+    z, x, Bs, Cs, dt = _split_proj(proj, cfg)
+    xbc = jnp.concatenate([x, Bs, Cs], axis=-1)
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+
+    new_cache = None
+    if mode == "decode":
+        assert cache_slice is not None
+        tail = cache_slice["conv"]                      # [B, k-1, conv_dim]
+        xbc_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"], tail)
+        xbc_conv = jax.nn.silu(xbc_conv)
+        new_tail = jnp.concatenate([tail, xbc.astype(tail.dtype)], axis=1)[:, 1:]
+        xc = xbc_conv[..., :Din].reshape(B_, Din // P, P)     # L == 1 squeezed
+        Bc = xbc_conv[..., Din:Din + G * N].reshape(B_, G, N)
+        Cc = xbc_conv[..., Din + G * N:].reshape(B_, G, N)
+        y, new_state = ssd_decode_step(
+            cache_slice["ssm"], xc, dt[:, 0], A, Bc, Cc
+        )
+        y = y + params["D_skip"].astype(jnp.float32)[None, :, None] * xc.astype(jnp.float32)
+        y = y.reshape(B_, 1, Din)
+        new_cache = {"ssm": new_state, "conv": new_tail}
+    else:
+        xbc_conv = jax.nn.silu(
+            _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        )
+        xc = xbc_conv[..., :Din].reshape(B_, L, H, P)
+        Bc = xbc_conv[..., Din:Din + G * N].reshape(B_, L, G, N)
+        Cc = xbc_conv[..., Din + G * N:].reshape(B_, L, G, N)
+        y, final_state = ssd(xc, dt, A, Bc, Cc, cfg.ssm_chunk)
+        y = y + params["D_skip"].astype(jnp.float32)[None, None, :, None] \
+            * xc.astype(jnp.float32)
+        y = y.reshape(B_, L, Din)
+        if mode == "prefill":
+            assert cache_slice is not None
+            kw = cfg.ssm_conv
+            new_cache = {
+                "ssm": final_state,
+                "conv": xbc[:, -(kw - 1):].astype(cache_slice["conv"].dtype),
+            }
+
+    # gated RMSNorm then out projection (mamba2 block epilogue)
+    y = y.astype(dtype) * jax.nn.silu(z)
+    y = rmsnorm({"scale": params["norm_scale"]}, y, cfg.rms_eps)
+    out = y @ params["out_proj"].astype(dtype)
+    return out, new_cache

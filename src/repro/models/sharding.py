@@ -1,0 +1,216 @@
+"""Parameter / activation partition rules (FSDP over `data`, TP over `model`).
+
+Divisibility-aware: each rule proposes shardings in priority order and the
+first one whose dimension divides the mesh axis wins; otherwise the dim is
+replicated. This one engine covers all 10 archs (MQA kv=1, gemma2's 8 heads,
+qwen2-vl's 28 heads, granite-moe's 40 experts, mamba's packed projections —
+each falls back gracefully; the roofline table shows what got replicated).
+
+Conventions:
+  * params may have extra *leading* stack axes (scan layers / groups /
+    shared blocks); rules match on trailing dims and leading axes replicate.
+  * the `pod` axis is pure DP: params are replicated across pods (cross-pod
+    traffic = one gradient all-reduce per step, see optim/compress.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+from repro.models.config import ModelConfig
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0 and n > 0
+
+
+class Rules:
+    def __init__(self, mesh: Mesh, cfg: ModelConfig):
+        self.mesh = mesh
+        self.cfg = cfg
+
+    def m(self, dim: int) -> Optional[str]:
+        """TP-shard a dim over `model` if divisible."""
+        return "model" if _div(dim, self.mesh, "model") else None
+
+    def d(self, dim: int) -> Optional[str]:
+        """FSDP-shard a dim over `data` if divisible."""
+        return "data" if _div(dim, self.mesh, "data") else None
+
+    # ------------------------------------------------------------------ #
+    def spec_for(self, path: str, shape: tuple) -> P:
+        cfg = self.cfg
+        name = path.split("/")[-1]
+        H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+
+        def attn_qkv(heads: int) -> tuple:
+            # shard heads over model when divisible; otherwise the weights
+            # stay FSDP-only and the *sequence* dim of q is model-sharded in
+            # the flash path (sequence-parallel attention — see
+            # attention.py). head_dim TP was measured catastrophically
+            # collective-bound (score psum per kv chunk; EXPERIMENTS.md §Perf).
+            if self.m(heads):
+                return (self.d(shape[-3]), "model", None)
+            return (self.d(shape[-3]), None, None)
+
+        table = {
+            "embed": lambda: (self.m(shape[-2]), self.d(shape[-1])),
+            "lm_head": lambda: (self.d(shape[-2]), self.m(shape[-1])),
+            "wq": lambda: attn_qkv(H),
+            "wk": lambda: attn_qkv(KV),
+            "wv": lambda: attn_qkv(KV),
+            "wo": lambda: self._wo_spec(shape),
+            "bq": lambda: (None, None),
+            "bk": lambda: (None, None),
+            "bv": lambda: (None, None),
+            # dense mlp
+            "w_gate": lambda: self._ffn_in(shape),
+            "w_up": lambda: self._ffn_in(shape),
+            "w_down": lambda: self._ffn_out(shape),
+            # router
+            "router": lambda: (self.d(shape[-2]), None),
+            # mamba
+            "in_proj": lambda: (self.d(shape[-2]), self.m(shape[-1])),
+            "out_proj": lambda: (self.m(shape[-2]), self.d(shape[-1])),
+            "conv_w": lambda: (None, self.m(shape[-1])),
+            "conv_b": lambda: (self.m(shape[-1]),),
+            "A_log": lambda: (None,),
+            "D_skip": lambda: (None,),
+            "dt_bias": lambda: (None,),
+            "norm_scale": lambda: (None,),
+            "scale": lambda: (None,),
+        }
+        if name not in table:
+            raise KeyError(f"no sharding rule for param {path!r} {shape}")
+        spec = table[name]()
+        # prepend replication for stack axes
+        lead = len(shape) - len(spec)
+        assert lead >= 0, (path, shape, spec)
+        return P(*((None,) * lead + tuple(spec)))
+
+    def _ffn_in(self, shape) -> tuple:
+        if len(shape) >= 3 and shape[-3] == self.cfg.num_experts and \
+                self.cfg.family == "moe":
+            # expert weights [E, D, Fe]: EP over model, else TP inner dim
+            if self.m(shape[-3]):
+                return ("model", self.d(shape[-2]), None)
+            return (None, self.d(shape[-2]), self.m(shape[-1]))
+        return (self.d(shape[-2]), self.m(shape[-1]))
+
+    def _ffn_out(self, shape) -> tuple:
+        if len(shape) >= 3 and shape[-3] == self.cfg.num_experts and \
+                self.cfg.family == "moe":
+            if self.m(shape[-3]):
+                return ("model", None, self.d(shape[-1]))
+            return (None, self.m(shape[-2]), self.d(shape[-1]))
+        return (self.m(shape[-2]), self.d(shape[-1]))
+
+    def _wo_spec(self, shape) -> tuple:
+        H = self.cfg.num_heads
+        if self.m(H):
+            return ("model", None, self.d(shape[-1]))
+        return (None, None, self.d(shape[-1]))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+    return "/".join(parts)
+
+
+def param_specs(params_shape: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching a params (or ShapeDtypeStruct) pytree."""
+    rules = Rules(mesh, cfg)
+
+    def one(path, leaf):
+        return rules.spec_for(_path_str(path), np.shape(leaf))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def param_shardings(params_shape: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(params_shape, cfg, mesh),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# batch / cache specs
+# --------------------------------------------------------------------------- #
+
+
+def _bspec(cfg, mesh, global_batch):
+    """DP axes for the batch dim, or None (replicate) when non-divisible."""
+    dp = batch_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    return dp if global_batch % dp_size == 0 else None
+
+
+def train_batch_specs(cfg: ModelConfig, mesh: Mesh, global_batch: int) -> Any:
+    b = _bspec(cfg, mesh, global_batch)
+    if cfg.external_embeddings:
+        return {"embeds": P(b, None, None), "labels": P(b, None)}
+    return {"tokens": P(b, None), "labels": P(b, None)}
+
+
+def logits_spec(cfg: ModelConfig, mesh: Mesh, global_batch: int) -> P:
+    b = _bspec(cfg, mesh, global_batch)
+    rules = Rules(mesh, cfg)
+    return P(b, None, rules.m(cfg.vocab_size))
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, caches_shape: Any
+                ) -> Any:
+    """Specs for the decode cache pytree (shapes from eval_shape).
+
+    KV caches [n, B, S, KV, Dh]: batch over DP when divisible; else context
+    parallelism — shard the S axis over `data` (the long_500k path). Heads
+    over `model` when divisible, else head_dim, else sequence gets model too.
+    SSM states [n, B, H, P, N]: heads over model (else P dim).
+    """
+    rules = Rules(mesh, cfg)
+    b = _bspec(cfg, mesh, batch)
+
+    def one(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        shape = leaf.shape
+        if name in ("k", "v"):
+            n, B, S, KV, Dh = shape
+            kv_ax = rules.m(KV)
+            dh_ax = rules.m(Dh) if kv_ax is None else None
+            seq_ax = None
+            if b is None:
+                seq_ax = "data" if S % mesh.shape["data"] == 0 else None
+            return P(None, b, seq_ax, kv_ax, dh_ax)
+        if name == "pos":
+            n, B, S = shape
+            seq_ax = None
+            if b is None:
+                seq_ax = "data" if S % mesh.shape["data"] == 0 else None
+            return P(None, b, seq_ax)
+        if name == "ssm":
+            extra = len(shape) - 5
+            n_axes = (None,) * (1 + extra)
+            _, B, H, Pd, N = shape[extra:]
+            h_ax = rules.m(H)
+            p_ax = rules.m(Pd) if h_ax is None else None
+            return P(*n_axes, b, h_ax, p_ax, None)
+        if name == "conv":
+            extra = len(shape) - 4
+            n_axes = (None,) * (1 + extra)
+            _, B, K, C = shape[extra:]
+            return P(*n_axes, b, None, rules.m(C))
+        raise KeyError(f"no cache rule for {name} {shape}")
+
+    return jax.tree_util.tree_map_with_path(one, caches_shape)

@@ -1,0 +1,325 @@
+"""The full LM: init / apply / prefill / decode for every assigned family.
+
+Layer stacks are scanned (``lax.scan`` over stacked params), keeping HLO size
+independent of depth — an 88-layer granite-34b compiles as fast as a 2-layer
+smoke model, which the 512-device dry-run depends on.
+
+Stack patterns by family:
+  dense/vlm/audio/moe : uniform [L] stack, or [L/2]×(local, global) pairs
+                        when attn_pattern == local_global (gemma2)
+  ssm                 : uniform [L] mamba stack
+  hybrid (zamba2)     : [n_groups] × (shared attn block (alternating 2) +
+                        [period] mamba layers)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as blk
+from repro.models import pspec
+from repro.models.config import ModelConfig
+from repro.models.initializers import embed_init
+from repro.models.layers import attention as attn_lib
+from repro.models.layers import rope as rope_lib
+from repro.models.layers import ssm as ssm_lib
+from repro.models.layers.norms import init_rmsnorm, rmsnorm
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+
+
+def _stack_init(init_fn, key, n: int):
+    """vmap an init function over n layer keys → stacked param leaves."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    k_embed, k_layers, k_head, k_shared = jax.random.split(key, 4)
+    p: Params = {}
+    # vocab rows padded to vocab_pad_multiple so embedding/head shard over the
+    # model axis (MaxText practice); padded logits are masked in _head.
+    p["embed"] = embed_init(k_embed, (cfg.padded_vocab, cfg.d_model),
+                            cfg.params_dtype)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        if cfg.attn_pattern == "local_global":
+            assert cfg.num_layers % 2 == 0
+            p["blocks"] = {
+                "a": _stack_init(lambda k: blk.init_decoder_block(k, cfg),
+                                 k_layers, cfg.num_layers // 2),
+                "b": _stack_init(lambda k: blk.init_decoder_block(k, cfg),
+                                 jax.random.fold_in(k_layers, 1),
+                                 cfg.num_layers // 2),
+            }
+        else:
+            p["blocks"] = _stack_init(lambda k: blk.init_decoder_block(k, cfg),
+                                      k_layers, cfg.num_layers)
+    elif cfg.family == "ssm":
+        p["blocks"] = _stack_init(lambda k: blk.init_mamba_layer(k, cfg),
+                                  k_layers, cfg.num_layers)
+    elif cfg.family == "hybrid":
+        n_groups = cfg.num_layers // cfg.hybrid_period
+        assert n_groups * cfg.hybrid_period == cfg.num_layers
+
+        def group_init(k):
+            return _stack_init(lambda kk: blk.init_mamba_layer(kk, cfg), k,
+                               cfg.hybrid_period)
+
+        p["blocks"] = _stack_init(group_init, k_layers, n_groups)
+        p["shared"] = _stack_init(lambda k: blk.init_decoder_block(k, cfg),
+                                  k_shared, cfg.num_shared_blocks)
+    else:
+        raise ValueError(cfg.family)
+
+    p["final_norm"] = init_rmsnorm(cfg.d_model, cfg.params_dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(k_head, (cfg.d_model, cfg.padded_vocab),
+                                  cfg.params_dtype)
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# caches
+# --------------------------------------------------------------------------- #
+
+
+def init_caches(cfg: ModelConfig, batch: int, s_cache: int) -> Any:
+    """Decode-state pytree matching the stack pattern. ``s_cache`` is the
+    max context; sliding-window layers allocate min(window, s_cache)."""
+    w = min(cfg.sliding_window, s_cache)
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        if cfg.attn_pattern == "local_global":
+            half = cfg.num_layers // 2
+            return {
+                "a": attn_lib.init_cache(batch, w, cfg, half),
+                "b": attn_lib.init_cache(batch, s_cache, cfg, half),
+            }
+        s = w if cfg.attn_pattern == "swa" else s_cache
+        return attn_lib.init_cache(batch, s, cfg, cfg.num_layers)
+    if cfg.family == "ssm":
+        return ssm_lib.init_ssm_cache(batch, cfg, cfg.num_layers)
+    if cfg.family == "hybrid":
+        n_groups = cfg.num_layers // cfg.hybrid_period
+        return {
+            "mamba": jax.tree.map(
+                lambda x: x.reshape((n_groups, cfg.hybrid_period) + x.shape[1:]),
+                ssm_lib.init_ssm_cache(batch, cfg, cfg.num_layers),
+            ),
+            "shared": attn_lib.init_cache(batch, s_cache, cfg, n_groups),
+        }
+    raise ValueError(cfg.family)
+
+
+# --------------------------------------------------------------------------- #
+# trunk
+# --------------------------------------------------------------------------- #
+
+
+def _maybe_remat(fn, cfg: ModelConfig, mode: str):
+    if cfg.remat == "block" and mode == "train":
+        return jax.checkpoint(fn)
+    return fn
+
+
+def _run_stack(params: Params, h: jax.Array, positions: jax.Array,
+               cfg: ModelConfig, mode: str, caches: Any,
+               angles: Optional[jax.Array]) -> Tuple[jax.Array, Any, jax.Array]:
+    """Dispatch on family/pattern; returns (h, new_caches, aux_sum)."""
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        if cfg.attn_pattern == "local_global":
+            def step(h, xs):
+                pa, pb, ca, cb = xs
+                h, nca, aux_a = blk.decoder_block(
+                    pa, h, positions, cfg, local=True, mode=mode,
+                    cache_slice=ca, angles=angles)
+                h, ncb, aux_b = blk.decoder_block(
+                    pb, h, positions, cfg, local=False, mode=mode,
+                    cache_slice=cb, angles=angles)
+                return h, (nca, ncb, aux_a + aux_b)
+
+            xs = (params["blocks"]["a"], params["blocks"]["b"],
+                  caches["a"] if caches else _none_like(params["blocks"]["a"]),
+                  caches["b"] if caches else _none_like(params["blocks"]["b"]))
+            h, (nca, ncb, aux) = jax.lax.scan(_maybe_remat(step, cfg, mode), h, xs)
+            new_caches = {"a": nca, "b": ncb} if caches else None
+            return h, new_caches, jnp.sum(aux)
+
+        local = cfg.attn_pattern == "swa"
+
+        def step(h, xs):
+            pl_, cs = xs
+            h, nc, aux = blk.decoder_block(
+                pl_, h, positions, cfg, local=local, mode=mode,
+                cache_slice=cs, angles=angles)
+            return h, (nc, aux)
+
+        xs = (params["blocks"],
+              caches if caches else _none_like(params["blocks"]))
+        h, (nc, aux) = jax.lax.scan(_maybe_remat(step, cfg, mode), h, xs)
+        return h, (nc if caches else None), jnp.sum(aux)
+
+    if cfg.family == "ssm":
+        def step(h, xs):
+            pl_, cs = xs
+            h, nc = blk.mamba_layer(pl_, h, cfg, mode=mode, cache_slice=cs)
+            return h, nc
+
+        xs = (params["blocks"], caches if caches else _none_like(params["blocks"]))
+        h, nc = jax.lax.scan(_maybe_remat(step, cfg, mode), h, xs)
+        return h, (nc if caches else None), jnp.zeros((), jnp.float32)
+
+    if cfg.family == "hybrid":
+        n_groups = cfg.num_layers // cfg.hybrid_period
+        shared = params["shared"]
+
+        def group_step(h, xs):
+            g_idx, p_group, c_mamba, c_shared = xs
+            p_shared = jax.tree.map(
+                lambda x: x[g_idx % cfg.num_shared_blocks], shared
+            )
+            h, nc_shared, _ = blk.decoder_block(
+                p_shared, h, positions, cfg, local=False, mode=mode,
+                cache_slice=c_shared, angles=angles)
+
+            def inner(h, ys):
+                p_l, c_l = ys
+                h, nc = blk.mamba_layer(p_l, h, cfg, mode=mode, cache_slice=c_l)
+                return h, nc
+
+            h, nc_mamba = jax.lax.scan(inner, h, (p_group, c_mamba))
+            return h, (nc_mamba, nc_shared)
+
+        xs = (jnp.arange(n_groups, dtype=jnp.int32), params["blocks"],
+              caches["mamba"] if caches
+              else jnp.zeros((n_groups, cfg.hybrid_period, 0), jnp.int32),
+              caches["shared"] if caches else _none_like2(n_groups))
+        h, (ncm, ncs) = jax.lax.scan(_maybe_remat(group_step, cfg, mode), h, xs)
+        new_caches = {"mamba": ncm, "shared": ncs} if caches else None
+        return h, new_caches, jnp.zeros((), jnp.float32)
+
+    raise ValueError(cfg.family)
+
+
+def _none_like(stacked: Any):
+    """Scan needs a pytree with a leading axis even when caches are unused."""
+    any_leaf = jax.tree_util.tree_leaves(stacked)[0]
+    n = any_leaf.shape[0]
+    return jnp.zeros((n, 0), jnp.int32)
+
+
+def _none_like2(n: int):
+    return jnp.zeros((n, 0), jnp.int32)
+
+
+# --------------------------------------------------------------------------- #
+# public entry points
+# --------------------------------------------------------------------------- #
+
+
+def _embed(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig
+           ) -> jax.Array:
+    if cfg.external_embeddings:
+        return batch["embeds"].astype(cfg.compute_dtype)
+    h = params["embed"][batch["tokens"]].astype(cfg.compute_dtype)
+    if cfg.scale_embeddings:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+    return pspec.constrain(h, "batch", None, None)
+
+
+def _head(params: Params, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = rmsnorm(params["final_norm"], h, cfg.rms_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bld,vd->blv", h, params["embed"].astype(h.dtype))
+    else:
+        logits = jnp.einsum("bld,dv->blv", h, params["lm_head"].astype(h.dtype))
+    logits = pspec.constrain(logits, "batch", None, "model")
+    logits = logits.astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # padded rows never win: mask to a large negative (keeps softmax exact)
+        v = jnp.arange(cfg.padded_vocab, dtype=jnp.int32)
+        logits = jnp.where(v[None, None, :] < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def _angles_for(batch: Dict[str, jax.Array], positions: jax.Array,
+                cfg: ModelConfig) -> Optional[jax.Array]:
+    if cfg.rope_type != "mrope":
+        return None
+    pos3 = batch.get("positions_3d")
+    if pos3 is None:
+        pos3 = rope_lib.text_positions_3d(positions)
+    return rope_lib.mrope_angles(pos3, cfg.head_dim_, cfg.rope_theta,
+                                 cfg.mrope_sections)
+
+
+def apply(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig
+          ) -> Tuple[jax.Array, jax.Array]:
+    """Training/eval forward: full-sequence logits. Returns (logits, aux)."""
+    h = _embed(params, batch, cfg)
+    B, L = h.shape[0], h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None], (B, L))
+    angles = _angles_for(batch, positions, cfg)
+    h, _, aux = _run_stack(params, h, positions, cfg, "train", None, angles)
+    return _head(params, h, cfg), aux
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token CE (labels = tokens shifted by the caller) + MoE aux."""
+    logits, aux = apply(params, batch, cfg)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    # CE without take_along_axis: gathering along the vocab axis would force
+    # GSPMD to all-gather the (vocab-sharded) logits — ~67 GB/step for gemma2.
+    # iota-compare + masked reduce keeps everything vocab-local; only the
+    # [B, L] partials cross the model axis.
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    v = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    picked = jnp.sum(
+        jnp.where(v == safe[..., None], logits, 0.0), axis=-1
+    )
+    nll = lse - picked
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum(nll * mask) / denom
+    total = ce + 0.01 * aux
+    return total, {"loss": total, "ce": ce, "aux": aux}
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            s_cache: int) -> Tuple[jax.Array, Any]:
+    """Process a prompt; return (last-position logits [B, V], caches)."""
+    h = _embed(params, batch, cfg)
+    B, L = h.shape[0], h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None], (B, L))
+    angles = _angles_for(batch, positions, cfg)
+    caches = init_caches(cfg, B, s_cache)
+    h, caches, _ = _run_stack(params, h, positions, cfg, "prefill", caches, angles)
+    logits = _head(params, h[:, -1:], cfg)
+    return logits[:, 0], caches
+
+
+def decode_step(params: Params, caches: Any, tokens: jax.Array,
+                positions: jax.Array, cfg: ModelConfig,
+                embeds: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Any]:
+    """One decode step. tokens [B, 1] (or embeds [B, 1, D]); positions [B, 1].
+    Returns (logits [B, V], new caches)."""
+    batch = {"tokens": tokens} if embeds is None else {"embeds": embeds}
+    h = _embed(params, batch, cfg)
+    angles = None  # decode uses text positions; mrope reduces to rope
+    h, caches, _ = _run_stack(params, h, positions, cfg, "decode", caches, angles)
+    logits = _head(params, h, cfg)
+    return logits[:, 0], caches

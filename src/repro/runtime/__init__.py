@@ -1,0 +1,3 @@
+from repro.runtime.coordinator import (Coordinator, RunConfig,  # noqa: F401
+                                       StragglerPolicy)
+from repro.runtime.elastic import ElasticPlan, plan_remesh  # noqa: F401

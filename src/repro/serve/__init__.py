@@ -1,0 +1,1 @@
+from repro.serve.engine import MemoryAugmentedEngine, ServeConfig  # noqa: F401

@@ -1,0 +1,164 @@
+"""Memory-augmented batched serving engine — the paper's deployment story.
+
+The engine glues the LM stack to the Valori substrate exactly along the
+paper's §5.3 boundary:
+
+  embed (float, nondeterministic) ──boundary.normalize──▶ MemoryState
+  query (float)                  ──boundary.admit_query──▶ deterministic k-NN
+
+Request lifecycle:
+  1. WRITE path: a document's pooled hidden state (mean of final-layer
+     states) crosses the boundary and is INSERTed through the command log —
+     the audit trail IS the memory (replayable, snapshot-able, hashable).
+  2. READ path: a prompt is embedded the same way; deterministic k-NN
+     returns neighbor ids; their stored token prefixes are prepended as
+     retrieved context (classic RAG conditioning).
+  3. GENERATE: batched prefill + greedy decode with the KV cache.
+
+Everything after the boundary is bit-deterministic: the same request log
+replayed on any host produces the same memory hash AND the same retrieval
+sets, which is the property the paper's §8.1 snapshot-transfer test checks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import boundary, commands, machine, search, snapshot
+from repro.core.contracts import DEFAULT_CONTRACT, PrecisionContract
+from repro.core.state import MemoryState, init_state
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    capacity: int = 4096
+    retrieve_k: int = 4
+    max_new_tokens: int = 32
+    s_cache: int = 512
+    contract: PrecisionContract = DEFAULT_CONTRACT
+    context_tokens: int = 32     # tokens of each retrieved doc to prepend
+
+
+class MemoryAugmentedEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, serve_cfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.sc = serve_cfg
+        self.memory: MemoryState = init_state(
+            serve_cfg.capacity, cfg.d_model, contract=serve_cfg.contract
+        )
+        self.log = commands.empty_log(cfg.d_model, serve_cfg.contract)
+        self.docs: Dict[int, np.ndarray] = {}   # id -> token prefix
+        self._next_id = 0
+
+        self._embed_fn = jax.jit(self._embed_batch)
+        self._prefill = jax.jit(
+            lambda p, b: tf.prefill(p, b, cfg, self.sc.s_cache))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: tf.decode_step(p, c, t, pos, cfg))
+
+    # ------------------------------------------------------------------ #
+    # embedding: pooled final hidden states (pre-head)
+    # ------------------------------------------------------------------ #
+
+    def _embed_batch(self, params, tokens: jax.Array) -> jax.Array:
+        batch = {"tokens": tokens}
+        h = tf._embed(params, batch, self.cfg)
+        B, L = h.shape[:2]
+        positions = jnp.broadcast_to(
+            jnp.arange(L, dtype=jnp.int32)[None], (B, L))
+        angles = tf._angles_for(batch, positions, self.cfg)
+        h, _, _ = tf._run_stack(params, h, positions, self.cfg, "train",
+                                None, angles)
+        return jnp.mean(h.astype(jnp.float32), axis=1)  # [B, D]
+
+    # ------------------------------------------------------------------ #
+    # WRITE path
+    # ------------------------------------------------------------------ #
+
+    def insert_documents(self, token_batches: np.ndarray) -> List[int]:
+        """token_batches [N, L] int32 → ids. Batched through the boundary."""
+        emb = self._embed_fn(self.params, jnp.asarray(token_batches))
+        raw = boundary.normalize_embedding(emb, self.sc.contract)
+        ids = np.arange(self._next_id, self._next_id + len(token_batches),
+                        dtype=np.int64)
+        self._next_id += len(token_batches)
+        batch_log = commands.insert_batch(jnp.asarray(ids), raw,
+                                          self.sc.contract)
+        self.log = self.log.concat(batch_log)
+        self.memory = machine.replay(self.memory, batch_log)
+        for i, tid in enumerate(ids):
+            self.docs[int(tid)] = np.asarray(token_batches[i])
+        return [int(i) for i in ids]
+
+    # ------------------------------------------------------------------ #
+    # READ path
+    # ------------------------------------------------------------------ #
+
+    def retrieve(self, prompt_tokens: np.ndarray, k: Optional[int] = None
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """[B, L] prompts → (ids [B, k], scores [B, k]) — deterministic."""
+        k = k or self.sc.retrieve_k
+        emb = self._embed_fn(self.params, jnp.asarray(prompt_tokens))
+        q_raw = boundary.admit_query(emb, self.sc.contract)
+        ids, scores = search.exact_search(self.memory, q_raw, k)
+        return np.asarray(ids), np.asarray(scores)
+
+    # ------------------------------------------------------------------ #
+    # GENERATE
+    # ------------------------------------------------------------------ #
+
+    def generate(self, prompt_tokens: np.ndarray, *, augment: bool = True
+                 ) -> np.ndarray:
+        """Greedy decode a batch of prompts, optionally memory-augmented.
+        Returns [B, max_new_tokens] int32."""
+        B, L = prompt_tokens.shape
+        if augment and self.memory.count > 0:
+            ids, _ = self.retrieve(prompt_tokens)
+            ctx = np.zeros((B, self.sc.context_tokens), np.int32)
+            for b in range(B):
+                best = int(ids[b, 0])
+                if best >= 0:
+                    doc = self.docs.get(best)
+                    if doc is not None:
+                        n = min(len(doc), self.sc.context_tokens)
+                        ctx[b, -n:] = doc[:n]
+            prompt_tokens = np.concatenate([ctx, prompt_tokens], axis=1)
+            L = prompt_tokens.shape[1]
+
+        logits, caches = self._prefill(self.params,
+                                       {"tokens": jnp.asarray(prompt_tokens)})
+        out = np.zeros((B, self.sc.max_new_tokens), np.int32)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        for t in range(self.sc.max_new_tokens):
+            out[:, t] = np.asarray(tok)[:, 0]
+            pos = jnp.full((B, 1), L + t, jnp.int32)
+            logits, caches = self._decode(self.params, caches, tok, pos)
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return out
+
+    # ------------------------------------------------------------------ #
+    # audit / replay (paper §8.1, §9)
+    # ------------------------------------------------------------------ #
+
+    def memory_hash(self) -> int:
+        from repro.core import hashing
+        return hashing.hash_pytree(self.memory)
+
+    def snapshot_bytes(self) -> bytes:
+        return snapshot.snapshot_bytes(self.memory)
+
+    def replay_log_fresh(self) -> int:
+        """Re-apply the full command log to S_0; returns the hash — must
+        equal memory_hash() (the paper's replayability guarantee)."""
+        from repro.core import hashing
+        fresh = init_state(self.sc.capacity, self.cfg.d_model,
+                           contract=self.sc.contract)
+        fresh = machine.replay(fresh, self.log)
+        return hashing.hash_pytree(fresh)

@@ -1,0 +1,116 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (exact equality —
+integer kernels admit no tolerance)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro  # noqa: F401
+from repro.kernels.qgemm import ops as qgemm_ops
+from repro.kernels.qgemm import ref as qgemm_ref
+from repro.kernels.qtopk import ops as qtopk_ops
+from repro.kernels.qtopk import ref as qtopk_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("nq,nn,d", [
+    (1, 1, 8), (4, 16, 32), (8, 128, 64), (128, 256, 512),
+    (7, 100, 384), (130, 257, 640), (16, 1000, 768), (3, 33, 8192),
+])
+def test_qgemm_exact_vs_oracle(nq, nn, d):
+    q = RNG.integers(-65536, 65537, size=(nq, d)).astype(np.int32)
+    db = RNG.integers(-65536, 65537, size=(nn, d)).astype(np.int32)
+    got = qgemm_ops.qgemm(jnp.asarray(q), jnp.asarray(db))
+    want = qgemm_ref.qgemm_ref(jnp.asarray(q), jnp.asarray(db))
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_qgemm_extreme_values():
+    """Boundary raws (±2^16) at max dim: the overflow-freedom proof, tested."""
+    d = 8192
+    q = np.full((2, d), 65536, np.int32)
+    q[1] = -65536
+    db = np.concatenate([np.full((1, d), 65536, np.int32),
+                         np.full((1, d), -65536, np.int32)])
+    got = qgemm_ops.qgemm(jnp.asarray(q), jnp.asarray(db))
+    want = qgemm_ref.qgemm_ref(jnp.asarray(q), jnp.asarray(db))
+    assert (np.asarray(got) == np.asarray(want)).all()
+    assert int(got[0, 0]) == d * 65536 * 65536
+
+
+def test_qgemm_rejects_oversized_dim():
+    q = np.zeros((2, 16384), np.int32)
+    with pytest.raises(ValueError, match="dim"):
+        qgemm_ops.qgemm(jnp.asarray(q), jnp.asarray(q))
+
+
+@given(st.integers(1, 6), st.integers(4, 200), st.integers(1, 16))
+@settings(max_examples=25, deadline=None)
+def test_qtopk_property(nq, n, k):
+    k = min(k, n)
+    s = RNG.integers(-2**45, 2**45, size=(nq, n)).astype(np.int64)
+    keys = np.arange(n, dtype=np.int32)
+    got_s, got_k = qtopk_ops.qtopk(jnp.asarray(s), jnp.asarray(keys), k)
+    want_s, want_k = qtopk_ref.qtopk_ref(jnp.asarray(s), jnp.asarray(keys), k)
+    assert (np.asarray(got_s) == np.asarray(want_s)).all()
+    assert (np.asarray(got_k) == np.asarray(want_k)).all()
+
+
+def test_qtopk_tie_break_by_key():
+    s = np.zeros((1, 64), np.int64)  # ALL tied
+    keys = np.arange(64, dtype=np.int32)[::-1].copy()  # reversed keys
+    got_s, got_k = qtopk_ops.qtopk(jnp.asarray(s), jnp.asarray(keys), 5)
+    assert np.asarray(got_k)[0].tolist() == [0, 1, 2, 3, 4]
+
+
+def test_qtopk_big_block_sweep():
+    for n in (1024, 2048, 4096, 5000):
+        s = RNG.integers(-2**40, 2**40, size=(4, n)).astype(np.int64)
+        keys = np.arange(n, dtype=np.int32)
+        got = qtopk_ops.qtopk(jnp.asarray(s), jnp.asarray(keys), 16)
+        want = qtopk_ref.qtopk_ref(jnp.asarray(s), jnp.asarray(keys), 16)
+        assert (np.asarray(got[0]) == np.asarray(want[0])).all()
+        assert (np.asarray(got[1]) == np.asarray(want[1])).all()
+
+
+# --------------------------------------------------------------------------- #
+# qboundary: the fused determinism boundary (quantize + integer normalize)
+# --------------------------------------------------------------------------- #
+
+from repro.core.contracts import Q8_8, Q16_16  # noqa: E402
+from repro.kernels.qboundary import ops as qb_ops  # noqa: E402
+from repro.kernels.qboundary import ref as qb_ref  # noqa: E402
+
+
+@pytest.mark.parametrize("n,d", [(1, 8), (4, 16), (128, 384), (257, 768),
+                                 (100, 64)])
+def test_qboundary_bitwise_vs_oracle(n, d):
+    x = RNG.normal(size=(n, d)).astype(np.float32) * 2
+    got = qb_ops.qboundary(jnp.asarray(x), Q16_16)
+    want = qb_ref.qboundary_ref(jnp.asarray(x), Q16_16)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_qboundary_no_norm_and_saturation():
+    x = np.asarray([[0.5, -1.0, 40000.0, -40000.0]], np.float32)
+    got = qb_ops.qboundary(jnp.asarray(x), Q16_16, unit_norm=False)
+    want = qb_ref.qboundary_ref(jnp.asarray(x), Q16_16, unit_norm=False)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    assert int(got[0, 2]) == Q16_16.max_raw  # saturating convert
+
+
+def test_qboundary_narrow_contract_falls_back():
+    x = RNG.normal(size=(8, 16)).astype(np.float32)
+    got = qb_ops.qboundary(jnp.asarray(x), Q8_8)       # int16 storage → ref path
+    want = qb_ref.qboundary_ref(jnp.asarray(x), Q8_8)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_qboundary_unit_norm_property():
+    x = RNG.normal(size=(32, 128)).astype(np.float32) * 3
+    raw = np.asarray(qb_ops.qboundary(jnp.asarray(x), Q16_16))
+    norms = (raw.astype(np.float64) / Q16_16.one)
+    lens = np.sqrt((norms ** 2).sum(-1))
+    assert np.abs(lens - 1.0).max() < 1e-3

@@ -1,0 +1,78 @@
+"""128-bit limb arithmetic vs Python bigints (the Q32.32 'future' contract)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.core import limbs
+
+i64 = st.integers(-(2**62), 2**62 - 1)
+
+
+@given(i64, i64)
+@settings(max_examples=200, deadline=None)
+def test_mul_i64_exact(a, b):
+    w = limbs.mul_i64_i64(jnp.asarray([a], jnp.int64), jnp.asarray([b], jnp.int64))
+    got = limbs.to_python_int(tuple(x[0] for x in w))
+    assert got == a * b
+
+
+# contract-realistic Q32.32 raws: |v| ≤ 2.0 → |raw| ≤ 2^33; the 128-bit
+# accumulator then has ≥ 2^(127-66) = 2^61 elements of headroom
+q32_raw = st.integers(-(2**33), 2**33)
+
+
+@given(st.lists(q32_raw, min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_qdot_q32_wide_exact(xs):
+    a = jnp.asarray(xs, jnp.int64)
+    w = limbs.qdot_q32_wide(a, a)
+    got = limbs.to_python_int(w)
+    want = sum(x * x for x in xs)
+    assert got == want
+
+
+@given(st.lists(i64, min_size=1, max_size=2))
+@settings(max_examples=50, deadline=None)
+def test_qdot_extreme_magnitudes_small_n(xs):
+    """Full int64 range is exact while the true sum fits 128 bits (n ≤ 2)."""
+    a = jnp.asarray(xs, jnp.int64)
+    got = limbs.to_python_int(limbs.qdot_q32_wide(a, a))
+    assert got == sum(x * x for x in xs)
+
+
+@given(st.lists(q32_raw, min_size=2, max_size=32))
+@settings(max_examples=30, deadline=None)
+def test_wide_sum_order_invariant(xs):
+    """The paper's argument extended to 128 bits: any permutation, same bits."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(xs, jnp.int64)
+    b = jnp.asarray(xs[::-1], jnp.int64)
+    base = limbs.to_python_int(limbs.qdot_q32_wide(a, a))
+    perm = rng.permutation(len(xs))
+    ap = jnp.asarray(np.asarray(xs)[perm], jnp.int64)
+    assert limbs.to_python_int(limbs.qdot_q32_wide(ap, ap)) == base
+
+
+def test_q32_dot_renormalize_and_saturate():
+    # small values: exact renormalization
+    one = 1 << 32  # Q32.32 representation of 1.0
+    a = jnp.asarray([one, one // 2], jnp.int64)
+    out = int(limbs.q32_dot_to_q32(a, a))
+    want = (one * one + (one // 2) ** 2) >> 32
+    assert out == want
+    # huge values: saturates rather than wrapping
+    big = jnp.asarray([2**62 - 1] * 4, jnp.int64)
+    assert int(limbs.q32_dot_to_q32(big, big)) == 2**63 - 1
+    neg = jnp.asarray([-(2**62)] * 4, jnp.int64)
+    assert int(limbs.q32_dot_to_q32(neg, big)) == -(2**63)
+
+
+def test_wide_add_neg_roundtrip():
+    a = limbs.from_int64(jnp.asarray([12345678901234], jnp.int64))
+    na = limbs.wide_neg(a)
+    z = limbs.wide_add(a, na)
+    assert limbs.to_python_int(tuple(x[0] for x in z)) == 0

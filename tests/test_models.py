@@ -1,0 +1,156 @@
+"""Model-stack correctness beyond smoke: cache-decode consistency vs
+teacher-forced forward, SSD chunked == recurrent, rope/mrope equivalences."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro  # noqa: F401
+from repro.configs import get_reduced_config
+from repro.models import transformer as tf
+from repro.models.layers import rope as rope_lib
+from repro.models.layers import ssm as ssm_lib
+
+
+@pytest.mark.parametrize("arch", ["h2o_danube_1_8b", "gemma2_2b",
+                                  "mamba2_130m", "zamba2_2_7b"])
+def test_decode_matches_teacher_forcing(arch):
+    """Greedy multi-step decode through the cache must equal slicing the
+    teacher-forced full forward at each position."""
+    cfg = get_reduced_config(arch)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    B, L, extra = 2, 16, 4
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, cfg.vocab_size, (B, L + extra)).astype(np.int32)
+
+    # teacher-forced logits over the whole sequence
+    full_logits, _ = tf.apply(params, {"tokens": jnp.asarray(tokens)}, cfg)
+
+    # prefill on the first L, then decode the next `extra` with real tokens
+    last, caches = tf.prefill(params, {"tokens": jnp.asarray(tokens[:, :L])},
+                              cfg, s_cache=L + extra + 4)
+    np.testing.assert_allclose(np.asarray(last),
+                               np.asarray(full_logits[:, L - 1]),
+                               rtol=3e-2, atol=3e-2)
+    for t in range(extra - 1):
+        pos = jnp.full((B, 1), L + t, jnp.int32)
+        step_logits, caches = tf.decode_step(
+            params, caches, jnp.asarray(tokens[:, L + t:L + t + 1]), pos, cfg)
+        np.testing.assert_allclose(
+            np.asarray(step_logits), np.asarray(full_logits[:, L + t]),
+            rtol=3e-2, atol=3e-2,
+            err_msg=f"{arch}: decode diverged at step {t}")
+
+
+def test_ssd_chunked_equals_recurrence():
+    """The chunked (matmul-form) SSD must equal the token-by-token recurrence."""
+    b, l, h, p, g, n = 2, 32, 4, 8, 1, 16
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(b, l, h, p)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.normal(size=(b, l, h)), jnp.float32))
+    A = -jnp.exp(jnp.asarray(rng.normal(size=(h,)), jnp.float32) * 0.3)
+    B = jnp.asarray(rng.normal(size=(b, l, g, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, l, g, n)), jnp.float32)
+
+    y_chunk, final_chunk = ssm_lib.ssd(x, dt, A, B, C, chunk=8)
+
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(l):
+        y_t, state = ssm_lib.ssd_decode_step(
+            state, x[:, t], dt[:, t], A, B[:, t], C[:, t])
+        ys.append(y_t)
+    y_rec = jnp.stack(ys, axis=1)
+
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_rec),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final_chunk), np.asarray(state),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_equals_naive_attention():
+    """f32 so the only difference is the algorithm (bf16 end-to-end adds
+    reduction-order noise ~0.3 in logits across 4 layers — not a bug, but it
+    would mask one). The layer-level agreement here is ~1e-7."""
+    from repro.models.layers import attention as att
+    cfg = dataclasses.replace(get_reduced_config("h2o_danube_1_8b"),
+                              dtype="float32")
+    params = att.init_attention(jax.random.PRNGKey(2), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 32, cfg.d_model),
+                          jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(32, dtype=jnp.int32)[None], (2, 32))
+    for local in (False, True):
+        o_naive, _ = att.attention(
+            params, x, pos, dataclasses.replace(cfg, attn_impl="naive"),
+            local=local, mode="train")
+        o_flash, _ = att.attention(
+            params, x, pos,
+            dataclasses.replace(cfg, attn_impl="flash", flash_q_chunk=8,
+                                flash_kv_chunk=8),
+            local=local, mode="train")
+        np.testing.assert_allclose(np.asarray(o_naive), np.asarray(o_flash),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_mrope_reduces_to_rope_for_text():
+    """For equal (t,h,w) position streams, M-RoPE == standard RoPE exactly."""
+    positions = jnp.arange(16, dtype=jnp.int32)[None]
+    std = rope_lib.rope_angles(positions, 32, 10_000.0)
+    m = rope_lib.mrope_angles(rope_lib.text_positions_3d(positions), 32,
+                              10_000.0, (8, 4, 4))
+    # mrope permutes frequency slots across sections; applying both to a
+    # vector must give the same attention scores — check via inner products
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 16, 2, 32))
+    a = rope_lib.apply_rope(x, std)
+    b = rope_lib.apply_rope(x, m)
+    # scores between positions i,j depend only on angle differences, which
+    # match per-frequency; for identical streams the angle TABLES themselves
+    # must be a permutation-free match
+    np.testing.assert_allclose(np.sort(np.asarray(std), axis=-1),
+                               np.sort(np.asarray(m), axis=-1), rtol=1e-6)
+
+
+def test_sliding_window_masks_long_range():
+    """With window w, logits at position p must not depend on tokens < p-w."""
+    cfg = dataclasses.replace(get_reduced_config("h2o_danube_1_8b"),
+                              sliding_window=8, attn_impl="naive")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    tok = rng.integers(0, cfg.vocab_size, (1, 24)).astype(np.int32)
+    tok2 = tok.copy()
+    tok2[0, :4] = (tok2[0, :4] + 7) % cfg.vocab_size  # perturb far past
+    la, _ = tf.apply(params, {"tokens": jnp.asarray(tok)}, cfg)
+    lb, _ = tf.apply(params, {"tokens": jnp.asarray(tok2)}, cfg)
+    # the last position (23) sees only positions ≥ 16 through EVERY layer
+    # after ≥1 window hops information from <4 could creep in layer by layer;
+    # with 4 layers × window 8, receptive field ≈ 32 > 24, so instead check
+    # position 11 in a 1-layer variant
+    cfg1 = dataclasses.replace(cfg, num_layers=1)
+    p1 = tf.init_params(cfg1, jax.random.PRNGKey(0))
+    la, _ = tf.apply(p1, {"tokens": jnp.asarray(tok)}, cfg1)
+    lb, _ = tf.apply(p1, {"tokens": jnp.asarray(tok2)}, cfg1)
+    np.testing.assert_allclose(np.asarray(la[0, -1]), np.asarray(lb[0, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_zigzag_equals_naive_attention():
+    """The work-balanced causal path must be exact (f32, layer level)."""
+    from repro.models.layers import attention as att
+    cfg = dataclasses.replace(get_reduced_config("codeqwen1_5_7b"),
+                              dtype="float32")
+    params = att.init_attention(jax.random.PRNGKey(2), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 64, cfg.d_model),
+                          jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(64, dtype=jnp.int32)[None], (2, 64))
+    o_naive, _ = att.attention(
+        params, x, pos, dataclasses.replace(cfg, attn_impl="naive"),
+        local=False, mode="train")
+    o_zig, _ = att.attention(
+        params, x, pos,
+        dataclasses.replace(cfg, attn_impl="latency", flash_q_chunk=8,
+                            flash_kv_chunk=8),
+        local=False, mode="train")
+    np.testing.assert_allclose(np.asarray(o_naive), np.asarray(o_zig),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,138 @@
+"""State machine F / replay / snapshot / hashing (paper §3.1, §5.2, §8.1)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro  # noqa: F401
+from repro.core import boundary, commands, hashing, machine, search, snapshot
+from repro.core.state import init_state, slot_of_id
+
+D = 16
+
+
+def _mk_vecs(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return boundary.normalize_embedding(
+        rng.normal(size=(n, D)).astype(np.float32))
+
+
+def _mixed_log(n=24, seed=0):
+    vecs = _mk_vecs(n, seed)
+    ids = jnp.arange(n, dtype=jnp.int64)
+    log = commands.insert_batch(ids, vecs)
+    log = log.concat(commands.delete_cmd(3, D))
+    log = log.concat(commands.link_cmd(1, 2, D))
+    log = log.concat(commands.link_cmd(2, 4, D))
+    log = log.concat(commands.unlink_cmd(1, 2, D))
+    log = log.concat(commands.set_meta_cmd(5, 1, 42, D))
+    log = log.concat(commands.insert_cmd(3, np.asarray(vecs[0])))  # re-insert
+    return log
+
+
+def test_replay_chunking_invariance():
+    log = _mixed_log()
+    full = machine.replay(init_state(64, D), log)
+    h = hashing.hash_pytree(full)
+    for chunk in (1, 2, 5, 7, 100):
+        s = machine.apply_chunked(init_state(64, D), log, chunk)
+        assert hashing.hash_pytree(s) == h, f"chunk={chunk} diverged"
+
+
+def test_version_always_advances():
+    log = _mixed_log()
+    s = machine.replay(init_state(64, D), log)
+    assert int(s.version) == len(log)
+
+
+def test_insert_upsert_and_delete_semantics():
+    s = init_state(8, D)
+    v = _mk_vecs(3)
+    s = machine.replay(s, commands.insert_batch(
+        jnp.asarray([10, 20, 30], jnp.int64), v))
+    assert int(s.count) == 3
+    # upsert: same id, new vector — count unchanged, slot reused
+    s2 = machine.replay(s, commands.insert_cmd(20, np.asarray(v[0])))
+    assert int(s2.count) == 3
+    slot = int(slot_of_id(s2, jnp.int64(20)))
+    assert (np.asarray(s2.vectors[slot]) == np.asarray(v[0])).all()
+    # delete frees the slot for reuse
+    s3 = machine.replay(s2, commands.delete_cmd(10, D))
+    assert int(s3.count) == 2
+    s4 = machine.replay(s3, commands.insert_cmd(99, np.asarray(v[2])))
+    assert int(s4.count) == 3
+    assert int(slot_of_id(s4, jnp.int64(99))) == 0  # lowest free slot reused
+
+
+def test_arena_full_rejects_deterministically():
+    s = init_state(4, D)
+    v = _mk_vecs(6)
+    log = commands.insert_batch(jnp.arange(6, dtype=jnp.int64), v)
+    s = machine.replay(s, log)
+    assert int(s.count) == 4
+    assert int(s.version) == 6  # rejected commands still advance time
+
+
+def test_snapshot_roundtrip_bit_exact():
+    s = machine.replay(init_state(64, D), _mixed_log())
+    blob = snapshot.snapshot_bytes(s)
+    s2, h = snapshot.restore_bytes(blob)
+    assert h == hashing.hash_pytree(s)
+    for f in s.__dataclass_fields__:
+        if f == "contract_name":
+            continue
+        assert (np.asarray(getattr(s, f)) == np.asarray(getattr(s2, f))).all()
+
+
+def test_snapshot_detects_corruption():
+    s = machine.replay(init_state(64, D), _mixed_log())
+    blob = bytearray(snapshot.snapshot_bytes(s))
+    blob[300] ^= 0x40  # flip one bit inside a payload
+    with pytest.raises(ValueError, match="hash mismatch"):
+        snapshot.restore_bytes(bytes(blob))
+
+
+def test_host_and_device_hash_agree():
+    s = machine.replay(init_state(64, D), _mixed_log())
+    assert int(hashing.hash_state_device(s)) == hashing.hash_pytree(s)
+
+
+def test_hash_sensitive_to_content_and_order():
+    s = machine.replay(init_state(64, D), _mixed_log())
+    h = hashing.hash_pytree(s)
+    # flipping one element changes the hash
+    s2 = dataclasses.replace(
+        s, vectors=s.vectors.at[0, 0].add(1))
+    assert hashing.hash_pytree(s2) != h
+    # permuting two rows changes the hash (order-sensitive mix)
+    v = s.vectors
+    s3 = dataclasses.replace(
+        s, vectors=v.at[0].set(v[1]).at[1].set(v[0]))
+    assert hashing.hash_pytree(s3) != h
+
+
+@given(st.lists(st.integers(0, 500), min_size=1, max_size=40, unique=True))
+@settings(max_examples=20, deadline=None)
+def test_replay_determinism_property(ids):
+    """Any id set, any chunking: Apply(S0, C) is a pure function (paper §3.1)."""
+    vecs = _mk_vecs(len(ids), seed=sum(ids) % 1000)
+    log = commands.insert_batch(jnp.asarray(ids, jnp.int64), vecs)
+    a = machine.replay(init_state(64, D), log)
+    b = machine.apply_chunked(init_state(64, D), log, 3)
+    assert hashing.hash_pytree(a) == hashing.hash_pytree(b)
+
+
+def test_search_excludes_tombstones():
+    v = _mk_vecs(10)
+    s = machine.replay(init_state(32, D),
+                       commands.insert_batch(jnp.arange(10, dtype=jnp.int64), v))
+    q = boundary.admit_query(np.asarray(v[4], np.float64))
+    ids, _ = search.exact_search(s, q[None], k=1)
+    assert int(ids[0, 0]) == 4
+    s = machine.replay(s, commands.delete_cmd(4, D))
+    ids, _ = search.exact_search(s, q[None], k=1)
+    assert int(ids[0, 0]) != 4
