@@ -1,0 +1,79 @@
+"""Ingest throughput: scan-replay vs vectorized bulk-apply (DESIGN.md §3).
+
+The write path is the throughput wall on the road to "millions of users":
+every INSERT in ``machine.replay`` pays a full incremental HNSW insert inside
+a sequential ``lax.scan``. ``machine.bulk_apply`` ingests the same log in
+batched form while staying hash-identical. This benchmark reports
+commands/sec for both paths on pure-INSERT logs at n ∈ {1k, 10k} and checks
+the equivalence hash on every run — a throughput number for a state that
+diverged from the replay semantics would be meaningless.
+
+Run directly (``python benchmarks/bench_ingest.py [--smoke]``) or via
+``benchmarks.run``. ``--smoke`` shrinks the log sizes so CI can exercise the
+whole path in seconds.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+import repro  # noqa: F401
+import jax
+import jax.numpy as jnp
+from benchmarks.common import emit
+from repro.core import boundary, commands, hashing, machine
+from repro.core.state import init_state
+
+DIM = 32
+HNSW_LEVELS = 6  # ~log2(10k)/2: realistic level budget for the 10k tier
+
+
+def _ingest_log(n: int):
+    rng = np.random.default_rng(0)
+    vecs = boundary.normalize_embedding(
+        rng.normal(size=(n, DIM)).astype(np.float32))
+    return commands.insert_batch(jnp.arange(n, dtype=jnp.int64), vecs)
+
+
+def _time(fn, state, log):
+    out = fn(state, log)  # compile warmup at the measured shape
+    jax.block_until_ready(out.version)
+    t0 = time.perf_counter()
+    out = fn(state, log)
+    jax.block_until_ready(out.version)
+    return time.perf_counter() - t0, out
+
+
+def run(sizes=(1_000, 10_000)) -> None:
+    for n in sizes:
+        capacity = max(64, int(n * 1.2))
+        log = _ingest_log(n)
+        state = init_state(capacity, DIM, hnsw_levels=HNSW_LEVELS)
+
+        t_replay, s_replay = _time(machine.replay, state, log)
+        t_bulk, s_bulk = _time(machine.bulk_apply, state, log)
+
+        h_replay = hashing.hash_pytree(s_replay)
+        h_bulk = hashing.hash_pytree(s_bulk)
+        equal = h_replay == h_bulk
+        ratio = t_replay / t_bulk
+
+        emit(f"ingest_replay_n{n}", t_replay / n * 1e6,
+             f"cmds_per_s={n / t_replay:.0f}")
+        emit(f"ingest_bulk_n{n}", t_bulk / n * 1e6,
+             f"cmds_per_s={n / t_bulk:.0f};speedup={ratio:.2f}x;"
+             f"hash_equal={equal}")
+        if not equal:
+            # RuntimeError, not SystemExit: benchmarks/run.py counts module
+            # failures via `except Exception` and must keep running
+            raise RuntimeError(
+                f"bulk_apply diverged from replay at n={n}: "
+                f"{h_replay:#x} != {h_bulk:#x}")
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv[1:]
+    print("name,us_per_call,derived")
+    run(sizes=(64, 256) if smoke else (1_000, 10_000))

@@ -13,12 +13,14 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_contracts, bench_divergence, bench_latency,
-                            bench_recall, bench_roofline, bench_snapshot)
+    from benchmarks import (bench_contracts, bench_divergence, bench_ingest,
+                            bench_latency, bench_recall, bench_roofline,
+                            bench_snapshot)
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_divergence, bench_contracts, bench_recall,
-                bench_snapshot, bench_latency, bench_roofline):
+                bench_snapshot, bench_latency, bench_ingest,
+                bench_roofline):
         try:
             mod.run()
         except Exception as e:  # noqa: BLE001

@@ -27,11 +27,12 @@ engine = MemoryAugmentedEngine(cfg, params, ServeConfig(
 
 rng = np.random.default_rng(1)
 
-# ingest a corpus of 48 "documents" (token sequences)
+# ingest a corpus of 48 "documents" (token sequences) — the WRITE path goes
+# through machine.bulk_apply (vectorized), hash-identical to scan-replay
 docs = rng.integers(0, cfg.vocab_size, (48, 48), dtype=np.int32)
 ids = engine.insert_documents(docs)
 h0 = engine.memory_hash()
-print(f"[ingest] {len(ids)} docs → memory hash {h0:#x}")
+print(f"[ingest] {len(ids)} docs → memory hash {h0:#x} (bulk-apply)")
 
 # batched requests
 prompts = rng.integers(0, cfg.vocab_size, (6, 12), dtype=np.int32)
@@ -43,7 +44,9 @@ completions = engine.generate(prompts, augment=True)
 print(f"[generate] {completions.shape} tokens in {time.time()-t0:.2f}s")
 print(completions[:2])
 
-# the regulated-sector property: replay the audit log, get the same memory
+# the regulated-sector property: replay the audit log, get the same memory.
+# the memory was built by the vectorized bulk path, so this also certifies
+# bulk_apply ≡ scan-replay on this log (DESIGN.md §3 equivalence contract)
 assert engine.replay_log_fresh() == h0
 print("[audit] command-log replay reproduces the memory hash ✓")
 

@@ -19,8 +19,8 @@ import repro  # noqa: F401,E402
 from repro.core import boundary, commands, distributed, machine, search  # noqa: E402
 from repro.core.state import init_state  # noqa: E402
 
-mesh = jax.make_mesh((4, 2), ("model", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.core import compat  # noqa: E402
+mesh = compat.make_mesh((4, 2), ("model", "data"))
 
 D, N, K = 32, 512, 7
 rng = np.random.default_rng(0)

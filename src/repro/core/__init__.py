@@ -6,12 +6,14 @@ Public surface:
   boundary    — the float→fixed determinism boundary (paper §5.3)
   state       — MemoryState arena pytree (paper §5.2)
   commands    — integer-encoded replayable command log (paper §3.1)
-  machine     — the pure transition function F + replay (paper §3.1)
+  machine     — the pure transition function F + replay (paper §3.1) and
+                the hash-identical vectorized bulk_apply (DESIGN.md §3)
   hashing     — platform-invariant tree hashes (paper §8.1)
   snapshot    — serialize/restore with hash verification (paper §8.1)
   search      — exact deterministic k-NN (wide integer scores)
   hnsw        — deterministic HNSW (paper §7), TPU-adapted
   distributed — pod-scale sharded memory over shard_map (DESIGN.md §2)
+  compat      — version-bridging shims over moved JAX APIs
 """
 from repro.core import (boundary, commands, contracts, distributed, fixedpoint,
                         hashing, hnsw, machine, search, snapshot, state)

@@ -1,0 +1,103 @@
+"""Version-bridging shims over the handful of JAX APIs that moved.
+
+The repo targets the modern surface (``jax.shard_map``, ``jax.set_mesh``,
+``jax.sharding.AxisType``, ``jax.sharding.get_abstract_mesh``); the pinned
+toolchain may ship an older JAX where those live elsewhere or do not exist.
+Everything here resolves the best available implementation at import time
+with guarded ``getattr`` — no behavior change on new JAX.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Sequence
+
+import jax
+
+# --------------------------------------------------------------------------- #
+# shard_map: jax.shard_map (new) → jax.experimental.shard_map (old)
+# --------------------------------------------------------------------------- #
+
+_new_shard_map = getattr(jax, "shard_map", None)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False,
+              **kwargs):
+    """``jax.shard_map`` with the new signature, on any JAX.
+
+    Old JAX calls it ``jax.experimental.shard_map.shard_map`` and spells
+    ``check_vma`` as ``check_rep``; the new API's ``axis_names`` (axes that
+    are manual inside the body) maps to the old API's complementary
+    ``auto`` set — dropping it would silently manualize every mesh axis.
+    """
+    if _new_shard_map is not None:
+        return _new_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=check_vma,
+                              **kwargs)
+    from jax.experimental.shard_map import shard_map as _old
+    axis_names = kwargs.pop("axis_names", None)
+    if kwargs:  # loud, not silent: dropped options would skew by version
+        raise TypeError(f"compat.shard_map: unsupported on this JAX: "
+                        f"{sorted(kwargs)}")
+    auto = (frozenset(mesh.axis_names) - frozenset(axis_names)
+            if axis_names is not None else frozenset())
+    return _old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=check_vma, auto=auto)
+
+
+# --------------------------------------------------------------------------- #
+# mesh construction / ambient mesh context
+# --------------------------------------------------------------------------- #
+
+
+def make_mesh(shape: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(tuple(shape), tuple(axis_names),
+                             axis_types=(axis_type.Auto,) * len(shape))
+    return jax.make_mesh(tuple(shape), tuple(axis_names))
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """``jax.set_mesh`` context on new JAX; ``jax.sharding.use_mesh`` on the
+    mid-range versions that have it; ``with mesh:`` (thread-resource mesh)
+    on old JAX. Either way :func:`get_abstract_mesh` sees it."""
+    setter = getattr(jax, "set_mesh", None) or getattr(
+        jax.sharding, "use_mesh", None)
+    if setter is not None:
+        with setter(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+def pallas_tpu_compiler_params():
+    """``pltpu.CompilerParams`` (new name) or ``pltpu.TPUCompilerParams``."""
+    from jax.experimental.pallas import tpu as pltpu
+    return getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def cost_analysis(compiled):
+    """``compiled.cost_analysis()`` as a dict on every JAX version (older
+    releases return a one-element list of dicts)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        return ca[0] if ca else {}
+    return ca or {}
+
+
+def get_abstract_mesh():
+    """The ambient mesh (or None): ``jax.sharding.get_abstract_mesh`` when it
+    exists, else the thread-resources physical mesh set by ``with mesh:``."""
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        m = getter()
+        return m if (m is not None and m.axis_names) else None
+    try:
+        from jax.interpreters.pxla import thread_resources
+        m = thread_resources.env.physical_mesh
+        return m if (m is not None and m.axis_names) else None
+    except Exception:  # pragma: no cover — very old/new layouts
+        return None

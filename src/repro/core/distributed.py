@@ -34,6 +34,7 @@ from repro.core import machine, search
 from repro.core.commands import NOP, CommandLog
 from repro.core.hnsw import splitmix64
 from repro.core.state import MemoryState, init_state
+from repro.core import compat
 
 INF = search.INF
 
@@ -166,7 +167,7 @@ def distributed_replay(mesh: Mesh, axis: str, state: MemoryState,
     hash-routed, so shards never contend)."""
     specs = state_specs(axis, state.contract_name)
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=(specs, _log_specs(axis)),
+    @partial(compat.shard_map, mesh=mesh, in_specs=(specs, _log_specs(axis)),
              out_specs=specs, check_vma=False)
     def _replay(local_state: MemoryState, local_log: CommandLog) -> MemoryState:
         local_log = jax.tree.map(lambda a: a[0], local_log)  # drop shard dim
@@ -175,6 +176,67 @@ def distributed_replay(mesh: Mesh, axis: str, state: MemoryState,
         return _to_shardview(out)
 
     return _replay(state, routed_log)
+
+
+def distributed_bulk_apply(mesh: Mesh, axis: str, state: MemoryState,
+                           routed_log: CommandLog, *, ef_construction: int = 32
+                           ) -> MemoryState:
+    """Apply routed per-shard logs through ``machine.bulk_apply``.
+
+    Each shard is its own little Valori kernel, so bulk-apply runs per shard
+    on its local slice — the segmentation driver is host-side, which is
+    exactly where the routing table already lives. The result is
+    hash-identical to ``distributed_replay`` on the same routed log, shard
+    by shard (the per-shard equivalence is machine.bulk_apply's contract);
+    the NOP padding ``route_commands`` adds folds into a version bump.
+
+    Trade-off vs ``distributed_replay``: shards are processed sequentially
+    on the host and the result is materialized unsharded (≈1 extra arena
+    copy on the default device) before the final re-shard — the ingest win
+    is per-shard vectorization, not cross-shard parallelism. For arenas too
+    big to stage on one host, use ``distributed_replay``; moving the
+    segmentation device-side is future work.
+    """
+    n_shards = mesh.shape[axis]
+    cap = state.capacity // n_shards
+
+    shards = []
+    for s in range(n_shards):
+        local = dataclasses.replace(
+            state,
+            vectors=state.vectors[s * cap:(s + 1) * cap],
+            ids=state.ids[s * cap:(s + 1) * cap],
+            valid=state.valid[s * cap:(s + 1) * cap],
+            links=state.links[s * cap:(s + 1) * cap],
+            meta=state.meta[s * cap:(s + 1) * cap],
+            hnsw_neighbors=state.hnsw_neighbors[:, s * cap:(s + 1) * cap],
+            hnsw_levels=state.hnsw_levels[s * cap:(s + 1) * cap],
+            hnsw_entry=state.hnsw_entry[s], cursor=state.cursor[s],
+            count=state.count[s], version=state.version[s],
+        )
+        local_log = jax.tree.map(lambda a, s=s: a[s], routed_log)
+        shards.append(machine.bulk_apply(local, local_log,
+                                         ef_construction=ef_construction))
+
+    def cat(field):
+        return jnp.concatenate([getattr(sh, field) for sh in shards], axis=0)
+
+    def stack_scalar(field):
+        return jnp.stack([getattr(sh, field) for sh in shards])
+
+    out = dataclasses.replace(
+        state,
+        vectors=cat("vectors"), ids=cat("ids"), valid=cat("valid"),
+        links=cat("links"), meta=cat("meta"),
+        hnsw_neighbors=jnp.concatenate(
+            [sh.hnsw_neighbors for sh in shards], axis=1),
+        hnsw_levels=cat("hnsw_levels"),
+        hnsw_entry=stack_scalar("hnsw_entry"), cursor=stack_scalar("cursor"),
+        count=stack_scalar("count"), version=stack_scalar("version"),
+    )
+    specs = state_specs(axis, state.contract_name)
+    return jax.tree.map(
+        lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)), out, specs)
 
 
 def distributed_hnsw_search(mesh: Mesh, axis: str, state: MemoryState,
@@ -191,7 +253,7 @@ def distributed_hnsw_search(mesh: Mesh, axis: str, state: MemoryState,
     qspec = P(query_axis, None)
     out_spec = P(query_axis, None)
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=(specs, qspec),
+    @partial(compat.shard_map, mesh=mesh, in_specs=(specs, qspec),
              out_specs=(out_spec, out_spec), check_vma=False)
     def _search(local_state: MemoryState, q: jax.Array):
         local = _to_local(local_state)
@@ -225,7 +287,7 @@ def distributed_search(mesh: Mesh, axis: str, state: MemoryState,
     qspec = P(query_axis, None)
     out_spec = P(query_axis, None)
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=(specs, qspec),
+    @partial(compat.shard_map, mesh=mesh, in_specs=(specs, qspec),
              out_specs=(out_spec, out_spec), check_vma=False)
     def _search(local_state: MemoryState, q: jax.Array):
         ids, scores = search.exact_search(

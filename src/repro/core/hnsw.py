@@ -117,7 +117,9 @@ def _sort_dedup(d: jax.Array, s: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 
 def greedy_step_level(state: MemoryState, q_raw: jax.Array, level: jax.Array,
-                      start_slot: jax.Array) -> jax.Array:
+                      start_slot: jax.Array,
+                      neighbors_full: jax.Array | None = None,
+                      static_level: int | None = None) -> jax.Array:
     """Walk to the locally-nearest node at ``level`` starting from start_slot."""
 
     def cond(carry):
@@ -126,9 +128,11 @@ def greedy_step_level(state: MemoryState, q_raw: jax.Array, level: jax.Array,
 
     def body(carry):
         cur, cur_d, _, it = carry
-        nbrs = jax.lax.dynamic_index_in_dim(
-            state.hnsw_neighbors, level, axis=0, keepdims=False
-        )[cur]  # [degree]
+        nbrs = (neighbors_full[static_level, cur]
+                if neighbors_full is not None
+                else jax.lax.dynamic_index_in_dim(
+                    state.hnsw_neighbors, level, axis=0, keepdims=False
+                )[cur])  # [degree]
         nd = _wide_l2(state, q_raw, nbrs)
         best = jnp.argmin(nd)  # ties → lowest index; nbr lists are sorted by (d,slot)
         best_d = nd[best]
@@ -157,11 +161,25 @@ def search_layer(
     level: jax.Array,
     ef: int,
     max_iters: int | None = None,
+    fast: bool = False,
+    neighbors_l: jax.Array | None = None,
+    neighbors_full: jax.Array | None = None,
+    static_level: int | None = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """ef-beam search at ``level``; returns (dists[ef], slots[ef]) sorted.
 
     Carries fixed-size arrays + a capacity-sized expansion mask. Every merge
     is a (distance, slot) sort — deterministic including ties.
+
+    ``fast=True`` (the bulk-ingest construction path) computes the identical
+    beam with less work per expansion: the merge is a single sort — the beam
+    and the fresh-masked neighbor row are disjoint by construction (``seen``
+    excludes every slot ever beamed; graph rows never repeat a slot), so the
+    dedup pass of ``_sort_dedup`` can never fire — expansions yielding no
+    fresh neighbors skip the merge entirely (merging an all-INF row is the
+    identity on a sorted beam), and expansion state rides in an ef-sized
+    flag vector permuted alongside the beam instead of a capacity-sized
+    scatter mask.
     """
     capacity = state.capacity
     degree = state.hnsw_degree
@@ -173,11 +191,65 @@ def search_layer(
     d0 = d0.at[0].set(_wide_l2(state, q_raw, entry_slot[None])[0])
     s0 = s0.at[0].set(entry_slot.astype(jnp.int32))
     seen0 = jnp.zeros((capacity,), jnp.bool_).at[entry_slot].set(True)
-    expanded0 = jnp.zeros((capacity,), jnp.bool_)
 
-    neighbors_l = jax.lax.dynamic_index_in_dim(
-        state.hnsw_neighbors, level, axis=0, keepdims=False
-    )  # [capacity, degree]
+    if neighbors_full is not None:
+        # bulk path: row gathers go straight into the full [levels, capacity,
+        # degree] array at a static level — no per-call slice materialization
+        def row_of(cur):
+            return neighbors_full[static_level, cur]
+    else:
+        if neighbors_l is None:
+            neighbors_l = jax.lax.dynamic_index_in_dim(
+                state.hnsw_neighbors, level, axis=0, keepdims=False
+            )  # [capacity, degree]
+        _nl = neighbors_l
+
+        def row_of(cur):
+            return _nl[cur]
+
+    if fast:
+        exp0 = jnp.zeros((ef,), jnp.bool_)
+
+        def fcond(carry):
+            d, s, exp, seen, it = carry
+            return jnp.any((~exp) & (d < INF)) & (it < max_iters)
+
+        def fbody(carry):
+            d, s, exp, seen, it = carry
+            unexp = (~exp) & (d < INF)
+            pick = jnp.argmax(unexp)  # beam sorted ⇒ first True is nearest
+            cur = jnp.clip(s[pick], 0, capacity - 1)
+            exp = exp.at[pick].set(True)
+            nbrs = row_of(cur)  # [degree]
+            nbr_safe = jnp.clip(nbrs, 0, capacity - 1)
+            fresh = (nbrs >= 0) & (~seen[nbr_safe])
+
+            def merge(ops):
+                d, s, exp, seen = ops
+                nd = _wide_l2(state, q_raw, nbrs)
+                nd = jnp.where(fresh, nd, INF)
+                ns = jnp.where(fresh, nbr_safe, jnp.int32(2**31 - 1))
+                # -1 entries route to index `capacity` and are dropped: the
+                # slow path's clip-to-0 scatter writes conflicting values at
+                # slot 0 (its dedup pass absorbs the fallout); here the beam
+                # must stay duplicate-free, so mark only real neighbors
+                tgt = jnp.where(nbrs >= 0, nbr_safe, jnp.int32(capacity))
+                seen = seen.at[tgt].set(True, mode="drop")
+                md = jnp.concatenate([d, nd])
+                ms = jnp.concatenate([s, ns])
+                mf = jnp.concatenate([exp, jnp.zeros((degree,), jnp.bool_)])
+                md, ms, mf = jax.lax.sort((md, ms, mf), num_keys=2)
+                return md[:ef], ms[:ef], mf[:ef], seen
+
+            d, s, exp, seen = jax.lax.cond(
+                jnp.any(fresh), merge, lambda o: o, (d, s, exp, seen))
+            return d, s, exp, seen, it + 1
+
+        d, s, _, _, _ = jax.lax.while_loop(
+            fcond, fbody, (d0, s0, exp0, seen0, jnp.int32(0)))
+        return d, s
+
+    expanded0 = jnp.zeros((capacity,), jnp.bool_)
 
     def cond(carry):
         d, s, seen, expanded, it = carry
@@ -194,7 +266,7 @@ def search_layer(
         pick = jnp.argmax(unexp)  # first True in sorted order
         cur = safe[pick]
         expanded = expanded.at[cur].set(True)
-        nbrs = neighbors_l[cur]  # [degree]
+        nbrs = row_of(cur)  # [degree]
         nbr_safe = jnp.clip(nbrs, 0, capacity - 1)
         fresh = (nbrs >= 0) & (~seen[nbr_safe])
         nd = _wide_l2(state, q_raw, nbrs)
@@ -269,15 +341,74 @@ def _add_bidirectional_edges(
     return state_neighbors
 
 
+def _add_edges_fast(neighbors: jax.Array, lvl: int, vectors: jax.Array,
+                    new_slot: jax.Array, cand_d: jax.Array, cand_s: jax.Array,
+                    m: int) -> jax.Array:
+    """Bulk-path edge update on the full [levels, capacity, degree] array.
+
+    Equivalent to ``_add_bidirectional_edges`` at one (static) level with
+    ``active=True``, but with no per-level slice round-trip: the forward row
+    and the m pruned reverse rows go in as direct (level, row) scatters, and
+    the per-candidate loop is one batched prune — candidates are distinct
+    rows (the fast-path beam is duplicate-free), so the sequential loop's
+    iterations are independent."""
+    _, capacity, degree = neighbors.shape
+    pad = jnp.int32(2**31 - 1)
+
+    idx = jnp.arange(degree)
+    src = jnp.clip(idx, 0, cand_s.shape[0] - 1)
+    fwd = jnp.where(
+        (idx < m) & (cand_d[src] < INF), cand_s[src], jnp.int32(-1)
+    ).astype(jnp.int32)
+    neighbors = neighbors.at[lvl, new_slot].set(fwd)
+
+    new_vec = vectors[new_slot].astype(jnp.int64)
+    mm = min(m, cand_s.shape[0])
+    c = cand_s[:mm]                  # [mm]
+    is_real = (cand_d[:mm] < INF) & (c != new_slot)
+    c_safe = jnp.clip(c, 0, capacity - 1)
+    owner_vecs = vectors[c_safe].astype(jnp.int64)     # [mm, dim]
+    cur = neighbors[lvl, c_safe]                       # [mm, degree]
+    cur_safe = jnp.clip(cur, 0, capacity - 1)
+    cur_vecs = vectors[cur_safe].astype(jnp.int64)     # [mm, degree, dim]
+    dd = jnp.sum((cur_vecs - owner_vecs[:, None, :]) ** 2, axis=-1)
+    dd = jnp.where(cur >= 0, dd, INF)
+    d_new = jnp.sum((new_vec[None, :] - owner_vecs) ** 2, axis=-1)
+    alld = jnp.concatenate([dd, d_new[:, None]], axis=1)
+    alls = jnp.concatenate(
+        [jnp.where(cur >= 0, cur, pad),
+         jnp.broadcast_to(new_slot.astype(jnp.int32), (mm,))[:, None]],
+        axis=1)
+    alld, alls = jax.lax.sort((alld, alls), num_keys=2, dimension=1)
+    kept = jnp.where(alld[:, :degree] < INF, alls[:, :degree], jnp.int32(-1))
+    rows = jnp.where(is_real, c_safe, jnp.int32(capacity))
+    return neighbors.at[lvl, rows].set(kept, mode="drop")
+
+
 def hnsw_insert(state: MemoryState, new_slot: jax.Array, *, ef_construction: int = 32,
-                m: int | None = None) -> MemoryState:
+                m: int | None = None, fast: bool = False) -> MemoryState:
     """Incrementally insert the (already stored) row at ``new_slot``.
 
     Fully deterministic: level from id hash, entry fixed at first node,
     all selections tie-broken by slot id.
+
+    ``fast=True`` selects the bulk-ingest variant used by
+    ``machine.bulk_apply``: per-level work is gated behind ``lax.cond`` so
+    inactive levels skip their beam search at runtime, and the reverse-edge
+    loop visits only the M candidates that can actually connect. Both are
+    pure control-flow changes — every value the default path would *use* is
+    computed identically, so the resulting state is bit-identical
+    (tests/test_bulk_apply.py proves this on randomized logs).
     """
     if m is None:
         m = state.hnsw_degree // 2
+    if fast and m > ef_construction:
+        # with more connectable candidates than beam slots, the default
+        # path's forward-edge writer clip-repeats the last candidate,
+        # producing duplicate row entries its dedup-sorts absorb — the
+        # fast path's duplicate-free-beam invariant does not hold there,
+        # so take the reference implementation (both args are static)
+        fast = False
     max_levels = state.hnsw_max_levels
     q_raw = state.vectors[new_slot]
     ext_id = state.ids[new_slot]
@@ -296,6 +427,54 @@ def hnsw_insert(state: MemoryState, new_slot: jax.Array, *, ef_construction: int
         hnsw_levels=state.hnsw_levels.at[new_slot].set(node_level),
         hnsw_entry=entry.astype(jnp.int32),
     )
+
+    if fast:
+        # Unrolled static-level variant for bulk ingest. Identical values,
+        # cheaper control flow: every lax.cond carries one [capacity, degree]
+        # level slice instead of the whole [levels, capacity, degree] array,
+        # inactive levels skip their beam search at runtime, and the
+        # reverse-edge loop is batched over the m connectable candidates.
+        def build(neighbors: jax.Array) -> jax.Array:
+            # phase 1: greedy descent, entry's top level → node_level+1
+            cur = entry.astype(jnp.int32)
+            for lvl in range(max_levels - 1, 0, -1):
+                do = (jnp.int32(lvl) <= entry_level) & (jnp.int32(lvl) > node_level)
+                cur = jax.lax.cond(
+                    do,
+                    lambda c, lvl=lvl: greedy_step_level(
+                        state, q_raw, jnp.int32(lvl), c,
+                        neighbors_full=neighbors, static_level=lvl),
+                    lambda c: c, cur)
+
+            # phase 2: beam search + connect at levels node_level..0
+            for lvl in range(max_levels - 1, -1, -1):
+                active = jnp.int32(lvl) <= node_level
+
+                def do_level(args, lvl=lvl):
+                    nbrs, c = args
+                    d, s = search_layer(state, q_raw, c, jnp.int32(lvl),
+                                        ef_construction, fast=True,
+                                        neighbors_full=nbrs,
+                                        static_level=lvl)
+                    # exclude self; the beam is duplicate-free, so a plain
+                    # sort pushes the blanked entry back to the tail
+                    d = jnp.where(s == new_slot, INF, d)
+                    s = jnp.where(s == new_slot, jnp.int32(2**31 - 1), s)
+                    d, s = jax.lax.sort((d, s), num_keys=2)
+                    nbrs = _add_edges_fast(
+                        nbrs, lvl, state.vectors, new_slot.astype(jnp.int32),
+                        d, s, m)
+                    nxt = jnp.where(d[0] < INF, s[0], c).astype(jnp.int32)
+                    return nbrs, nxt
+
+                neighbors, cur = jax.lax.cond(
+                    active, do_level, lambda a: a, (neighbors, cur))
+            return neighbors
+
+        neighbors = jax.lax.cond(
+            jnp.logical_not(is_first), build, lambda n: n,
+            state.hnsw_neighbors)
+        return dataclasses.replace(state, hnsw_neighbors=neighbors)
 
     def not_first_insert(state: MemoryState) -> MemoryState:
         # phase 1: greedy descent from the entry's top level to node_level+1

@@ -22,11 +22,13 @@ advance logical time, so a log replays identically even past rejections):
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from functools import partial
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import hnsw
 from repro.core.commands import (DELETE, INSERT, LINK, NOP, NUM_OPCODES,
@@ -162,4 +164,347 @@ def apply_chunked(state: MemoryState, log: CommandLog, chunk: int,
     for start in range(0, n, chunk):
         state = replay(state, log.slice(start, min(start + chunk, n)),
                        ef_construction=ef_construction)
+    return state
+
+
+# --------------------------------------------------------------------------- #
+# bulk apply: the vectorized ingestion fast path (DESIGN.md §3)
+# --------------------------------------------------------------------------- #
+#
+# ``bulk_apply(S, log) == replay(S, log)`` bit-for-bit (hash-identical), but
+# applies the log in batched segments instead of one lax.scan step per
+# command. The host segments the log by opcode; each segment runs a batched
+# kernel:
+#
+#   * clean INSERT runs (fresh, distinct ids): slots are allocated with ONE
+#     prefix-scan over the free mask (the i-th fresh insert takes the i-th
+#     lowest free slot — exactly the sequential "lowest free slot, in log
+#     order" semantics), vectors/ids/valid are written with one batched
+#     scatter, and only the HNSW graph construction remains a loop — over
+#     fresh rows only, with inactive levels cond-skipped (hnsw_insert
+#     ``fast=True``).
+#   * DELETE / SET_META runs: slot resolution is one vmapped probe against
+#     the segment-entry state plus a host-computed first/last-occurrence
+#     mask, then one batched scatter.
+#   * everything else (NOP-padded sequential segments: LINK/UNLINK order
+#     within a row is semantic, and hazardous INSERTs — upserts or
+#     duplicate ids — genuinely depend on interleaving): a plain scan of F,
+#     which is the definitional semantics.
+#
+# Why pre-scattering whole INSERT runs cannot change the HNSW graph: every
+# slot the construction searches, scores, or links is reachable only through
+# the entry point and neighbor arrays, which mention exactly the rows already
+# inserted. Rows scattered early but not yet graph-inserted have no incident
+# edges, so no search can observe them — the graph build sees precisely the
+# prefix state sequential replay would have shown it.
+
+
+def _pad_log(log: CommandLog, target: int) -> CommandLog:
+    """NOP-pad a sub-log to ``target`` records (pow2 buckets keep the number
+    of distinct jit shapes logarithmic)."""
+    n = len(log)
+    if n == target:
+        return log
+    pad = target - n
+    return CommandLog(
+        opcode=jnp.concatenate([log.opcode, jnp.zeros((pad,), jnp.int32)]),
+        arg0=jnp.concatenate([log.arg0, jnp.zeros((pad,), jnp.int64)]),
+        arg1=jnp.concatenate([log.arg1, jnp.zeros((pad,), jnp.int64)]),
+        arg2=jnp.concatenate([log.arg2, jnp.zeros((pad,), jnp.int64)]),
+        vec=jnp.concatenate(
+            [log.vec, jnp.zeros((pad, log.dim), log.vec.dtype)]),
+    )
+
+
+def _pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length() if n > 1 else 1
+
+
+@partial(jax.jit, static_argnames=("ef_construction",))
+def _apply_insert_segment(state: MemoryState, log: CommandLog,
+                          n_real: jax.Array, *, ef_construction: int
+                          ) -> MemoryState:
+    """Clean INSERT run: all ids fresh and distinct (host-verified).
+
+    Slot allocation is one prefix scan: command i takes the i-th lowest free
+    slot; commands past the free-slot supply are rejected, exactly like the
+    sequential path."""
+    m = len(log)
+    cap = state.capacity
+    free_mask = ~state.valid
+    num_free = jnp.sum(free_mask).astype(jnp.int32)
+    free_idx = jnp.nonzero(free_mask, size=m, fill_value=cap)[0].astype(jnp.int32)
+    idx = jnp.arange(m, dtype=jnp.int32)
+    present = idx < n_real                 # NOP padding guard
+    accepted = present & (idx < num_free)  # full arena rejects the tail
+    slots = jnp.where(accepted, free_idx, jnp.int32(cap))  # cap ⇒ dropped
+
+    # no unique_indices promise: the rejected/padded tail repeats the `cap`
+    # sentinel, and a false uniqueness promise is undefined behavior even
+    # though those writes are dropped
+    vectors = state.vectors.at[slots].set(
+        log.vec, mode="drop", indices_are_sorted=True)
+    ids = state.ids.at[slots].set(
+        log.arg0, mode="drop", indices_are_sorted=True)
+    valid = state.valid.at[slots].set(
+        True, mode="drop", indices_are_sorted=True)
+    count = state.count + jnp.sum(accepted).astype(jnp.int32)
+    cursor = jnp.maximum(
+        state.cursor, jnp.max(jnp.where(accepted, slots + 1, 0)))
+    state = dataclasses.replace(
+        state, vectors=vectors, ids=ids, valid=valid, count=count,
+        cursor=cursor, version=state.version + n_real,
+    )
+
+    # graph construction stays ordered over the fresh rows only; rejected and
+    # padded entries carry slot == cap and skip at runtime. The scan carries
+    # just the graph arrays — vectors/ids/valid are loop invariants, so they
+    # stay out of the carried (and cond-copied) state.
+    def body(carry, slot):
+        def insert(c):
+            nbrs, lvls, ent = c
+            st = dataclasses.replace(
+                state, hnsw_neighbors=nbrs, hnsw_levels=lvls, hnsw_entry=ent)
+            out = hnsw.hnsw_insert(
+                st, slot, ef_construction=ef_construction, fast=True)
+            return out.hnsw_neighbors, out.hnsw_levels, out.hnsw_entry
+
+        return jax.lax.cond(slot < cap, insert, lambda c: c, carry), None
+
+    carry0 = (state.hnsw_neighbors, state.hnsw_levels, state.hnsw_entry)
+    (nbrs, lvls, ent), _ = jax.lax.scan(body, carry0, slots)
+    return dataclasses.replace(
+        state, hnsw_neighbors=nbrs, hnsw_levels=lvls, hnsw_entry=ent)
+
+
+def _probe_slots(state: MemoryState, arg0: jax.Array):
+    """Batched ``slot_of_id``: (found[n], slots[n]) against one state — the
+    shared slot-resolution core of the delete and meta kernels."""
+    match = (state.ids[None, :] == arg0[:, None]) & state.valid[None, :]
+    return jnp.any(match, axis=1), jnp.argmax(match, axis=1).astype(jnp.int32)
+
+
+@jax.jit
+def _apply_delete_segment(state: MemoryState, arg0: jax.Array,
+                          first_occ: jax.Array, n_real: jax.Array
+                          ) -> MemoryState:
+    """DELETE run: one vmapped id→slot probe + one batched tombstone scatter.
+    ``first_occ`` (host-computed) keeps only the first delete of each id —
+    later duplicates are sequential no-ops."""
+    cap = state.capacity
+    idx = jnp.arange(arg0.shape[0])
+    found, slots = _probe_slots(state, arg0)
+    do = found & first_occ & (idx < n_real)
+    tgt = jnp.where(do, slots, cap)
+    valid = state.valid.at[tgt].set(False, mode="drop")
+    ids = state.ids.at[tgt].set(jnp.int64(-1), mode="drop")
+    count = state.count - jnp.sum(do).astype(jnp.int32)
+    return dataclasses.replace(
+        state, valid=valid, ids=ids, count=count,
+        version=state.version + n_real)
+
+
+@jax.jit
+def _apply_meta_segment(state: MemoryState, arg0: jax.Array, arg1: jax.Array,
+                        arg2: jax.Array, last_occ: jax.Array,
+                        n_real: jax.Array) -> MemoryState:
+    """SET_META run: one probe + one scatter. ``last_occ`` (host-computed on
+    the clipped (id, meta-slot) key) realizes last-write-wins."""
+    cap = state.capacity
+    idx = jnp.arange(arg0.shape[0])
+    found, slots = _probe_slots(state, arg0)
+    mslot = jnp.clip(arg1, 0, state.meta.shape[1] - 1).astype(jnp.int32)
+    do = found & last_occ & (idx < n_real)
+    row = jnp.where(do, slots, cap)
+    meta = state.meta.at[row, mslot].set(arg2, mode="drop")
+    return dataclasses.replace(
+        state, meta=meta, version=state.version + n_real)
+
+
+@partial(jax.jit, static_argnames=("ef_construction",))
+def _apply_seq_segment(state: MemoryState, log: CommandLog, n_real: jax.Array,
+                       *, ef_construction: int) -> MemoryState:
+    """Order-sensitive remainder (LINK/UNLINK runs, hazardous INSERTs): the
+    definitional scan of F, minus the per-command version bump — NOP padding
+    must not advance logical time."""
+    def step(s, rec):
+        op = jnp.clip(rec.opcode, 0, NUM_OPCODES - 1)
+        branches = [partial(h, ef_construction=ef_construction)
+                    for h in _HANDLERS]
+        return jax.lax.switch(op, branches, s, rec), None
+
+    out, _ = jax.lax.scan(step, state, log)
+    return dataclasses.replace(out, version=state.version + n_real)
+
+
+_BATCH_CHUNK = 512  # caps the [run, capacity] probe matrix in delete/meta
+
+
+class _HostAllocator:
+    """Exact host mirror of F's slot allocator, driven during segmentation.
+
+    Tracks the live id→slot map, the free-slot min-heap (lowest-slot-first,
+    like the device argmax over the free mask) and per-slot graph virginity.
+    A slot that ever held a graph node keeps its stale inbound HNSW edges
+    after deletion (soft delete), so pre-scattering a whole INSERT run would
+    make the reused row visible to earlier searches in the run — sequential
+    replay would still see it invalid. Fresh inserts landing on such slots
+    are therefore hazards and take the sequential path."""
+
+    def __init__(self, state: MemoryState):
+        ids_h = np.asarray(state.ids)
+        valid_h = np.asarray(state.valid)
+        levels_h = np.asarray(state.hnsw_levels)
+        self.id2slot = {int(i): int(s)
+                        for s, i in enumerate(ids_h) if valid_h[s]}
+        self.free = [int(s) for s in np.nonzero(~valid_h)[0]]  # already sorted
+        self.virgin = (levels_h < 0)
+
+    def next_slot_virgin(self) -> bool:
+        return (not self.free) or bool(self.virgin[self.free[0]])
+
+    def insert(self, ext_id: int) -> None:
+        if ext_id in self.id2slot:     # upsert: no allocation
+            return
+        if self.free:
+            slot = heapq.heappop(self.free)
+            self.id2slot[ext_id] = slot
+            self.virgin[slot] = False
+        # else: arena full, rejected
+
+    def delete(self, ext_id: int) -> None:
+        slot = self.id2slot.pop(ext_id, None)
+        if slot is not None:
+            heapq.heappush(self.free, slot)
+
+
+def _segment_log(opcode, arg0, alloc: _HostAllocator):
+    """Host-side pass: split the log into batched-kernel segments while
+    simulating exactly the allocation bookkeeping F would perform, so
+    hazards are detected wherever sequential replay would behave differently
+    from a batch."""
+    segments = []  # (kind, start, stop, aux)
+    n = len(opcode)
+    i = 0
+    while i < n:
+        op = int(opcode[i])
+        if op == NOP:
+            j = i
+            while j < n and opcode[j] == NOP:
+                j += 1
+            segments.append(("nop", i, j, None))
+        elif op == INSERT:
+            j = i
+            seg_ids = set()
+            while j < n and opcode[j] == INSERT:
+                a = int(arg0[j])
+                if a in alloc.id2slot or a in seg_ids:
+                    break  # upsert or duplicate ⇒ order matters ⇒ hazard
+                if not alloc.next_slot_virgin():
+                    break  # reused slot has stale inbound edges ⇒ hazard
+                alloc.insert(a)
+                seg_ids.add(a)
+                j += 1
+            if j > i:  # clean run
+                segments.append(("insert", i, j, None))
+            else:      # hazardous single insert → sequential segment
+                alloc.insert(int(arg0[i]))
+                j = i + 1
+                segments.append(("seq", i, j, None))
+        elif op == DELETE:
+            j = min(i + _BATCH_CHUNK, n)
+            k = i
+            seen = set()
+            first_occ = []
+            while k < j and opcode[k] == DELETE:
+                a = int(arg0[k])
+                first_occ.append(a not in seen)
+                seen.add(a)
+                alloc.delete(a)
+                k += 1
+            segments.append(("delete", i, k, np.asarray(first_occ, bool)))
+            j = k
+        elif op == SET_META:
+            j = min(i + _BATCH_CHUNK, n)
+            k = i
+            while k < j and opcode[k] == op:
+                k += 1
+            segments.append(("run", i, k, op))
+            j = k
+        else:  # LINK / UNLINK: order-sensitive ⇒ sequential kernel
+            k = i
+            while k < n and opcode[k] == op:
+                k += 1
+            segments.append(("seq", i, k, None))
+            j = k
+        i = j
+
+    # coalesce adjacent sequential segments: a reuse-heavy log (every fresh
+    # insert landing on a non-virgin slot) otherwise degrades to one jit
+    # dispatch per command; merged, it is a single padded scan like replay's
+    merged = []
+    for seg in segments:
+        if merged and seg[0] == "seq" and merged[-1][0] == "seq":
+            merged[-1] = ("seq", merged[-1][1], seg[2], None)
+        else:
+            merged.append(seg)
+    return merged
+
+
+def bulk_apply(state: MemoryState, log: CommandLog,
+               *, ef_construction: int = 32) -> MemoryState:
+    """Apply a whole command log in batched form.
+
+    Bit-identical to ``replay(state, log)`` — same final hash under
+    ``hashing.hash_pytree`` — including upserts, tombstone reuse, full-arena
+    rejections and ``version`` accounting (tests/test_bulk_apply.py), but
+    with the write path vectorized as described in DESIGN.md §3."""
+    n = len(log)
+    if n == 0:
+        return state
+
+    opcode = np.asarray(log.opcode)
+    arg0 = np.asarray(log.arg0)
+    arg1 = np.asarray(log.arg1)
+    arg2 = np.asarray(log.arg2)
+
+    for kind, a, b, aux in _segment_log(opcode, arg0, _HostAllocator(state)):
+        m = b - a
+        n_real = jnp.int32(m)
+        if kind == "nop":
+            state = dataclasses.replace(state, version=state.version + m)
+        elif kind == "insert":
+            sub = _pad_log(log.slice(a, b), _pow2(m))
+            state = _apply_insert_segment(state, sub, n_real,
+                                          ef_construction=ef_construction)
+        elif kind == "delete":
+            width = _pow2(m)
+            a0 = np.zeros((width,), np.int64)
+            a0[:m] = arg0[a:b]
+            occ = np.zeros((width,), bool)
+            occ[:m] = aux
+            state = _apply_delete_segment(state, jnp.asarray(a0),
+                                          jnp.asarray(occ), n_real)
+        elif kind == "run" and aux == SET_META:
+            width = _pow2(m)
+            a0 = np.zeros((width,), np.int64)
+            a1 = np.zeros((width,), np.int64)
+            a2 = np.zeros((width,), np.int64)
+            a0[:m] = arg0[a:b]
+            a1[:m] = arg1[a:b]
+            a2[:m] = arg2[a:b]
+            mslots = np.clip(a1[:m], 0, state.meta.shape[1] - 1)
+            occ = np.zeros((width,), bool)
+            seen = set()
+            for t in range(m - 1, -1, -1):  # last write per (id, slot) wins
+                key = (int(a0[t]), int(mslots[t]))
+                occ[t] = key not in seen
+                seen.add(key)
+            state = _apply_meta_segment(state, jnp.asarray(a0),
+                                        jnp.asarray(a1), jnp.asarray(a2),
+                                        jnp.asarray(occ), n_real)
+        else:  # "seq" and LINK/UNLINK runs
+            sub = _pad_log(log.slice(a, b), _pow2(m))
+            state = _apply_seq_segment(state, sub, n_real,
+                                       ef_construction=ef_construction)
     return state

@@ -31,7 +31,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.core import compat
+
+_CompilerParams = compat.pallas_tpu_compiler_params()
 
 
 def _qgemm_kernel(q_ref, d_ref, out_ref):
@@ -94,7 +96,7 @@ def qgemm_planes_pallas(
         ],
         out_specs=pl.BlockSpec((block_q, block_n, 3), lambda i, j, k: (i, j, 0)),
         out_shape=jax.ShapeDtypeStruct((nq, nn, 3), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

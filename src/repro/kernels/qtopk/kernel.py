@@ -20,7 +20,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.core import compat
+
+_CompilerParams = compat.pallas_tpu_compiler_params()
 
 I32_MAX = 2**31 - 1  # Python int: folded into the kernel as an immediate
 
@@ -80,7 +82,7 @@ def qtopk_pallas(
         ],
         out_specs=[out_spec, out_spec, out_spec],
         out_shape=out_shape,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")
         ),
         interpret=interpret,

@@ -6,14 +6,14 @@ state (the dry-run must set XLA_FLAGS before first jax init).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.core import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int | None = None, data: int | None = None):
@@ -26,8 +26,7 @@ def make_host_mesh(model: int | None = None, data: int | None = None):
                 model = m
                 break
     data = data or (n // model)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return compat.make_mesh((data, model), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple:

@@ -26,6 +26,7 @@ from repro.models import transformer as tf
 from repro.optim.adamw import AdamWConfig, adamw_init
 from repro.runtime.coordinator import Coordinator, RunConfig
 from repro.train.step import make_train_step
+from repro.core import compat
 
 
 def main() -> None:
@@ -64,7 +65,7 @@ def main() -> None:
         opt = adamw_init(params)
         return {"params": params, "opt": opt}
 
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         params_shapes = jax.eval_shape(
             lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
         p_sh = shd.param_shardings(params_shapes, cfg, mesh)

@@ -11,10 +11,11 @@ from typing import Optional, Sequence
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
+
 
 def _mesh():
-    m = jax.sharding.get_abstract_mesh()
-    return m if (m is not None and m.axis_names) else None
+    return compat.get_abstract_mesh()
 
 
 def dp_axes(mesh) -> tuple:

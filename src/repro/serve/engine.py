@@ -83,7 +83,12 @@ class MemoryAugmentedEngine:
     # ------------------------------------------------------------------ #
 
     def insert_documents(self, token_batches: np.ndarray) -> List[int]:
-        """token_batches [N, L] int32 → ids. Batched through the boundary."""
+        """token_batches [N, L] int32 → ids. Batched through the boundary.
+
+        The WRITE path goes through ``machine.bulk_apply`` — hash-identical
+        to scanning the log one command at a time (the audit check in
+        ``replay_log_fresh`` re-derives the same state via ``replay``), but
+        ingesting the whole batch in vectorized form."""
         emb = self._embed_fn(self.params, jnp.asarray(token_batches))
         raw = boundary.normalize_embedding(emb, self.sc.contract)
         ids = np.arange(self._next_id, self._next_id + len(token_batches),
@@ -92,7 +97,7 @@ class MemoryAugmentedEngine:
         batch_log = commands.insert_batch(jnp.asarray(ids), raw,
                                           self.sc.contract)
         self.log = self.log.concat(batch_log)
-        self.memory = machine.replay(self.memory, batch_log)
+        self.memory = machine.bulk_apply(self.memory, batch_log)
         for i, tid in enumerate(ids):
             self.docs[int(tid)] = np.asarray(token_batches[i])
         return [int(i) for i in ids]

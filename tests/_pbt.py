@@ -1,0 +1,122 @@
+"""Tiny seeded property-based-testing shim.
+
+Re-exports real hypothesis when it is installed; otherwise provides a
+deterministic numpy-backed fallback so the tier-1 suite collects and runs
+with no network installs. The fallback supports exactly the surface the
+test modules use:
+
+    from tests._pbt import given, settings
+    from tests._pbt import strategies as st
+
+    st.integers(lo, hi), st.floats(min_value=, max_value=, allow_nan=,
+    allow_infinity=), st.lists(elem, min_size=, max_size=, unique=)
+
+``given`` draws ``max_examples`` (from ``settings``, default 20) examples
+from ``numpy.random.default_rng`` seeded per-test by the test name, so runs
+are reproducible across machines — in keeping with the repo's determinism
+contract.
+"""
+from __future__ import annotations
+
+try:  # real hypothesis wins when available
+    from hypothesis import given, settings
+    from hypothesis import strategies
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import zlib
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def filter(self, pred, _max_tries=1000):
+            def draw(rng):
+                for _ in range(_max_tries):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise RuntimeError("filter predicate never satisfied")
+            return _Strategy(draw)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            def draw(rng):
+                # numpy bounds are int64; the suite never exceeds ±2**62
+                return int(rng.integers(min_value, max_value, endpoint=True,
+                                        dtype=np.int64))
+            return _Strategy(draw)
+
+        @staticmethod
+        def floats(min_value=-1e9, max_value=1e9, allow_nan=False,
+                   allow_infinity=False, **_kw):
+            def draw(rng):
+                # occasionally hit the exact bounds, like hypothesis does
+                r = rng.random()
+                if r < 0.05:
+                    return float(min_value)
+                if r < 0.10:
+                    return float(max_value)
+                return float(rng.uniform(min_value, max_value))
+            return _Strategy(draw)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, unique=False):
+            def draw(rng):
+                size = int(rng.integers(min_size, max_size, endpoint=True))
+                if not unique:
+                    return [elements.draw(rng) for _ in range(size)]
+                out, seen = [], set()
+                attempts = 0
+                while len(out) < size and attempts < 200 * (size + 1):
+                    v = elements.draw(rng)
+                    attempts += 1
+                    if v not in seen:
+                        seen.add(v)
+                        out.append(v)
+                if len(out) < min_size:  # hypothesis would satisfy min_size
+                    raise RuntimeError(
+                        f"unique lists(): domain too small for min_size="
+                        f"{min_size}")
+                return out
+            return _Strategy(draw)
+
+    strategies = _Strategies()
+
+    def settings(max_examples=20, **_kw):
+        def deco(fn):
+            fn._pbt_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            def wrapper():
+                # read at call time so @settings works above OR below @given
+                n = getattr(wrapper, "_pbt_max_examples",
+                            getattr(fn, "_pbt_max_examples", 20))
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    drawn = tuple(s.draw(rng) for s in strats)
+                    fn(*drawn)
+
+            # no functools.wraps: pytest would follow __wrapped__ and treat
+            # the property arguments as missing fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__module__ = fn.__module__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

@@ -1,0 +1,217 @@
+"""bulk_apply ≡ replay: the equivalence contract of the vectorized ingest
+path (DESIGN.md §3).
+
+``machine.bulk_apply`` may segment, scatter and batch however it likes — but
+the final state must be **hash-identical** (``hashing.hash_pytree``) to the
+one-command-at-a-time ``machine.replay`` on the same log. These tests prove
+that on randomized logs covering all six opcodes plus the known hard cases:
+duplicate-id upserts, DELETE→INSERT slot-reuse cycles (stale HNSW edges!),
+full-arena rejection, NOP padding, and ``version`` accounting.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _pbt import given, settings
+from _pbt import strategies as st
+
+import repro  # noqa: F401
+from repro.core import boundary, commands, hashing, machine
+from repro.core.commands import (DELETE, INSERT, LINK, NOP, SET_META, UNLINK,
+                                 DEFAULT_CONTRACT)
+from repro.core.state import init_state, slot_of_id
+
+D = 8
+
+
+def _vec(rng):
+    return boundary.normalize_embedding(
+        rng.normal(size=(D,)).astype(np.float32))
+
+
+def _random_log(seed: int, n: int, id_space: int,
+                opcode_weights=(1, 3, 1, 1, 1, 1)) -> commands.CommandLog:
+    """A random mixed log: all six opcodes, duplicate ids, invalid targets."""
+    rng = np.random.default_rng(seed)
+    ops = rng.choice(6, size=n, p=np.asarray(opcode_weights) / sum(opcode_weights))
+    recs = []
+    for op in ops:
+        i = int(rng.integers(0, id_space))
+        j = int(rng.integers(0, id_space))
+        if op == NOP:
+            recs.append(commands._mk(NOP, D, DEFAULT_CONTRACT))
+        elif op == INSERT:
+            recs.append(commands.insert_cmd(i, np.asarray(_vec(rng))))
+        elif op == DELETE:
+            recs.append(commands.delete_cmd(i, D))
+        elif op == LINK:
+            recs.append(commands.link_cmd(i, j, D))
+        elif op == UNLINK:
+            recs.append(commands.unlink_cmd(i, j, D))
+        else:
+            recs.append(commands.set_meta_cmd(
+                i, int(rng.integers(-1, 4)), int(rng.integers(-50, 50)), D))
+    log = recs[0]
+    for r in recs[1:]:
+        log = log.concat(r)
+    return log
+
+
+def _assert_equivalent(s0, log, chunk=None):
+    ref = machine.replay(s0, log)
+    blk = machine.bulk_apply(s0, log)
+    h_ref, h_blk = hashing.hash_pytree(ref), hashing.hash_pytree(blk)
+    assert h_ref == h_blk, f"bulk_apply diverged: {h_ref:#x} != {h_blk:#x}"
+    if chunk:
+        chk = machine.apply_chunked(s0, log, chunk)
+        assert hashing.hash_pytree(chk) == h_ref, "apply_chunked diverged"
+    return ref, blk
+
+
+# --------------------------------------------------------------------------- #
+# randomized equivalence: ≥50 logs across all six opcodes
+# --------------------------------------------------------------------------- #
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_bulk_apply_hash_identical_on_random_logs(seed):
+    """50 randomized mixed logs: hash(bulk) == hash(replay), every time."""
+    rng = np.random.default_rng(seed)
+    cap = int(rng.choice([4, 8, 16, 32]))
+    n = int(rng.integers(1, 36))
+    id_space = int(rng.choice([3, 6, 24]))  # small ⇒ upserts + reuse cycles
+    levels = int(rng.choice([2, 4]))
+    log = _random_log(seed, n, id_space)
+    s0 = init_state(cap, D, hnsw_levels=levels)
+    _assert_equivalent(s0, log)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_bulk_apply_matches_chunked_replay(seed):
+    """bulk == replay == apply_chunked: batch boundaries are invisible."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 28))
+    log = _random_log(seed, n, id_space=6)
+    s0 = init_state(16, D, hnsw_levels=2)
+    _assert_equivalent(s0, log, chunk=int(rng.integers(1, 7)))
+
+
+# --------------------------------------------------------------------------- #
+# targeted hard cases
+# --------------------------------------------------------------------------- #
+
+
+def test_pure_insert_batch_and_version():
+    rng = np.random.default_rng(0)
+    vecs = boundary.normalize_embedding(
+        rng.normal(size=(24, D)).astype(np.float32))
+    log = commands.insert_batch(jnp.arange(24, dtype=jnp.int64), vecs)
+    ref, blk = _assert_equivalent(init_state(64, D), log, chunk=5)
+    assert int(blk.version) == len(log)
+    assert int(blk.count) == 24
+
+
+def test_duplicate_id_upserts():
+    """Same id inserted repeatedly: later inserts overwrite in place."""
+    rng = np.random.default_rng(1)
+    log = commands.insert_cmd(7, np.asarray(_vec(rng)))
+    for _ in range(5):
+        log = log.concat(commands.insert_cmd(7, np.asarray(_vec(rng))))
+        log = log.concat(commands.insert_cmd(9, np.asarray(_vec(rng))))
+    ref, blk = _assert_equivalent(init_state(8, D), log)
+    assert int(blk.count) == 2
+
+
+def test_delete_insert_slot_reuse_cycles():
+    """Tombstone reuse: freed slots keep stale HNSW edges — the case where a
+    naive pre-scatter diverges from sequential replay."""
+    rng = np.random.default_rng(2)
+    log = commands.insert_batch(
+        jnp.arange(6, dtype=jnp.int64),
+        boundary.normalize_embedding(rng.normal(size=(6, D)).astype(np.float32)))
+    for cycle in range(4):
+        log = log.concat(commands.delete_cmd(cycle % 6, D))
+        log = log.concat(commands.insert_cmd(100 + cycle, np.asarray(_vec(rng))))
+        log = log.concat(commands.insert_cmd(200 + cycle, np.asarray(_vec(rng))))
+        log = log.concat(commands.delete_cmd(200 + cycle, D))
+    ref, blk = _assert_equivalent(init_state(8, D), log, chunk=3)
+    # the reused slots really were recycled (arena stayed small)
+    assert int(blk.count) <= 8
+
+
+def test_full_arena_rejection():
+    """Inserts past capacity are rejected but still advance logical time."""
+    rng = np.random.default_rng(3)
+    vecs = boundary.normalize_embedding(
+        rng.normal(size=(10, D)).astype(np.float32))
+    log = commands.insert_batch(jnp.arange(10, dtype=jnp.int64), vecs)
+    ref, blk = _assert_equivalent(init_state(4, D), log)
+    assert int(blk.count) == 4
+    assert int(blk.version) == 10
+    # delete frees a slot; the next fresh insert lands in it
+    log2 = commands.delete_cmd(1, D).concat(
+        commands.insert_cmd(99, np.asarray(_vec(rng))))
+    ref2, blk2 = _assert_equivalent(blk, log2)
+    assert int(slot_of_id(blk2, jnp.int64(99))) == int(
+        slot_of_id(ref2, jnp.int64(99)))
+
+
+def test_link_unlink_meta_runs():
+    rng = np.random.default_rng(4)
+    vecs = boundary.normalize_embedding(
+        rng.normal(size=(5, D)).astype(np.float32))
+    log = commands.insert_batch(jnp.arange(5, dtype=jnp.int64), vecs)
+    for a in range(5):
+        for b in range(5):
+            log = log.concat(commands.link_cmd(a, b, D))
+    log = log.concat(commands.unlink_cmd(0, 1, D))
+    log = log.concat(commands.unlink_cmd(0, 1, D))  # double unlink = no-op
+    for s in (-2, 0, 1, 7):  # out-of-range meta slots clip
+        log = log.concat(commands.set_meta_cmd(2, s, 1000 + s, D))
+        log = log.concat(commands.set_meta_cmd(2, s, 2000 + s, D))  # last wins
+    log = log.concat(commands.set_meta_cmd(404, 0, 1, D))  # missing id no-op
+    _assert_equivalent(init_state(8, D), log)
+
+
+def test_nop_runs_only_bump_version():
+    log = commands._mk(NOP, D, DEFAULT_CONTRACT)
+    for _ in range(7):
+        log = log.concat(commands._mk(NOP, D, DEFAULT_CONTRACT))
+    ref, blk = _assert_equivalent(init_state(4, D), log)
+    assert int(blk.version) == 8
+    assert int(blk.count) == 0
+
+
+def test_empty_log_is_identity():
+    s0 = init_state(4, D)
+    out = machine.bulk_apply(s0, commands.empty_log(D))
+    assert hashing.hash_pytree(out) == hashing.hash_pytree(s0)
+
+
+def test_small_ef_construction_still_bit_identical():
+    """ef_construction < degree//2: the default path clip-repeats forward
+    candidates (duplicate row entries), so the fast insert must bail to the
+    reference implementation — the hash contract holds regardless."""
+    rng = np.random.default_rng(6)
+    vecs = boundary.normalize_embedding(
+        rng.normal(size=(30, D)).astype(np.float32))
+    log = commands.insert_batch(jnp.arange(30, dtype=jnp.int64), vecs)
+    s0 = init_state(64, D, hnsw_levels=3, hnsw_degree=16)
+    for ef in (4, 8):
+        a = machine.replay(s0, log, ef_construction=ef)
+        b = machine.bulk_apply(s0, log, ef_construction=ef)
+        assert hashing.hash_pytree(a) == hashing.hash_pytree(b), ef
+
+
+def test_bulk_apply_composes_across_calls():
+    """bulk_apply(bulk_apply(S, L1), L2) == replay(S, L1 ++ L2)."""
+    rng = np.random.default_rng(5)
+    l1 = _random_log(50, 18, 6)
+    l2 = _random_log(51, 18, 6)
+    s0 = init_state(16, D, hnsw_levels=2)
+    once = machine.bulk_apply(machine.bulk_apply(s0, l1), l2)
+    ref = machine.replay(s0, l1.concat(l2))
+    assert hashing.hash_pytree(once) == hashing.hash_pytree(ref)

@@ -3,8 +3,8 @@ integer kernels admit no tolerance)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _pbt import given, settings
+from _pbt import strategies as st
 
 import repro  # noqa: F401
 from repro.kernels.qgemm import ops as qgemm_ops

@@ -1,8 +1,8 @@
 """128-bit limb arithmetic vs Python bigints (the Q32.32 'future' contract)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _pbt import given, settings
+from _pbt import strategies as st
 
 import jax.numpy as jnp
 

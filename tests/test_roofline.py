@@ -13,12 +13,17 @@ def _compiled(fn, *args):
     return jax.jit(fn).lower(*args).compile()
 
 
+def _cost(compiled):
+    from repro.core import compat
+    return compat.cost_analysis(compiled)
+
+
 def test_matches_cost_analysis_single_matmul():
     x = jnp.zeros((256, 512), jnp.float32)
     w = jnp.zeros((512, 128), jnp.float32)
     c = _compiled(lambda a, b: a @ b, x, w)
     t = walk_hlo(c.as_text())
-    ca = c.cost_analysis()
+    ca = _cost(c)
     assert t.flops == ca["flops"] == 2 * 256 * 512 * 128
     assert t.bytes == ca["bytes accessed"]
 

@@ -5,8 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _pbt import given, settings
+from _pbt import strategies as st
 
 import repro  # noqa: F401
 from repro.core import boundary, commands, hashing, machine, search, snapshot

@@ -170,12 +170,12 @@ _COMPRESS = textwrap.dedent("""
     import repro
     from repro.optim import compress
 
-    mesh = jax.make_mesh((4,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core import compat
+    mesh = compat.make_mesh((4,), ("pod",))
     grads = {"w": jnp.asarray(np.random.default_rng(0).normal(
         size=(4, 16, 16)).astype(np.float32) * 1e-3)}
 
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=(P("pod"),),
+    @functools.partial(compat.shard_map, mesh=mesh, in_specs=(P("pod"),),
                        out_specs=P(), check_vma=False)
     def reduce_q(g):
         g = jax.tree.map(lambda a: a[0], g)
@@ -206,3 +206,84 @@ def test_integer_gradient_allreduce():
                           capture_output=True, text=True, timeout=600)
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "COMPRESS_OK" in proc.stdout
+
+
+# --------------------------------------------------------------------------- #
+# cross-substrate agreement on a bulk-applied log (needs >1 device →
+# subprocess, per the dry-run isolation rule)
+# --------------------------------------------------------------------------- #
+
+_CROSS_SUBSTRATE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp
+    import repro
+    from repro.core import (boundary, commands, compat, distributed, hashing,
+                            hnsw, machine, search)
+    from repro.core.state import init_state
+
+    D, N, K = 16, 48, 5
+    rng = np.random.default_rng(0)
+    vecs = boundary.normalize_embedding(
+        rng.normal(size=(N, D)).astype(np.float32))
+    ids = jnp.arange(N, dtype=jnp.int64) * 7 + 3
+    log = commands.insert_batch(ids, vecs)
+    q = boundary.admit_query(rng.normal(size=(4, D)).astype(np.float32))
+
+    # substrate 1: flat kernel, bulk-applied — exact search
+    flat = machine.bulk_apply(init_state(128, D), log)
+    e_ids, _ = search.exact_search(flat, q, K)
+
+    # substrate 2: deterministic HNSW on the same bulk-applied state
+    # (ef > N ⇒ the beam covers the whole connected graph ⇒ exact answers)
+    h_ids = np.stack([
+        np.asarray(hnsw.hnsw_search(flat, qq, K, ef=64)[0]) for qq in q])
+
+    # substrate 3: sharded memory, routed log bulk-applied per shard
+    def sharded_ids(n_shards, mesh_shape):
+        mesh = compat.make_mesh(mesh_shape, ("model", "data"))
+        st = distributed.init_sharded_state(mesh, "model", 128 // n_shards, D)
+        st = distributed.distributed_bulk_apply(
+            mesh, "model", st, distributed.route_commands(log, n_shards))
+        d_ids, _ = distributed.distributed_search(
+            mesh, "model", st, q, K, query_axis="data")
+        return st, np.asarray(d_ids)
+
+    st4, ids4 = sharded_ids(4, (4, 2))
+    st2, ids2 = sharded_ids(2, (2, 4))
+
+    for b in range(q.shape[0]):
+        exact_set = set(np.asarray(e_ids)[b].tolist())
+        assert set(h_ids[b].tolist()) == exact_set, ("hnsw", b)
+        assert set(ids4[b].tolist()) == exact_set, ("sharded4", b)
+        assert set(ids2[b].tolist()) == exact_set, ("sharded2", b)
+
+    # shard count must not change the memory content union: the sorted live
+    # (id, vector, meta) rows hash identically for 1, 2 and 4 shards
+    def content_hash(state):
+        ids_h = np.asarray(state.ids)
+        valid = np.asarray(state.valid)
+        order = np.argsort(ids_h[valid])
+        return hashing.hash_pytree({
+            "ids": jnp.asarray(ids_h[valid][order]),
+            "vecs": jnp.asarray(np.asarray(state.vectors)[valid][order]),
+            "meta": jnp.asarray(np.asarray(state.meta)[valid][order]),
+        })
+
+    h_flat, h2, h4 = content_hash(flat), content_hash(st2), content_hash(st4)
+    assert h_flat == h2 == h4, (hex(h_flat), hex(h2), hex(h4))
+    print("CROSS_SUBSTRATE_OK", hex(h_flat))
+""")
+
+
+def test_cross_substrate_agreement_on_bulk_applied_log():
+    """exact, HNSW and sharded search agree on a bulk-applied log, and the
+    memory content union is invariant to shard count."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    repo_src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(repo_src)
+    proc = subprocess.run([sys.executable, "-c", _CROSS_SUBSTRATE], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "CROSS_SUBSTRATE_OK" in proc.stdout
