@@ -12,18 +12,20 @@ Public surface:
   snapshot    — serialize/restore with hash verification (paper §8.1)
   search      — exact deterministic k-NN (wide integer scores)
   hnsw        — deterministic HNSW (paper §7), TPU-adapted
+  query       — batched deterministic query engine: vmapped HNSW, planner,
+                shard fan-out (DESIGN.md §4)
   distributed — pod-scale sharded memory over shard_map (DESIGN.md §2)
   compat      — version-bridging shims over moved JAX APIs
 """
 from repro.core import (boundary, commands, contracts, distributed, fixedpoint,
-                        hashing, hnsw, machine, search, snapshot, state)
+                        hashing, hnsw, machine, query, search, snapshot, state)
 from repro.core.contracts import (CONTRACTS, DEFAULT_CONTRACT, Q8_8, Q16_16,
                                   Q32_32, PrecisionContract, get_contract)
 from repro.core.state import MemoryState, init_state
 
 __all__ = [
     "boundary", "commands", "contracts", "distributed", "fixedpoint",
-    "hashing", "hnsw", "machine", "search", "snapshot", "state",
+    "hashing", "hnsw", "machine", "query", "search", "snapshot", "state",
     "CONTRACTS", "DEFAULT_CONTRACT", "Q8_8", "Q16_16", "Q32_32",
     "PrecisionContract", "get_contract", "MemoryState", "init_state",
 ]

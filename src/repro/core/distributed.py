@@ -29,7 +29,6 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core import hnsw as hnsw_lib
 from repro.core import machine, search
 from repro.core.commands import NOP, CommandLog
 from repro.core.hnsw import splitmix64
@@ -253,22 +252,20 @@ def distributed_hnsw_search(mesh: Mesh, axis: str, state: MemoryState,
     qspec = P(query_axis, None)
     out_spec = P(query_axis, None)
 
+    from repro.core import query as query_lib  # lazy: query imports us lazily
+
     @partial(compat.shard_map, mesh=mesh, in_specs=(specs, qspec),
              out_specs=(out_spec, out_spec), check_vma=False)
     def _search(local_state: MemoryState, q: jax.Array):
         local = _to_local(local_state)
-        ids, dists, _ = jax.vmap(
-            lambda qq: hnsw_lib.hnsw_search(local, qq, k, ef=ef))(q)
+        ids, dists, _ = query_lib.batched_hnsw_search(local, q, k, ef=ef)
         all_ids = jax.lax.all_gather(ids, axis)       # [n_shards, nq, k]
         all_d = jax.lax.all_gather(dists, axis)
         nq = q.shape[0]
         flat_ids = jnp.moveaxis(all_ids, 0, 1).reshape(nq, -1)
         flat_d = jnp.moveaxis(all_d, 0, 1).reshape(nq, -1)
-        key_ids = jnp.where(flat_d < INF, flat_ids, jnp.int64(1) << 62)
-        d_sorted, i_sorted = jax.lax.sort(
-            (flat_d, key_ids), num_keys=2, dimension=1)
-        d_out, i_out = d_sorted[:, :k], i_sorted[:, :k]
-        return jnp.where(d_out < INF, i_out, jnp.int64(-1)), d_out
+        d_out, i_out = search.merge_candidates(flat_d, flat_ids, k)
+        return i_out, d_out
 
     return _search(state, queries_raw)
 
@@ -298,11 +295,7 @@ def distributed_search(mesh: Mesh, axis: str, state: MemoryState,
         nq = q.shape[0]
         flat_ids = jnp.moveaxis(all_ids, 0, 1).reshape(nq, -1)
         flat_scores = jnp.moveaxis(all_scores, 0, 1).reshape(nq, -1)
-        key_ids = jnp.where(flat_scores < INF, flat_ids, jnp.int64(1) << 62)
-        s_sorted, i_sorted = jax.lax.sort(
-            (flat_scores, key_ids), num_keys=2, dimension=1
-        )
-        s_out, i_out = s_sorted[:, :k], i_sorted[:, :k]
-        return jnp.where(s_out < INF, i_out, jnp.int64(-1)), s_out
+        s_out, i_out = search.merge_candidates(flat_scores, flat_ids, k)
+        return i_out, s_out
 
     return _search(state, queries_raw)

@@ -1,0 +1,170 @@
+"""Batched deterministic query engine — the read-path twin of bulk_apply.
+
+``machine.bulk_apply`` made the write path fast under the equivalence
+contract (DESIGN.md §3). This module is the same move for the read path
+(DESIGN.md §4): every batched / planned / sharded search below is
+bit-identical to the per-query reference loop over ``hnsw.hnsw_search`` /
+``search.exact_search`` — same ids, same wide scores, same tie order.
+
+Three layers:
+
+* ``batched_hnsw_search`` — B queries through the HNSW graph under one jit:
+  a ``vmap`` over the fixed-shape beam state in ``hnsw.py``. Every ranking
+  decision inside the beam is the same ``(dist, slot)`` lexicographic
+  integer compare, and a vmapped ``while_loop`` freezes each lane's carry
+  once its own predicate goes false, so lane b computes exactly the values
+  the single-query call computes.
+* ``exact route`` — ``search.exact_search``, optionally kernel-backed
+  (Pallas qgemm scoring + qtopk selection) with the pure-jnp path as both
+  fallback and oracle.
+* ``plan_query`` / ``execute_plan`` / ``sharded_query`` — a planner that
+  picks exact-scan vs HNSW per request from *static host facts only*
+  (live count, k, ef), so the route itself is replayable, and fans out
+  across shards via ``distributed.py``, merging with the order-invariant
+  ``merge_topk`` combine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hnsw as hnsw_lib
+from repro.core import search
+from repro.core.state import MemoryState
+
+INF = search.INF
+
+ROUTE_EXACT = "exact"
+ROUTE_HNSW = "hnsw"
+
+
+# --------------------------------------------------------------------------- #
+# batched HNSW: vmap over the fixed-shape beam
+# --------------------------------------------------------------------------- #
+
+
+@partial(jax.jit, static_argnames=("k", "ef"))
+def batched_hnsw_search(state: MemoryState, queries_raw: jax.Array, k: int,
+                        *, ef: int = 64
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """ANN for B queries under one jit: (ids [B,k], dists [B,k], slots [B,k]).
+
+    Bit-identical to calling ``hnsw.hnsw_search`` once per row
+    (tests/test_query_engine.py asserts this on randomized logs).
+    """
+    return jax.vmap(
+        lambda q: hnsw_lib.hnsw_search(state, q, k, ef=ef)
+    )(queries_raw)
+
+
+# --------------------------------------------------------------------------- #
+# query planner: static facts in, deterministic route out
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """A replayable routing decision. Pure data: two plans built from the
+    same facts compare equal, and the facts are recorded for audit."""
+    route: str               # ROUTE_EXACT | ROUTE_HNSW
+    k: int
+    ef: int
+    use_kernel: bool         # exact route only (HNSW gathers row-wise)
+    live_count: int          # the fact the decision was made from
+    reason: str
+
+
+def plan_query(live_count: int, k: int, ef: int, *,
+               use_kernel: bool = False, exact_threshold: int = 1024,
+               route: str = "auto") -> QueryPlan:
+    """Pick exact-scan vs HNSW from static facts — host ints only, so the
+    same request against the same memory plans identically everywhere.
+
+    Rules (DESIGN.md §4), first match wins:
+      1. forced route (``route != "auto"``) — operator override (forcing
+         "hnsw" with k > ef raises: the beam cannot return k results);
+      2. ``k > ef`` → exact (an ef-beam cannot return k results);
+      3. ``live_count <= exact_threshold`` → exact (the scan is cheap and
+         exact; no reason to pay graph traversal);
+      4. ``ef >= live_count`` → exact (the beam would cover the whole
+         corpus anyway — a scan does the same work without the gathers);
+      5. otherwise → HNSW.
+    """
+    def mk(r, why):
+        return QueryPlan(route=r, k=k, ef=ef, use_kernel=use_kernel,
+                         live_count=live_count, reason=why)
+
+    if route != "auto":
+        if route not in (ROUTE_EXACT, ROUTE_HNSW):
+            raise ValueError(f"unknown route {route!r}")
+        if route == ROUTE_HNSW and k > ef:
+            # an ef-beam physically cannot return k results; truncating
+            # silently would hand the caller [B, ef]-shaped arrays
+            raise ValueError(f"route='hnsw' needs k <= ef, got k={k} ef={ef}")
+        return mk(route, "forced")
+    if k > ef:
+        return mk(ROUTE_EXACT, f"k={k} > ef={ef}")
+    if live_count <= exact_threshold:
+        return mk(ROUTE_EXACT, f"live={live_count} <= {exact_threshold}")
+    if ef >= live_count:
+        return mk(ROUTE_EXACT, f"ef={ef} >= live={live_count}")
+    return mk(ROUTE_HNSW, f"live={live_count}, k={k}, ef={ef}")
+
+
+def execute_plan(state: MemoryState, queries_raw: jax.Array, k: int,
+                 plan: QueryPlan, *, metric: str = search.METRIC_L2
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Run the planned route: (ids [B,k] int64, wide scores [B,k] int64).
+
+    Both routes score with the same wide integer L2, so the planner can
+    switch routes without changing a returned score's meaning.
+    """
+    if plan.route == ROUTE_EXACT:
+        return search.exact_search(state, queries_raw, k, metric=metric,
+                                   use_kernel=plan.use_kernel)
+    ids, dists, _ = batched_hnsw_search(state, queries_raw, k, ef=plan.ef)
+    return ids, dists
+
+
+# --------------------------------------------------------------------------- #
+# shard fan-out
+# --------------------------------------------------------------------------- #
+
+
+def sharded_query(mesh, axis: str, state: MemoryState, queries_raw: jax.Array,
+                  k: int, plan: QueryPlan, *,
+                  metric: str = search.METRIC_L2,
+                  query_axis: Optional[str] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Fan the planned query out across shards (``distributed.py``).
+
+    Every shard runs the planned route locally; candidates combine with the
+    order-invariant integer ``merge_topk`` sort, so the answer is
+    independent of shard count — and, for the exact route, bit-identical
+    to the single-kernel scan.
+    """
+    from repro.core import distributed  # local import: avoids cycle at init
+
+    if plan.route == ROUTE_EXACT:
+        return distributed.distributed_search(
+            mesh, axis, state, queries_raw, k, metric=metric,
+            use_kernel=plan.use_kernel, query_axis=query_axis)
+    return distributed.distributed_hnsw_search(
+        mesh, axis, state, queries_raw, k, ef=plan.ef, query_axis=query_axis)
+
+
+# --------------------------------------------------------------------------- #
+# retrieval-set hash: the read path's audit artifact
+# --------------------------------------------------------------------------- #
+
+
+def retrieval_hash(ids: jax.Array, scores: jax.Array) -> int:
+    """Platform-invariant hash of a retrieval set — the read-path analogue
+    of the state hash: two runs agree iff every (id, score) bit agrees."""
+    from repro.core import hashing
+    return hashing.hash_pytree((jnp.asarray(ids).astype(jnp.int64),
+                                jnp.asarray(scores).astype(jnp.int64)))

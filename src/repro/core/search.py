@@ -58,6 +58,27 @@ def topk_by_score(scores: jax.Array, ids: jax.Array, k: int
     return s_sorted[:, :k], i_sorted[:, :k]
 
 
+def _topk_by_score_kernel(scores: jax.Array, ids: jax.Array, k: int
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """qtopk-backed top-k, bit-identical to :func:`topk_by_score`.
+
+    The kernel tie-breaks on int32 keys, but ids are int64. Rank each id
+    among the sorted id column instead: id → rank is strictly monotone for
+    the unique real ids, so (score, rank) order equals (score, id) order;
+    masked rows all share id 2^62 and score INF, and every INF result is
+    normalized to (-1, INF) downstream, so their internal tie order is
+    unobservable.
+    """
+    from repro.kernels.qtopk import ops as qtopk_ops
+    n = ids.shape[0]
+    order = jnp.argsort(ids)  # stable integer sort
+    ranks = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+    sorted_ids = ids[order]
+    s, r = qtopk_ops.qtopk(scores, ranks, k)
+    return s, sorted_ids[jnp.clip(r, 0, n - 1)]
+
+
 @partial(jax.jit, static_argnames=("k", "metric", "use_kernel"))
 def exact_search(state: MemoryState, queries_raw: jax.Array, k: int,
                  *, metric: str = METRIC_L2, use_kernel: bool = False
@@ -65,26 +86,44 @@ def exact_search(state: MemoryState, queries_raw: jax.Array, k: int,
     """k-NN over all live rows. Returns (ids [nq,k] int64, scores [nq,k]).
 
     Missing results (fewer than k live rows) are (-1, INF).
+    ``use_kernel=True`` scores through Pallas qgemm and selects through
+    Pallas qtopk — bit-identical to the pure-jnp path
+    (tests/test_query_engine.py::test_kernel_parity).
     """
     scores = score_block(queries_raw, state.vectors, metric, use_kernel)
     scores = jnp.where(state.valid[None, :], scores, INF)
     # tombstoned ids are -1; give them +inf-ish id so they sort last among ties
     ids = jnp.where(state.valid, state.ids, jnp.int64(1) << 62)
-    s, i = topk_by_score(scores, ids, k)
+    if use_kernel:
+        s, i = _topk_by_score_kernel(scores, ids, k)
+    else:
+        s, i = topk_by_score(scores, ids, k)
     found = s < INF
     return jnp.where(found, i, jnp.int64(-1)), jnp.where(found, s, INF)
+
+
+def merge_candidates(scores: jax.Array, ids: jax.Array, k: int
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Top-k of a [..., m] candidate pool by (score, id) — the one combine
+    every fan-in path shares (pairwise merge, shard all-gather). A pure
+    integer two-key sort, so the result is invariant to any permutation of
+    the pool — the order-invariance the distributed paths lean on."""
+    # re-mask tombstones so (-1) padding never wins ties
+    i_key = jnp.where(scores < INF, ids, jnp.int64(1) << 62)
+    s_sorted, i_sorted = jax.lax.sort(
+        (scores, i_key), num_keys=2, dimension=scores.ndim - 1)
+    s_out = s_sorted[..., :k]
+    i_out = i_sorted[..., :k]
+    return s_out, jnp.where(s_out < INF, i_out, jnp.int64(-1))
 
 
 def merge_topk(scores_a: jax.Array, ids_a: jax.Array,
                scores_b: jax.Array, ids_b: jax.Array, k: int
                ) -> Tuple[jax.Array, jax.Array]:
     """Merge two sorted top-k lists into one — the deterministic combine step
-    used by the sharded memory (integer compare ⇒ order-invariant)."""
+    used by the sharded memory. Associative, commutative, and permutation-
+    invariant (tests/test_query_engine.py proves all three), which is what
+    makes shard fan-in order a non-event."""
     s = jnp.concatenate([scores_a, scores_b], axis=-1)
     i = jnp.concatenate([ids_a, ids_b], axis=-1)
-    # re-mask tombstones so (-1) padding never wins ties
-    i_key = jnp.where(s < INF, i, jnp.int64(1) << 62)
-    s_sorted, i_sorted = jax.lax.sort((s, i_key), num_keys=2, dimension=s.ndim - 1)
-    s_out = s_sorted[..., :k]
-    i_out = i_sorted[..., :k]
-    return s_out, jnp.where(s_out < INF, i_out, jnp.int64(-1))
+    return merge_candidates(s, i, k)

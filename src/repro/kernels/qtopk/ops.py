@@ -9,21 +9,23 @@ import jax.numpy as jnp
 
 from repro.kernels.qtopk import kernel as _kernel
 
-_BIAS = jnp.uint32(0x80000000)
-I64_MAX = jnp.int64(2**63 - 1)
+# plain int, not a jnp scalar: a module-level jnp constant would become a
+# leaked tracer when this module is first imported inside a jit trace
+# (core.search lazily imports us from within jitted exact_search)
+_BIAS = 0x80000000
 
 
 def split_planes(scores: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """int64 scores → (hi int32, sign-biased lo int32); lex order preserved."""
     s = scores.astype(jnp.int64)
     hi = (s >> 32).astype(jnp.int32)
-    lo_u = (s & jnp.int64(0xFFFFFFFF)).astype(jnp.uint32) ^ _BIAS
+    lo_u = (s & jnp.int64(0xFFFFFFFF)).astype(jnp.uint32) ^ jnp.uint32(_BIAS)
     return hi, lo_u.astype(jnp.int32)
 
 
 def combine_planes(hi: jax.Array, lo: jax.Array) -> jax.Array:
     lo_u = (jax.lax.bitcast_convert_type(lo.astype(jnp.int32), jnp.uint32)
-            ^ _BIAS).astype(jnp.int64)
+            ^ jnp.uint32(_BIAS)).astype(jnp.int64)
     return (hi.astype(jnp.int64) << 32) | lo_u
 
 

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import boundary, commands, machine, search, snapshot
+from repro.core import boundary, commands, machine, query, snapshot
 from repro.core.contracts import DEFAULT_CONTRACT, PrecisionContract
 from repro.core.state import MemoryState, init_state
 from repro.models import transformer as tf
@@ -43,6 +43,13 @@ class ServeConfig:
     s_cache: int = 512
     contract: PrecisionContract = DEFAULT_CONTRACT
     context_tokens: int = 32     # tokens of each retrieved doc to prepend
+    # read-path planning (DESIGN.md §4): the planner picks exact-scan vs
+    # HNSW per request from static facts; "auto" applies the planner rules,
+    # "exact"/"hnsw" force a route
+    route: str = "auto"
+    ef: int = 64                 # HNSW beam width when that route is taken
+    exact_threshold: int = 1024  # live count at/below which exact scan wins
+    use_kernel: bool = False     # Pallas qgemm/qtopk on the exact route
 
 
 class MemoryAugmentedEngine:
@@ -56,6 +63,7 @@ class MemoryAugmentedEngine:
         self.log = commands.empty_log(cfg.d_model, serve_cfg.contract)
         self.docs: Dict[int, np.ndarray] = {}   # id -> token prefix
         self._next_id = 0
+        self.last_plan: Optional[query.QueryPlan] = None
 
         self._embed_fn = jax.jit(self._embed_batch)
         self._prefill = jax.jit(
@@ -108,12 +116,29 @@ class MemoryAugmentedEngine:
 
     def retrieve(self, prompt_tokens: np.ndarray, k: Optional[int] = None
                  ) -> Tuple[np.ndarray, np.ndarray]:
-        """[B, L] prompts → (ids [B, k], scores [B, k]) — deterministic."""
+        """[B, L] prompts → (ids [B, k], scores [B, k]) — deterministic.
+
+        The whole batch runs under one jit on the route the query planner
+        picks from static facts (live count, k, ef) — bit-identical to the
+        per-query reference loop either way (DESIGN.md §4). The decision is
+        recorded on ``self.last_plan`` for audit."""
         k = k or self.sc.retrieve_k
         emb = self._embed_fn(self.params, jnp.asarray(prompt_tokens))
         q_raw = boundary.admit_query(emb, self.sc.contract)
-        ids, scores = search.exact_search(self.memory, q_raw, k)
+        plan = query.plan_query(
+            int(self.memory.count), k, self.sc.ef,
+            use_kernel=self.sc.use_kernel,
+            exact_threshold=self.sc.exact_threshold, route=self.sc.route)
+        self.last_plan = plan
+        ids, scores = query.execute_plan(self.memory, q_raw, k, plan)
         return np.asarray(ids), np.asarray(scores)
+
+    def retrieval_hash(self, prompt_tokens: np.ndarray,
+                       k: Optional[int] = None) -> int:
+        """Platform-invariant hash of the retrieval set for these prompts —
+        the read-path audit artifact (paper §8.1 applied to queries)."""
+        ids, scores = self.retrieve(prompt_tokens, k)
+        return query.retrieval_hash(ids, scores)
 
     # ------------------------------------------------------------------ #
     # GENERATE
