@@ -1,31 +1,55 @@
-"""Paper §8.1: the snapshot-transfer test (H_A ≡ H_B) at the paper's scale —
-10,000 vectors — plus k-NN order preservation after restore and replay-from-
-log equivalence.
+"""Durability benchmarks (paper §8.1 + DESIGN.md §5).
+
+Three tables, hash-checked on every run (a durability number for bytes that
+don't restore bit-identically would be meaningless):
+
+  1. the paper's snapshot-transfer test (H_A ≡ H_B) at 10k vectors, on both
+     the v1 blob and the v2 chunked format;
+  2. full vs incremental snapshot: bytes written + latency for a fresh v2
+     snapshot vs one taken after a small mutation batch (content addressing
+     should pay for only the dirty chunks);
+  3. time travel: ``restore_at(t)`` (nearest snapshot + WAL tail) vs
+     genesis replay of ``log[:t]`` — the recovery-latency win that makes
+     post-hoc audit operational.
+
+Run directly (``python benchmarks/bench_snapshot.py [--smoke]``) or via
+``benchmarks.run``. ``--smoke`` shrinks n so CI exercises the whole path in
+seconds.
 """
 from __future__ import annotations
+
+import sys
+import tempfile
+import time
 
 import numpy as np
 
 import repro  # noqa: F401
+import jax
 import jax.numpy as jnp
 from benchmarks.common import emit, time_us
-from repro.core import boundary, commands, hashing, machine, search, snapshot
+from repro.core import (boundary, commands, durability, hashing, machine,
+                        search, snapshot)
 from repro.core.state import init_state
 
 
-def run() -> None:
+def _build(n: int, dim: int, capacity: int):
     rng = np.random.default_rng(0)
-    n, dim = 10_000, 64
     vecs = boundary.normalize_embedding(
         rng.normal(size=(n, dim)).astype(np.float32))
     ids = jnp.arange(n, dtype=jnp.int64)
-
-    # exact-search arena (HNSW-incremental insert of 10k is exercised at
-    # smaller scale in tests; the transfer property is index-independent)
-    state = init_state(16_384, dim, hnsw_levels=1, hnsw_degree=2)
     log = commands.insert_batch(ids, vecs)
-    state = machine.replay(state, log)
+    state = machine.bulk_apply(
+        init_state(capacity, dim, hnsw_levels=1, hnsw_degree=2), log)
+    return state, log, rng
 
+
+def run(n: int = 10_000, mutate: int = 64) -> None:
+    dim = 64
+    capacity = int(n * 1.6384)  # 16_384 at the paper's 10k scale
+    state, log, rng = _build(n, dim, capacity)
+
+    # ---- table 1: snapshot transfer, v1 and v2 --------------------------- #
     h_a = hashing.hash_pytree(state)                    # "machine A"
     blob = snapshot.snapshot_bytes(state)
     state_b, h_b = snapshot.restore_bytes(blob)         # "machine B"
@@ -36,17 +60,77 @@ def run() -> None:
     knn_identical = bool((np.asarray(ids_a) == np.asarray(ids_b)).all()
                          and (np.asarray(s_a) == np.asarray(s_b)).all())
 
-    replay_hash = hashing.hash_pytree(
-        machine.replay(init_state(16_384, dim, hnsw_levels=1, hnsw_degree=2),
-                       log))
-
     us = time_us(lambda: snapshot.snapshot_bytes(state), warmup=1, iters=3)
-    emit("sec81_snapshot_transfer", us,
+    emit("sec81_snapshot_transfer_v1", us,
          f"H_A==H_B={h_a == h_b};knn_order_identical={knn_identical};"
-         f"replay_hash_matches={replay_hash == h_a};"
          f"snapshot_mb={len(blob)/1e6:.1f}")
-    assert h_a == h_b and knn_identical and replay_hash == h_a
+    assert h_a == h_b and knn_identical
+
+    with tempfile.TemporaryDirectory() as tmp:
+        chunks = snapshot.ChunkStore(tmp)
+        t0 = time.perf_counter()
+        manifest, full_stats = snapshot.snapshot_v2(state, chunks)
+        t_full = time.perf_counter() - t0
+        _, h_v2 = snapshot.restore_v2(manifest, chunks)
+        emit("sec81_snapshot_transfer_v2", t_full * 1e6,
+             f"hash_equal={h_v2 == h_a};"
+             f"written_mb={full_stats['bytes_written']/1e6:.1f};"
+             f"manifest_kb={full_stats['manifest_bytes']/1e3:.1f}")
+        assert h_v2 == h_a
+
+        # ---- table 2: full vs incremental ------------------------------- #
+        mut_vecs = boundary.normalize_embedding(
+            rng.normal(size=(mutate, dim)).astype(np.float32))
+        mut_log = commands.insert_batch(
+            jnp.arange(n, n + mutate, dtype=jnp.int64), mut_vecs)
+        state2 = machine.bulk_apply(state, mut_log)
+        t0 = time.perf_counter()
+        manifest2, inc_stats = snapshot.snapshot_v2(state2, chunks)
+        t_inc = time.perf_counter() - t0
+        _, h_inc = snapshot.restore_v2(manifest2, chunks)
+        assert h_inc == hashing.hash_pytree(state2), "incremental diverged"
+        shrink = full_stats["bytes_written"] / max(inc_stats["bytes_written"], 1)
+        emit(f"snapshot_incremental_after_{mutate}_inserts", t_inc * 1e6,
+             f"written_kb={inc_stats['bytes_written']/1e3:.1f};"
+             f"full_written_kb={full_stats['bytes_written']/1e3:.1f};"
+             f"write_shrink={shrink:.1f}x;hash_equal=True")
+
+    # ---- table 3: restore_at vs genesis replay -------------------------- #
+    # operational shape: a checkpoint exists at t_s, the head is n//8
+    # commands later; recovering the head should cost a snapshot restore
+    # plus a short WAL tail, not a replay of the whole history
+    with tempfile.TemporaryDirectory() as tmp:
+        genesis = init_state(capacity, dim, hnsw_levels=1, hnsw_degree=2)
+        store = durability.DurableStore(tmp, genesis,
+                                        segment_records=max(n // 4, 64))
+        store.append(log)
+        t_s = n - n // 8
+        s_mid = machine.bulk_apply(genesis, log.slice(0, t_s))
+        store.checkpoint(jax.tree.map(np.asarray, s_mid))
+
+        s_tt, h_tt = store.restore_at(n)  # warm (jit the tail shapes)
+        t0 = time.perf_counter()
+        s_tt, h_tt = store.restore_at(n)
+        t_restore = time.perf_counter() - t0
+
+        s_replay = machine.bulk_apply(genesis, log)  # warm
+        jax.block_until_ready(s_replay.version)
+        t0 = time.perf_counter()
+        s_replay = machine.bulk_apply(genesis, log)
+        jax.block_until_ready(s_replay.version)
+        t_replay = time.perf_counter() - t0
+        h_replay = hashing.hash_pytree(s_replay)
+        emit(f"restore_at_t{n}_from_snapshot_t{t_s}", t_restore * 1e6,
+             f"genesis_replay_us={t_replay*1e6:.0f};"
+             f"speedup={t_replay/t_restore:.1f}x;"
+             f"hash_equal={h_tt == h_replay == h_a}")
+        if not (h_tt == h_replay == h_a):
+            raise RuntimeError(
+                f"restore_at diverged from genesis replay at t={n}: "
+                f"{h_tt:#x} != {h_replay:#x}")
 
 
 if __name__ == "__main__":
-    run()
+    smoke = "--smoke" in sys.argv[1:]
+    print("name,us_per_call,derived")
+    run(n=1_000, mutate=16) if smoke else run()

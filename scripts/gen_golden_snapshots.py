@@ -1,0 +1,50 @@
+"""Regenerate the golden snapshot fixtures in tests/fixtures/.
+
+Run ONLY when the snapshot format version is deliberately bumped:
+  PYTHONPATH=src python scripts/gen_golden_snapshots.py
+
+The fixtures pin the v1 blob bytes, the v2 manifest bytes, the v2 chunk
+files and the state hash of a tiny deterministic state (integer-only
+commands — no float boundary — so the bytes are platform-invariant).
+tests/test_durability.py asserts byte-for-byte stability against them, so
+any accidental format drift fails review instead of corrupting archives.
+"""
+import json
+import pathlib
+import shutil
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "tests"))
+
+import repro  # noqa: F401
+from repro.core import hashing, snapshot
+from test_durability import _golden_state
+
+CHUNK_SIZE = 64
+FIXTURES = pathlib.Path(__file__).resolve().parents[1] / "tests" / "fixtures"
+
+
+def main() -> None:
+    FIXTURES.mkdir(exist_ok=True)
+    state = _golden_state()
+    h = hashing.hash_pytree(state)
+
+    (FIXTURES / "golden_v1.bin").write_bytes(snapshot.snapshot_bytes(state))
+
+    chunk_dir = FIXTURES / "golden_v2_chunks"
+    if chunk_dir.exists():
+        shutil.rmtree(chunk_dir)
+    store = snapshot.ChunkStore(chunk_dir)
+    manifest, stats = snapshot.snapshot_v2(state, store, chunk_size=CHUNK_SIZE)
+    (FIXTURES / "golden_v2_manifest.bin").write_bytes(manifest)
+
+    (FIXTURES / "golden.json").write_text(json.dumps(
+        {"state_hash": f"{h:#x}", "chunk_size": CHUNK_SIZE,
+         "v1_bytes": (FIXTURES / "golden_v1.bin").stat().st_size,
+         "v2_manifest_bytes": len(manifest),
+         "v2_chunks": stats["chunks_written"]}, indent=2) + "\n")
+    print(f"golden state hash {h:#x}; v2 chunks {stats['chunks_written']}")
+
+
+if __name__ == "__main__":
+    main()

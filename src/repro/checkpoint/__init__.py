@@ -1,2 +1,3 @@
-from repro.checkpoint.manager import (CheckpointManager, load_checkpoint,  # noqa: F401
-                                      save_checkpoint)
+from repro.checkpoint.manager import (CheckpointManager,  # noqa: F401
+                                      DurableCheckpointManager,
+                                      load_checkpoint, save_checkpoint)

@@ -4,10 +4,20 @@ state (paper §5.2/§8.1 applied to params/optimizer/data-cursor).
 Every checkpoint is a directory:
   manifest.json  — step, FNV-1a tree hash (hashing.hash_pytree), leaf index
   <n>.npy        — one file per leaf, little-endian, in sorted-path order
+                   (or, in dedup mode, chunk references into a shared
+                   content-addressed ChunkStore — identical leaves across
+                   steps are stored once; see DESIGN.md §5)
 
 Restore re-hashes and refuses a mismatch, exactly like snapshot transfer in
 the paper (H_A ≡ H_B). An async mode hides the host write behind compute
-(double-buffered thread), standard for large-scale training.
+(double-buffered thread), standard for large-scale training; a failure in
+the background writer is recorded and re-raised on the next ``save()`` /
+``wait()`` — silent checkpoint loss is worse than a crashed trainer.
+
+``DurableCheckpointManager`` applies the same rotation policy to a memory
+``DurableStore``: each save appends the new commands to the WAL, writes an
+incremental v2 snapshot, and retains the last ``keep`` (snapshot,
+WAL-segment) pairs together.
 """
 from __future__ import annotations
 
@@ -16,20 +26,27 @@ import json
 import pathlib
 import shutil
 import threading
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.core import hashing
+from repro.core.commands import CommandLog
+from repro.core.durability import DurableStore
+from repro.core.snapshot import ChunkStore
+from repro.core.state import MemoryState
 
 
 def _leaves_with_paths(tree: Any):
     return jax.tree_util.tree_flatten_with_path(tree)[0]
 
 
-def save_checkpoint(path: str | pathlib.Path, tree: Any, step: int) -> int:
-    """Write a checkpoint; returns the state hash."""
+def save_checkpoint(path: str | pathlib.Path, tree: Any, step: int,
+                    chunk_store: Optional[ChunkStore] = None) -> int:
+    """Write a checkpoint; returns the state hash. With ``chunk_store``,
+    leaf payloads go into the shared content-addressed store (deduplicated
+    across steps) and the step directory holds only the manifest."""
     path = pathlib.Path(path)
     tmp = path.with_name(path.name + ".tmp")
     if tmp.exists():
@@ -40,9 +57,16 @@ def save_checkpoint(path: str | pathlib.Path, tree: Any, step: int) -> int:
     index = []
     for i, (kp, leaf) in enumerate(leaves):
         arr = np.asarray(leaf)
-        np.save(tmp / f"{i}.npy", arr)
-        index.append({"path": jax.tree_util.keystr(kp),
-                      "dtype": str(arr.dtype), "shape": list(arr.shape)})
+        entry = {"path": jax.tree_util.keystr(kp),
+                 "dtype": str(arr.dtype), "shape": list(arr.shape)}
+        if chunk_store is None:
+            np.save(tmp / f"{i}.npy", arr)
+        else:
+            payload = arr.astype(arr.dtype.newbyteorder("<"),
+                                 copy=False).tobytes()
+            key, _ = chunk_store.put(payload)
+            entry["chunk"] = f"{key:016x}"
+        index.append(entry)
     h = hashing.hash_pytree(tree)
     (tmp / "manifest.json").write_text(json.dumps(
         {"step": step, "hash": f"{h:#x}", "leaves": index}))
@@ -52,7 +76,8 @@ def save_checkpoint(path: str | pathlib.Path, tree: Any, step: int) -> int:
     return h
 
 
-def load_checkpoint(path: str | pathlib.Path, tree_like: Any
+def load_checkpoint(path: str | pathlib.Path, tree_like: Any,
+                    chunk_store: Optional[ChunkStore] = None
                     ) -> Tuple[Any, int, int]:
     """Restore into the structure of ``tree_like``; verifies the hash.
     Returns (tree, step, hash)."""
@@ -65,7 +90,17 @@ def load_checkpoint(path: str | pathlib.Path, tree_like: Any
         assert jax.tree_util.keystr(kp) == meta["path"], (
             f"leaf order mismatch at {i}: {jax.tree_util.keystr(kp)} vs "
             f"{meta['path']}")
-        arr = np.load(path / f"{i}.npy")
+        if "chunk" in meta:
+            if chunk_store is None:
+                raise ValueError(
+                    f"{path} is a deduplicated checkpoint; pass its "
+                    "ChunkStore to load it")
+            dtype = np.dtype(meta["dtype"])
+            payload = chunk_store.get(int(meta["chunk"], 16))
+            arr = np.frombuffer(payload, dtype=dtype.newbyteorder("<")
+                                ).astype(dtype).reshape(meta["shape"])
+        else:
+            arr = np.load(path / f"{i}.npy")
         restored.append(jax.numpy.asarray(arr))
     treedef = jax.tree_util.tree_structure(tree_like)
     tree = jax.tree_util.tree_unflatten(treedef, restored)
@@ -80,17 +115,20 @@ def load_checkpoint(path: str | pathlib.Path, tree_like: Any
 
 @dataclasses.dataclass
 class CheckpointManager:
-    """Rotating checkpoints + optional async writes."""
+    """Rotating checkpoints + optional async writes + optional dedup."""
 
     directory: str
     keep: int = 3
     async_save: bool = True
+    dedup: bool = False  # content-address leaves in a shared chunk store
 
     def __post_init__(self):
         self._dir = pathlib.Path(self.directory)
         self._dir.mkdir(parents=True, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         self.last_hash: Optional[int] = None
+        self._chunks = ChunkStore(self._dir / "chunks") if self.dedup else None
 
     # ------------------------------------------------------------------ #
     def _ckpt_path(self, step: int) -> pathlib.Path:
@@ -104,35 +142,115 @@ class CheckpointManager:
         return out
 
     def wait(self):
+        """Join any in-flight write; re-raise an error it recorded. A save
+        that failed in the background MUST NOT vanish — the trainer would
+        keep running believing it has a restart point."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint save failed") from err
 
     def save(self, tree: Any, step: int) -> None:
         # snapshot to host synchronously (cheap vs device compute), write
         # + rotate in a background thread (the async part that matters)
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
-        self.wait()
+        self.wait()  # raises here if the previous async save failed
 
         def work():
-            self.last_hash = save_checkpoint(self._ckpt_path(step), host_tree,
-                                             step)
-            self._gc()
+            try:
+                self.last_hash = save_checkpoint(
+                    self._ckpt_path(step), host_tree, step,
+                    chunk_store=self._chunks)
+                self._gc()
+            except BaseException as e:  # noqa: BLE001 — recorded, re-raised
+                self._error = e
 
         if self.async_save:
             self._thread = threading.Thread(target=work, daemon=True)
             self._thread.start()
         else:
             work()
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise RuntimeError("checkpoint save failed") from err
 
     def restore_latest(self, tree_like: Any) -> Optional[Tuple[Any, int, int]]:
         self.wait()
         steps = self.steps()
         if not steps:
             return None
-        return load_checkpoint(self._ckpt_path(steps[-1]), tree_like)
+        return load_checkpoint(self._ckpt_path(steps[-1]), tree_like,
+                               chunk_store=self._chunks)
 
     def _gc(self):
         steps = self.steps()
         for s in steps[:-self.keep]:
             shutil.rmtree(self._ckpt_path(s), ignore_errors=True)
+        if self._chunks is not None:
+            referenced = set()
+            for s in self.steps():
+                manifest = json.loads(
+                    (self._ckpt_path(s) / "manifest.json").read_text())
+                for meta in manifest["leaves"]:
+                    if "chunk" in meta:
+                        referenced.add(int(meta["chunk"], 16))
+            for key in self._chunks.keys():
+                if key not in referenced:
+                    self._chunks.delete(key)
+
+
+class DurableCheckpointManager:
+    """Rotation policy over a memory DurableStore: append → snapshot →
+    retain the newest ``keep`` (snapshot, WAL-segment) pairs. The async
+    error contract matches ``CheckpointManager`` — background failures
+    surface on the next call, never silently."""
+
+    def __init__(self, directory: str, genesis: Optional[MemoryState] = None,
+                 *, keep: int = 3, async_save: bool = False, **store_kwargs):
+        self.store = DurableStore(directory, genesis, **store_kwargs)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self.last_stats: Optional[Dict[str, int]] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async durable checkpoint failed") from err
+
+    def save(self, state: MemoryState,
+             new_commands: Optional[CommandLog] = None) -> None:
+        """Durably persist ``state``: append its new commands (if any) to
+        the WAL, snapshot at its cursor, age out old pairs."""
+        self.wait()
+        host_state = jax.tree.map(np.asarray, state)
+
+        def work():
+            try:
+                if new_commands is not None:
+                    self.store.append(new_commands)
+                stats = self.store.checkpoint(host_state)
+                stats.update(self.store.retain(self.keep))
+                self.last_stats = stats
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise RuntimeError("durable checkpoint failed") from err
+
+    def recover(self) -> Tuple[MemoryState, int, int]:
+        """(state, hash, t) at the last durable prefix."""
+        self.wait()
+        return self.store.recover()

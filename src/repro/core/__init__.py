@@ -9,7 +9,12 @@ Public surface:
   machine     — the pure transition function F + replay (paper §3.1) and
                 the hash-identical vectorized bulk_apply (DESIGN.md §3)
   hashing     — platform-invariant tree hashes (paper §8.1)
-  snapshot    — serialize/restore with hash verification (paper §8.1)
+  snapshot    — serialize/restore with hash verification (paper §8.1):
+                v1 blobs + v2 chunked content-addressed store (DESIGN.md §5)
+  wal         — segmented, hash-chained write-ahead command log with
+                replay-equivalent compaction (DESIGN.md §5)
+  durability  — DurableStore: snapshots + WAL + restore_at time travel,
+                crash recovery, retention (DESIGN.md §5)
   search      — exact deterministic k-NN (wide integer scores)
   hnsw        — deterministic HNSW (paper §7), TPU-adapted
   query       — batched deterministic query engine: vmapped HNSW, planner,
@@ -17,15 +22,17 @@ Public surface:
   distributed — pod-scale sharded memory over shard_map (DESIGN.md §2)
   compat      — version-bridging shims over moved JAX APIs
 """
-from repro.core import (boundary, commands, contracts, distributed, fixedpoint,
-                        hashing, hnsw, machine, query, search, snapshot, state)
+from repro.core import (boundary, commands, contracts, distributed, durability,
+                        fixedpoint, hashing, hnsw, machine, query, search,
+                        snapshot, state, wal)
 from repro.core.contracts import (CONTRACTS, DEFAULT_CONTRACT, Q8_8, Q16_16,
                                   Q32_32, PrecisionContract, get_contract)
 from repro.core.state import MemoryState, init_state
 
 __all__ = [
-    "boundary", "commands", "contracts", "distributed", "fixedpoint",
-    "hashing", "hnsw", "machine", "query", "search", "snapshot", "state",
+    "boundary", "commands", "contracts", "distributed", "durability",
+    "fixedpoint", "hashing", "hnsw", "machine", "query", "search", "snapshot",
+    "state", "wal",
     "CONTRACTS", "DEFAULT_CONTRACT", "Q8_8", "Q16_16", "Q32_32",
     "PrecisionContract", "get_contract", "MemoryState", "init_state",
 ]

@@ -177,6 +177,44 @@ def distributed_replay(mesh: Mesh, axis: str, state: MemoryState,
     return _replay(state, routed_log)
 
 
+def shard_slice(state: MemoryState, s: int, n_shards: int) -> MemoryState:
+    """Shard ``s`` of a shard-major sharded-layout state as a plain
+    single-kernel MemoryState (host-side view; inverse of ``merge_shards``)."""
+    cap = state.capacity // n_shards
+    lo, hi = s * cap, (s + 1) * cap
+    return dataclasses.replace(
+        state,
+        vectors=state.vectors[lo:hi], ids=state.ids[lo:hi],
+        valid=state.valid[lo:hi], links=state.links[lo:hi],
+        meta=state.meta[lo:hi],
+        hnsw_neighbors=state.hnsw_neighbors[:, lo:hi],
+        hnsw_levels=state.hnsw_levels[lo:hi],
+        hnsw_entry=state.hnsw_entry[s], cursor=state.cursor[s],
+        count=state.count[s], version=state.version[s],
+    )
+
+
+def merge_shards(shards) -> MemoryState:
+    """Reassemble per-shard kernel states into the sharded layout (row
+    arrays concatenated shard-major, per-shard scalars stacked)."""
+    def cat(field):
+        return jnp.concatenate([getattr(sh, field) for sh in shards], axis=0)
+
+    def stack_scalar(field):
+        return jnp.stack([getattr(sh, field) for sh in shards])
+
+    return dataclasses.replace(
+        shards[0],
+        vectors=cat("vectors"), ids=cat("ids"), valid=cat("valid"),
+        links=cat("links"), meta=cat("meta"),
+        hnsw_neighbors=jnp.concatenate(
+            [sh.hnsw_neighbors for sh in shards], axis=1),
+        hnsw_levels=cat("hnsw_levels"),
+        hnsw_entry=stack_scalar("hnsw_entry"), cursor=stack_scalar("cursor"),
+        count=stack_scalar("count"), version=stack_scalar("version"),
+    )
+
+
 def distributed_bulk_apply(mesh: Mesh, axis: str, state: MemoryState,
                            routed_log: CommandLog, *, ef_construction: int = 32
                            ) -> MemoryState:
@@ -197,42 +235,15 @@ def distributed_bulk_apply(mesh: Mesh, axis: str, state: MemoryState,
     segmentation device-side is future work.
     """
     n_shards = mesh.shape[axis]
-    cap = state.capacity // n_shards
 
     shards = []
     for s in range(n_shards):
-        local = dataclasses.replace(
-            state,
-            vectors=state.vectors[s * cap:(s + 1) * cap],
-            ids=state.ids[s * cap:(s + 1) * cap],
-            valid=state.valid[s * cap:(s + 1) * cap],
-            links=state.links[s * cap:(s + 1) * cap],
-            meta=state.meta[s * cap:(s + 1) * cap],
-            hnsw_neighbors=state.hnsw_neighbors[:, s * cap:(s + 1) * cap],
-            hnsw_levels=state.hnsw_levels[s * cap:(s + 1) * cap],
-            hnsw_entry=state.hnsw_entry[s], cursor=state.cursor[s],
-            count=state.count[s], version=state.version[s],
-        )
+        local = shard_slice(state, s, n_shards)
         local_log = jax.tree.map(lambda a, s=s: a[s], routed_log)
         shards.append(machine.bulk_apply(local, local_log,
                                          ef_construction=ef_construction))
 
-    def cat(field):
-        return jnp.concatenate([getattr(sh, field) for sh in shards], axis=0)
-
-    def stack_scalar(field):
-        return jnp.stack([getattr(sh, field) for sh in shards])
-
-    out = dataclasses.replace(
-        state,
-        vectors=cat("vectors"), ids=cat("ids"), valid=cat("valid"),
-        links=cat("links"), meta=cat("meta"),
-        hnsw_neighbors=jnp.concatenate(
-            [sh.hnsw_neighbors for sh in shards], axis=1),
-        hnsw_levels=cat("hnsw_levels"),
-        hnsw_entry=stack_scalar("hnsw_entry"), cursor=stack_scalar("cursor"),
-        count=stack_scalar("count"), version=stack_scalar("version"),
-    )
+    out = merge_shards(shards)
     specs = state_specs(axis, state.contract_name)
     return jax.tree.map(
         lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)), out, specs)
@@ -268,6 +279,75 @@ def distributed_hnsw_search(mesh: Mesh, axis: str, state: MemoryState,
         return i_out, d_out
 
     return _search(state, queries_raw)
+
+
+# --------------------------------------------------------------------------- #
+# per-shard snapshots under one merged manifest (DESIGN.md §5)
+# --------------------------------------------------------------------------- #
+
+SHARDED_MAGIC = b"VLRS"
+SHARDED_FORMAT = 1
+
+
+def snapshot_sharded(state: MemoryState, n_shards: int, store, *,
+                     chunk_size: int | None = None) -> bytes:
+    """Write one v2 snapshot per shard into ``store`` (a
+    ``snapshot.ChunkStore``) and return a merged manifest whose combined
+    hash is the hash of the whole sharded-layout state — the same value a
+    single host computes over the assembled arenas, so a pod and a
+    single-kernel holder of identical content agree on one number.
+
+    Shards share the chunk store: identical chunks (e.g. untouched empty
+    arena regions) are stored once across all shards."""
+    import struct
+
+    from repro.core import hashing as hashing_lib
+    from repro.core import snapshot as snapshot_lib
+
+    chunk_size = chunk_size or snapshot_lib.DEFAULT_CHUNK_SIZE
+    parts = []
+    for s in range(n_shards):
+        manifest, _ = snapshot_lib.snapshot_v2(
+            shard_slice(state, s, n_shards), store, chunk_size=chunk_size)
+        parts.append(manifest)
+    combined = hashing_lib.hash_pytree(state)
+    out = [SHARDED_MAGIC, struct.pack("<II", SHARDED_FORMAT, n_shards),
+           struct.pack("<Q", combined)]
+    for m in parts:
+        out.append(struct.pack("<Q", len(m)))
+        out.append(m)
+    return b"".join(out)
+
+
+def restore_sharded(data: bytes, store) -> Tuple[MemoryState, int]:
+    """Restore a merged manifest: per-shard v2 restores, reassembled with
+    ``merge_shards``; verifies the combined hash. Returns (state, hash)."""
+    import struct
+
+    from repro.core import hashing as hashing_lib
+    from repro.core import snapshot as snapshot_lib
+
+    if data[:4] != SHARDED_MAGIC:
+        raise ValueError("not a sharded Valori snapshot manifest")
+    fmt, n_shards = struct.unpack_from("<II", data, 4)
+    if fmt != SHARDED_FORMAT:
+        raise ValueError(f"unsupported sharded manifest format {fmt}")
+    (stored,) = struct.unpack_from("<Q", data, 12)
+    off = 20
+    shards = []
+    for _ in range(n_shards):
+        (n,) = struct.unpack_from("<Q", data, off)
+        off += 8
+        shard, _ = snapshot_lib.restore_v2(data[off:off + n], store)
+        off += n
+        shards.append(shard)
+    state = merge_shards(shards)
+    actual = hashing_lib.hash_pytree(state)
+    if actual != stored:
+        raise ValueError(
+            f"sharded snapshot combined-hash mismatch: stored {stored:#x}, "
+            f"got {actual:#x}")
+    return state, actual
 
 
 def distributed_search(mesh: Mesh, axis: str, state: MemoryState,

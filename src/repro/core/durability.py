@@ -1,0 +1,256 @@
+"""Durable store: snapshots + WAL + time travel (DESIGN.md §5).
+
+Ties the two durability primitives together into an operational recovery
+and audit path:
+
+  * every applied command is appended to a segmented, hash-chained
+    ``WriteAheadLog`` (wal.py);
+  * checkpoints are v2 content-addressed snapshots (snapshot.py) whose
+    manifest carries the applied-command cursor ``t`` (== state.version,
+    the monotone logical clock every command advances);
+  * ``restore_at(store, t)`` materializes the state *as of command t*:
+    nearest snapshot ≤ t, then ``machine.bulk_apply`` of the WAL tail —
+    bit-identical (hash-equal) to ``machine.replay(genesis, log[:t])`` at
+    every offset, because bulk_apply is replay-equivalent by contract and
+    snapshot restore is hash-verified;
+  * ``recover()`` is crash recovery: the WAL open truncates any torn tail
+    to the longest valid record prefix, and the state is rebuilt at
+    ``max(newest snapshot t, durable WAL prefix)``;
+  * ``retain(keep)`` ages out (snapshot, WAL-segment) pairs together: old
+    manifests are deleted, WAL segments wholly below the oldest retained
+    snapshot are dropped, and chunks no surviving manifest references are
+    swept. The time-travel window shrinks accordingly — never the ability
+    to recover the present.
+
+Layout of a store directory:
+  store.json                    dim / contract / chunk_size / segment_records
+  chunks/<key:016x>.chk         content-addressed chunk store (shared)
+  snapshots/t_<t:020d>.vsn2     v2 manifests, named by cursor
+  wal/seg_<base_t:020d>.wal     hash-chained command segments
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import struct
+import threading
+from typing import Dict, List, Optional, Tuple
+
+# a torn manifest can fail in the struct layer (struct.error), on a garbage
+# contract name (KeyError), or on a short/unicode-broken string read before
+# any semantic hash check runs; all of it means "this snapshot is unusable,
+# fall back to an older one"
+_RESTORE_ERRORS = (ValueError, OSError, KeyError, struct.error)
+
+from repro.core import hashing, machine, snapshot, wal
+from repro.core.commands import CommandLog
+from repro.core.contracts import get_contract
+from repro.core.state import MemoryState
+
+
+class DurableStore:
+    """One directory holding a memory's full durable history."""
+
+    def __init__(self, directory: str | os.PathLike,
+                 genesis: Optional[MemoryState] = None, *,
+                 chunk_size: int = snapshot.DEFAULT_CHUNK_SIZE,
+                 segment_records: int = 1024):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        meta_path = self.dir / "store.json"
+
+        if meta_path.exists():
+            meta = json.loads(meta_path.read_text())
+            dim = meta["dim"]
+            contract = get_contract(meta["contract"])
+            chunk_size = meta["chunk_size"]
+            segment_records = meta["segment_records"]
+        else:
+            if genesis is None:
+                raise ValueError(
+                    f"{self.dir} is not a DurableStore and no genesis state "
+                    "was given to create one")
+            dim = genesis.dim
+            contract = genesis.contract
+            meta = {"dim": dim, "contract": contract.name,
+                    "chunk_size": chunk_size,
+                    "segment_records": segment_records}
+            meta_path.write_text(json.dumps(meta))
+
+        self.chunk_size = chunk_size
+        # serializes WAL mutations (append / retain / compact) so a
+        # background checkpoint+retention thread can never unlink or rewrite
+        # a segment a foreground append is extending
+        self._lock = threading.RLock()
+        self.chunks = snapshot.ChunkStore(self.dir / "chunks")
+        self.wal = wal.WriteAheadLog(self.dir / "wal", dim, contract,
+                                     segment_records=segment_records)
+        self._snap_dir = self.dir / "snapshots"
+        self._snap_dir.mkdir(exist_ok=True)
+
+        if genesis is not None and not self.snapshots():
+            if int(genesis.version) != 0:
+                raise ValueError("genesis state must be at t=0 "
+                                 f"(got version {int(genesis.version)})")
+            self._write_snapshot(genesis)  # makes restore_at total over t
+
+    # ------------------------------------------------------------------ #
+    # snapshots
+    # ------------------------------------------------------------------ #
+
+    def _snap_path(self, t: int) -> pathlib.Path:
+        return self._snap_dir / f"t_{t:020d}.vsn2"
+
+    def snapshots(self) -> List[int]:
+        """Cursors of all retained snapshots, ascending."""
+        return sorted(int(p.stem.split("_")[1])
+                      for p in self._snap_dir.glob("t_*.vsn2"))
+
+    def _write_snapshot(self, state: MemoryState) -> Dict[str, int]:
+        manifest, stats = snapshot.snapshot_v2(state, self.chunks,
+                                               chunk_size=self.chunk_size)
+        t = int(state.version)
+        tmp = self._snap_path(t).with_suffix(".tmp")
+        with open(tmp, "wb") as f:  # chunks are fsynced by put(); sync the
+            f.write(manifest)       # manifest too before publishing it
+            f.flush()
+            os.fsync(f.fileno())
+        tmp.rename(self._snap_path(t))
+        return stats
+
+    def checkpoint(self, state: MemoryState) -> Dict[str, int]:
+        """Snapshot ``state`` at its cursor. The cursor must not run ahead
+        of the durable log — a snapshot of commands the WAL never saw could
+        not be audited back to genesis."""
+        t = int(state.version)
+        with self._lock:
+            wal_t = self.wal.t
+        if t > wal_t:
+            raise ValueError(
+                f"state cursor t={t} ahead of durable WAL t={wal_t}; "
+                "append the commands before checkpointing")
+        # the write itself runs outside the lock so appends keep flowing;
+        # checkpoint and retain are serialized by their callers (one
+        # background worker at a time — engine.wait_durable / manager.wait)
+        stats = self._write_snapshot(state)
+        stats["t"] = t
+        return stats
+
+    # ------------------------------------------------------------------ #
+    # the command stream
+    # ------------------------------------------------------------------ #
+
+    def append(self, log: CommandLog) -> int:
+        """Durably append commands; returns the new WAL cursor."""
+        with self._lock:
+            return self.wal.append(log)
+
+    @property
+    def t(self) -> int:
+        """Durable logical time: commands safely on disk."""
+        return self.wal.t
+
+    # ------------------------------------------------------------------ #
+    # time travel + recovery
+    # ------------------------------------------------------------------ #
+
+    def restore_at(self, t: int, *, ef_construction: int = 32
+                   ) -> Tuple[MemoryState, int]:
+        """The state as of command ``t`` — hash-identical to replaying
+        ``log[:t]`` from genesis. Returns (state, hash).
+
+        Snapshots that fail verification (torn chunks, missing files) are
+        skipped: the next-older snapshot plus a longer WAL tail rebuilds
+        the same bits, so one bad snapshot never loses history the WAL
+        still covers."""
+        with self._lock:
+            snaps = [s for s in self.snapshots() if s <= t]
+            if not snaps:
+                raise ValueError(
+                    f"no snapshot at or below t={t} (oldest retained: "
+                    f"{self.snapshots()[:1]}); retention dropped that history")
+            last_err: Optional[Exception] = None
+            for base_t in reversed(snaps):
+                try:
+                    state, _ = snapshot.restore_v2(
+                        self._snap_path(base_t).read_bytes(), self.chunks)
+                except _RESTORE_ERRORS as e:
+                    last_err = e  # broken snapshot: fall back one older
+                    continue
+                if t > base_t:
+                    tail = self.wal.read_range(base_t, t)
+                    state = machine.bulk_apply(
+                        state, tail, ef_construction=ef_construction)
+                return state, hashing.hash_pytree(state)
+            raise ValueError(
+                f"every snapshot at or below t={t} failed to restore"
+            ) from last_err
+
+    def recover(self, *, ef_construction: int = 32
+                ) -> Tuple[MemoryState, int, int]:
+        """Crash recovery: the state at the last durable prefix. The WAL
+        open already truncated any torn tail; the newest snapshot may run
+        ahead of a torn WAL (its chunks were durable first) — recover to
+        whichever durable point is latest, falling back to earlier points
+        if a snapshot is itself broken. When the recovered cursor is ahead
+        of the WAL, the WAL cursor is advanced past the lost region (an
+        explicit, refusable gap — never fabricated history), so new
+        appends and checkpoints stay consistent. Returns (state, hash, t)."""
+        with self._lock:
+            candidates = sorted({self.wal.t, *self.snapshots()}, reverse=True)
+            last_err: Optional[Exception] = None
+            for t in candidates:
+                try:
+                    state, h = self.restore_at(
+                        t, ef_construction=ef_construction)
+                except _RESTORE_ERRORS as e:
+                    last_err = e
+                    continue
+                if t > self.wal.t:
+                    self.wal.reset_to(t)
+                return state, h, t
+            raise ValueError("no recoverable state in the store") from last_err
+
+    # ------------------------------------------------------------------ #
+    # retention + compaction
+    # ------------------------------------------------------------------ #
+
+    def retain(self, keep: int) -> Dict[str, int]:
+        """Keep the newest ``keep`` snapshots; drop older manifests, WAL
+        segments wholly below the oldest retained snapshot, and chunks no
+        surviving manifest references."""
+        if keep < 1:
+            raise ValueError("must retain at least one snapshot")
+        with self._lock:
+            snaps = self.snapshots()
+            dropped = snaps[:-keep] if len(snaps) > keep else []
+            for t in dropped:
+                self._snap_path(t).unlink()
+            kept = self.snapshots()
+            segs_dropped = self.wal.drop_below(kept[0]) if kept else 0
+
+            referenced = set()
+            for t in kept:
+                referenced.update(snapshot.manifest_chunk_keys(
+                    self._snap_path(t).read_bytes()))
+            chunks_dropped = 0
+            for key in self.chunks.keys():
+                if key not in referenced:
+                    self.chunks.delete(key)
+                    chunks_dropped += 1
+            return {"snapshots_dropped": len(dropped),
+                    "wal_segments_dropped": segs_dropped,
+                    "chunks_dropped": chunks_dropped}
+
+    def compact_wal(self, genesis: MemoryState) -> Dict[str, int]:
+        """Fold dead commands in the WAL (wal.compact_log contract)."""
+        with self._lock:
+            return self.wal.compact(genesis)
+
+
+def restore_at(store: DurableStore, t: int, *, ef_construction: int = 32
+               ) -> Tuple[MemoryState, int]:
+    """Module-level alias: the state as of command ``t`` (see
+    ``DurableStore.restore_at``)."""
+    return store.restore_at(t, ef_construction=ef_construction)

@@ -17,6 +17,7 @@ test suite asserts this equivalence.
 """
 from __future__ import annotations
 
+import struct
 from typing import Any
 
 import jax
@@ -129,6 +130,18 @@ def _fnv_chain_host(entries) -> int:
     for e in entries:
         h = ((h ^ (int(e) & _U64)) * FNV_PRIME) & _U64
     return h
+
+
+def digest_bytes(data: bytes) -> int:
+    """Order-sensitive 64-bit digest of a raw byte string: zero-pad to
+    8-byte words, vectorized mix-fold, salted with an FNV hash of the
+    length (so a chunk and its zero-extension differ). Platform-invariant
+    like everything here, but ~100x faster than byte-wise FNV on bulk
+    payloads — this is what the durability layer (chunk keys, WAL record
+    chains) hashes with."""
+    pad = (-len(data)) % 8
+    words = np.frombuffer(data + b"\0" * pad, dtype="<u8").astype(np.uint64)
+    return _mix_fold_host(words) ^ _fnv1a_bytes(struct.pack("<Q", len(data)))
 
 
 def hash_pytree(tree: Any) -> int:

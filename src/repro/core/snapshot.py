@@ -5,17 +5,36 @@ leaf plus a manifest holding the FNV tree hash. Restoring on any machine and
 re-hashing must reproduce the manifest hash exactly — the paper's
 "Snapshot Transfer" experiment (H_A ≡ H_B) as an executable artifact.
 
-Format (all little-endian):
+Two on-disk formats coexist (DESIGN.md §5):
+
+v1 — one opaque blob (all little-endian):
   magic 'VLRI' | version u32 | contract name (len u32 + utf8)
   | leaf count u32 | per leaf: path (len+utf8), dtype str (len+utf8),
     ndim u32, dims u64..., payload bytes
   | trailer: fnv hash u64 (hash_pytree of the state)
+
+v2 — chunked + content-addressed: each leaf's canonical bytes are split
+into fixed-size chunks keyed by their FNV-1a hash and stored once in a
+``ChunkStore``; the snapshot itself is only a small *manifest*:
+  magic 'VLR2' | version u32 | contract name | t u64 (applied-command
+  cursor, == state.version) | chunk_size u32 | leaf count u32
+  | per leaf: path, dtype, ndim u32, dims u64..., nbytes u64,
+    n_chunks u32, chunk keys u64...
+  | trailer: fnv tree hash u64
+
+Because chunks are keyed by content, a second snapshot after N mutations
+re-uses every clean chunk and writes only the dirty ones — incremental
+snapshots fall out of content addressing, no dirty-tracking needed. The v1
+reader is kept verbatim for old blobs; ``restore_any`` dispatches on the
+magic.
 """
 from __future__ import annotations
 
 import io
+import os
+import pathlib
 import struct
-from typing import Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +45,12 @@ from repro.core.contracts import get_contract
 from repro.core.state import MemoryState
 
 MAGIC = b"VLRI"
+MAGIC_V2 = b"VLR2"
 FORMAT_VERSION = 1
+FORMAT_VERSION_V2 = 2
+DEFAULT_CHUNK_SIZE = 8192
+
+_U64 = (1 << 64) - 1
 
 
 def _write_str(buf: io.BytesIO, s: str) -> None:
@@ -40,6 +64,16 @@ def _read_str(buf: io.BytesIO) -> str:
     return buf.read(n).decode()
 
 
+def _canonical_leaf_bytes(leaf) -> Tuple[np.ndarray, bytes]:
+    arr = np.asarray(leaf)
+    return arr, arr.astype(arr.dtype.newbyteorder("<"), copy=False).tobytes()
+
+
+# --------------------------------------------------------------------------- #
+# v1: single opaque blob (kept byte-stable — golden fixture enforced)
+# --------------------------------------------------------------------------- #
+
+
 def snapshot_bytes(state: MemoryState) -> bytes:
     """Serialize a state. The embedded hash covers the *state tree*, so any
     bit flip in any leaf is detected at restore time."""
@@ -51,22 +85,42 @@ def snapshot_bytes(state: MemoryState) -> bytes:
     leaves = jax.tree_util.tree_flatten_with_path(state)[0]
     buf.write(struct.pack("<I", len(leaves)))
     for path, leaf in leaves:
-        arr = np.asarray(leaf)
+        arr, payload = _canonical_leaf_bytes(leaf)
         _write_str(buf, jax.tree_util.keystr(path))
         _write_str(buf, str(arr.dtype))
         buf.write(struct.pack("<I", arr.ndim))
         for d in arr.shape:
             buf.write(struct.pack("<Q", d))
-        canonical = arr.astype(arr.dtype.newbyteorder("<"), copy=False)
-        buf.write(canonical.tobytes())
+        buf.write(payload)
 
     h = hashing.hash_pytree(state)
     buf.write(struct.pack("<Q", h))
     return buf.getvalue()
 
 
+def _state_from_leaves(leaves: Dict[str, np.ndarray],
+                       contract_name: str) -> MemoryState:
+    def leaf_for(field: str):
+        return jnp.asarray(leaves[f".{field}"])
+
+    return MemoryState(
+        vectors=leaf_for("vectors"),
+        ids=leaf_for("ids"),
+        valid=leaf_for("valid"),
+        links=leaf_for("links"),
+        meta=leaf_for("meta"),
+        hnsw_neighbors=leaf_for("hnsw_neighbors"),
+        hnsw_levels=leaf_for("hnsw_levels"),
+        hnsw_entry=leaf_for("hnsw_entry"),
+        cursor=leaf_for("cursor"),
+        count=leaf_for("count"),
+        version=leaf_for("version"),
+        contract_name=contract_name,
+    )
+
+
 def restore_bytes(data: bytes) -> Tuple[MemoryState, int]:
-    """Restore a state; verifies the manifest hash. Returns (state, hash)."""
+    """Restore a v1 state; verifies the manifest hash. Returns (state, hash)."""
     buf = io.BytesIO(data)
     if buf.read(4) != MAGIC:
         raise ValueError("not a Valori snapshot")
@@ -89,24 +143,7 @@ def restore_bytes(data: bytes) -> Tuple[MemoryState, int]:
         leaves[path] = arr.reshape(shape)
 
     (stored_hash,) = struct.unpack("<Q", buf.read(8))
-
-    def leaf_for(field: str):
-        return jnp.asarray(leaves[f".{field}"])
-
-    state = MemoryState(
-        vectors=leaf_for("vectors"),
-        ids=leaf_for("ids"),
-        valid=leaf_for("valid"),
-        links=leaf_for("links"),
-        meta=leaf_for("meta"),
-        hnsw_neighbors=leaf_for("hnsw_neighbors"),
-        hnsw_levels=leaf_for("hnsw_levels"),
-        hnsw_entry=leaf_for("hnsw_entry"),
-        cursor=leaf_for("cursor"),
-        count=leaf_for("count"),
-        version=leaf_for("version"),
-        contract_name=contract_name,
-    )
+    state = _state_from_leaves(leaves, contract_name)
     actual = hashing.hash_pytree(state)
     if actual != stored_hash:
         raise ValueError(
@@ -125,3 +162,208 @@ def save(path: str, state: MemoryState) -> int:
 def load(path: str) -> Tuple[MemoryState, int]:
     with open(path, "rb") as f:
         return restore_bytes(f.read())
+
+
+# --------------------------------------------------------------------------- #
+# v2: content-addressed chunk store + manifest
+# --------------------------------------------------------------------------- #
+
+
+def chunk_key(data: bytes) -> int:
+    """Content key of a chunk: the vectorized word digest (length-salted,
+    so a chunk and its zero-padded extension stay distinct)."""
+    return hashing.digest_bytes(data)
+
+
+class ChunkStore:
+    """Content-addressed blob store: one file per chunk, named by key.
+
+    ``put`` is idempotent — re-putting bytes already present writes nothing,
+    which is what makes repeated snapshots incremental. ``get`` re-hashes
+    and refuses a corrupt chunk, so every restored byte is verified twice
+    (per chunk here, whole-tree in the manifest hash).
+    """
+
+    def __init__(self, directory: str | os.PathLike):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        # write-side stats, reset per snapshot by the callers that care
+        self.puts = 0
+        self.writes = 0
+        self.bytes_written = 0
+
+    def _path(self, key: int) -> pathlib.Path:
+        return self.dir / f"{key:016x}.chk"
+
+    def put(self, data: bytes) -> Tuple[int, bool]:
+        key = chunk_key(data)
+        self.puts += 1
+        path = self._path(key)
+        if path.exists():
+            return key, False
+        tmp = path.with_suffix(".tmp")
+        with open(tmp, "wb") as f:  # fsync before publish: a manifest must
+            f.write(data)           # never reference a chunk that could be
+            f.flush()               # torn by the crash the manifest survives
+            os.fsync(f.fileno())
+        tmp.rename(path)
+        self.writes += 1
+        self.bytes_written += len(data)
+        return key, True
+
+    def get(self, key: int) -> bytes:
+        data = self._path(key).read_bytes()
+        if chunk_key(data) != key:
+            raise ValueError(f"chunk {key:016x} corrupt (content hash mismatch)")
+        return data
+
+    def __contains__(self, key: int) -> bool:
+        return self._path(key).exists()
+
+    def keys(self) -> List[int]:
+        return sorted(int(p.stem, 16) for p in self.dir.glob("*.chk"))
+
+    def delete(self, key: int) -> None:
+        self._path(key).unlink(missing_ok=True)
+
+    def reset_stats(self) -> None:
+        self.puts = self.writes = self.bytes_written = 0
+
+
+def snapshot_v2(state: MemoryState, store: ChunkStore, *,
+                chunk_size: int = DEFAULT_CHUNK_SIZE
+                ) -> Tuple[bytes, Dict[str, int]]:
+    """Write the state's chunks into ``store`` and return (manifest bytes,
+    stats). Chunks already present are not rewritten — a snapshot taken
+    after N mutations costs only the dirty chunks."""
+    store.reset_stats()
+    buf = io.BytesIO()
+    buf.write(MAGIC_V2)
+    buf.write(struct.pack("<I", FORMAT_VERSION_V2))
+    _write_str(buf, state.contract_name)
+    buf.write(struct.pack("<Q", int(state.version) & _U64))
+    buf.write(struct.pack("<I", chunk_size))
+
+    leaves = jax.tree_util.tree_flatten_with_path(state)[0]
+    buf.write(struct.pack("<I", len(leaves)))
+    total = 0
+    for path, leaf in leaves:
+        arr, payload = _canonical_leaf_bytes(leaf)
+        total += len(payload)
+        _write_str(buf, jax.tree_util.keystr(path))
+        _write_str(buf, str(arr.dtype))
+        buf.write(struct.pack("<I", arr.ndim))
+        for d in arr.shape:
+            buf.write(struct.pack("<Q", d))
+        keys = []
+        for off in range(0, max(len(payload), 1), chunk_size):
+            key, _ = store.put(payload[off:off + chunk_size])
+            keys.append(key)
+        buf.write(struct.pack("<Q", len(payload)))
+        buf.write(struct.pack("<I", len(keys)))
+        for key in keys:
+            buf.write(struct.pack("<Q", key))
+
+    h = hashing.hash_pytree(state)
+    buf.write(struct.pack("<Q", h))
+    stats = {"chunks": store.puts, "chunks_written": store.writes,
+             "bytes_written": store.bytes_written, "bytes_total": total,
+             "manifest_bytes": buf.tell()}
+    return buf.getvalue(), stats
+
+
+def restore_v2(data: bytes, store: ChunkStore) -> Tuple[MemoryState, int]:
+    """Restore a v2 manifest against its chunk store; verifies every chunk's
+    content hash and the whole-tree hash. Returns (state, hash)."""
+    buf = io.BytesIO(data)
+    if buf.read(4) != MAGIC_V2:
+        raise ValueError("not a v2 Valori snapshot manifest")
+    (ver,) = struct.unpack("<I", buf.read(4))
+    if ver != FORMAT_VERSION_V2:
+        raise ValueError(f"unsupported snapshot version {ver}")
+    contract_name = _read_str(buf)
+    get_contract(contract_name)
+    (t,) = struct.unpack("<Q", buf.read(8))
+    (chunk_size,) = struct.unpack("<I", buf.read(4))
+    del chunk_size  # recorded for tooling; chunk lengths are self-describing
+
+    (n_leaves,) = struct.unpack("<I", buf.read(4))
+    leaves = {}
+    for _ in range(n_leaves):
+        path = _read_str(buf)
+        dtype = np.dtype(_read_str(buf))
+        (ndim,) = struct.unpack("<I", buf.read(4))
+        shape = tuple(struct.unpack("<Q", buf.read(8))[0] for _ in range(ndim))
+        (nbytes,) = struct.unpack("<Q", buf.read(8))
+        (n_chunks,) = struct.unpack("<I", buf.read(4))
+        parts = []
+        for _ in range(n_chunks):
+            (key,) = struct.unpack("<Q", buf.read(8))
+            parts.append(store.get(key))
+        payload = b"".join(parts)
+        if len(payload) != nbytes:
+            raise ValueError(
+                f"leaf {path}: reassembled {len(payload)} bytes, "
+                f"manifest says {nbytes}")
+        arr = np.frombuffer(payload, dtype=dtype.newbyteorder("<")).astype(dtype)
+        leaves[path] = arr.reshape(shape)
+
+    (stored_hash,) = struct.unpack("<Q", buf.read(8))
+    state = _state_from_leaves(leaves, contract_name)
+    actual = hashing.hash_pytree(state)
+    if actual != stored_hash:
+        raise ValueError(
+            f"snapshot hash mismatch: stored {stored_hash:#x}, got {actual:#x}"
+        )
+    if (int(state.version) & _U64) != t:
+        raise ValueError(
+            f"manifest cursor t={t} disagrees with state.version="
+            f"{int(state.version)}")
+    return state, actual
+
+
+def manifest_cursor(data: bytes) -> int:
+    """Applied-command cursor ``t`` of a v2 manifest, without touching the
+    chunk store — a format-inspection helper for tooling/audit scripts
+    (DurableStore itself keys snapshots by cursor-named files)."""
+    buf = io.BytesIO(data)
+    if buf.read(4) != MAGIC_V2:
+        raise ValueError("not a v2 Valori snapshot manifest")
+    buf.read(4)
+    _read_str(buf)
+    (t,) = struct.unpack("<Q", buf.read(8))
+    return t
+
+
+def manifest_chunk_keys(data: bytes) -> List[int]:
+    """All chunk keys a v2 manifest references (for retention sweeps)."""
+    buf = io.BytesIO(data)
+    if buf.read(4) != MAGIC_V2:
+        raise ValueError("not a v2 Valori snapshot manifest")
+    buf.read(4)
+    _read_str(buf)
+    buf.read(12)
+    (n_leaves,) = struct.unpack("<I", buf.read(4))
+    keys = []
+    for _ in range(n_leaves):
+        _read_str(buf)
+        _read_str(buf)
+        (ndim,) = struct.unpack("<I", buf.read(4))
+        buf.read(8 * ndim + 8)
+        (n_chunks,) = struct.unpack("<I", buf.read(4))
+        for _ in range(n_chunks):
+            (key,) = struct.unpack("<Q", buf.read(8))
+            keys.append(key)
+    return keys
+
+
+def restore_any(data: bytes, store: Optional[ChunkStore] = None
+                ) -> Tuple[MemoryState, int]:
+    """Restore either snapshot format; v2 needs its chunk store."""
+    if data[:4] == MAGIC:
+        return restore_bytes(data)
+    if data[:4] == MAGIC_V2:
+        if store is None:
+            raise ValueError("v2 snapshot needs its ChunkStore")
+        return restore_v2(data, store)
+    raise ValueError("not a Valori snapshot")

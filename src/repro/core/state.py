@@ -76,6 +76,14 @@ class MemoryState:
     def hnsw_max_levels(self) -> int:
         return self.hnsw_neighbors.shape[0]
 
+    @property
+    def t(self) -> jax.Array:
+        """Monotone applied-command cursor: commands applied since genesis
+        (``version`` — F bumps it exactly once per command, including
+        rejected ones, so it is the logical time the durability layer keys
+        snapshots and WAL offsets by; see DESIGN.md §5)."""
+        return self.version
+
 
 def init_state(
     capacity: int,

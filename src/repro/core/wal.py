@@ -1,0 +1,651 @@
+"""Segmented write-ahead log for the command stream (DESIGN.md §5).
+
+The command log IS the memory (paper §3.1) — so durability means making the
+log itself durable, not the state. This module persists ``CommandLog``
+records in append-only segment files with a per-segment FNV-1a hash chain:
+
+Segment file ``seg_<base_t:020d>.wal`` (all little-endian):
+
+  header:  magic 'VWSG' | u32 fmt=1 | u32 dim | u32 vec-itemsize
+           | u64 base_t (logical index of the first command in the file)
+           | str contract (u32 len + utf8)
+           | u64 chain_0 = FNV-1a(header bytes)      — seeds the chain
+  record:  u32 storage-op | i64 arg0 | i64 arg1 | i64 arg2
+           | vec payload (dim * itemsize bytes, INSERT records only)
+           | u64 chain_i = (chain_{i-1} ^ digest(record bytes)) * FNV_PRIME
+             — an FNV-1a chain over per-record word digests
+             (hashing.digest_bytes: vectorized, so appends stay cheap)
+
+Storage ops are the machine opcodes (0..5) plus ``NOP_RUN`` (0xFFFFFFFE):
+a run of k zero-argument NOPs stored as one record with arg0 = k. NOPs are
+what routing pads with and what ``compact_log`` folds dead commands into,
+so run-length encoding them is where compaction's disk win comes from.
+Non-INSERT records carry no vector payload (F never reads ``vec`` outside
+INSERT), so the WAL canonicalizes those payloads to zero on read-back —
+replay of a round-tripped log is bit-identical by construction.
+
+Crash safety: a torn write leaves a partial record or a record whose chain
+word no longer matches; ``_read_segment(strict=False)`` keeps the longest
+valid record prefix, which is exactly the durable prefix of the log. On
+open, ``WriteAheadLog`` truncates a torn tail in place so later appends
+extend a clean chain.
+
+``compact_log`` rewrites provably-dead commands as NOPs while keeping the
+log the same length (logical time must not shift), under the *bit-exact*
+contract ``hash(bulk_apply(genesis, compact(log))) == hash(replay(genesis,
+log))`` — see DESIGN.md §5 for which folds are admissible and why INSERT→
+DELETE pairs are not (slot allocation and HNSW waypoints survive deletion).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import os
+import pathlib
+import struct
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.core.commands import (DELETE, INSERT, LINK, NOP, SET_META, UNLINK,
+                                 CommandLog)
+from repro.core.contracts import (DEFAULT_CONTRACT, PrecisionContract,
+                                  get_contract)
+from repro.core.state import MemoryState
+
+SEGMENT_MAGIC = b"VWSG"
+SEGMENT_FORMAT = 1
+NOP_RUN = 0xFFFFFFFE  # storage-only opcode: arg0 zero-NOPs in one record
+
+_U64 = (1 << 64) - 1
+
+
+_fnv1a = hashing._fnv1a_bytes  # header hashing (small payloads)
+
+
+def _chain_step(chain: int, body: bytes) -> int:
+    """One FNV-1a step over the record's word digest."""
+    return ((chain ^ hashing.digest_bytes(body)) * hashing.FNV_PRIME) & _U64
+
+
+def _pack_str(s: str) -> bytes:
+    b = s.encode()
+    return struct.pack("<I", len(b)) + b
+
+
+# --------------------------------------------------------------------------- #
+# segment encode / decode
+# --------------------------------------------------------------------------- #
+
+
+def _segment_header(dim: int, itemsize: int, base_t: int,
+                    contract_name: str) -> bytes:
+    hdr = (SEGMENT_MAGIC + struct.pack("<III", SEGMENT_FORMAT, dim, itemsize)
+           + struct.pack("<Q", base_t) + _pack_str(contract_name))
+    return hdr + struct.pack("<Q", _fnv1a(hdr))
+
+
+def _encode_record(op: int, a0: int, a1: int, a2: int,
+                   vec_bytes: bytes, chain: int) -> Tuple[bytes, int]:
+    body = struct.pack("<Iqqq", op, a0, a1, a2)
+    if op == INSERT:
+        body += vec_bytes
+    chain = _chain_step(chain, body)
+    return body + struct.pack("<Q", chain), chain
+
+
+@dataclasses.dataclass
+class _SegmentData:
+    base_t: int
+    n_commands: int          # logical commands (NOP runs expanded)
+    clean: bool              # chain verified through EOF
+    valid_bytes: int         # offset of the last valid record boundary
+    chain: int               # chain value at the last valid record
+    contract_name: str       # precision contract recorded in the header
+    fields: Dict[str, np.ndarray]  # opcode/arg0/arg1/arg2/vec, expanded
+
+
+def _read_segment(path: pathlib.Path, *, strict: bool = True,
+                  expect_dim: Optional[int] = None) -> _SegmentData:
+    data = path.read_bytes()
+    off = 0
+
+    def fail(msg):
+        raise ValueError(f"{path.name}: {msg}")
+
+    if data[:4] != SEGMENT_MAGIC:
+        fail("not a WAL segment")
+    fmt, dim, itemsize = struct.unpack_from("<III", data, 4)
+    if fmt != SEGMENT_FORMAT:
+        fail(f"unsupported WAL format {fmt}")
+    off = 16
+    (base_t,) = struct.unpack_from("<Q", data, off)
+    off += 8
+    (n,) = struct.unpack_from("<I", data, off)
+    contract_name = data[off + 4:off + 4 + n].decode()
+    off += 4 + n
+    get_contract(contract_name)  # validates
+    if expect_dim is not None and dim != expect_dim:
+        fail(f"dim mismatch: segment {dim}, expected {expect_dim}")
+    (chain,) = struct.unpack_from("<Q", data, off)
+    if chain != _fnv1a(data[:off]):
+        fail("corrupt segment header")
+    off += 8
+
+    vec_nbytes = dim * itemsize
+    ops: List[int] = []
+    a0s: List[int] = []
+    a1s: List[int] = []
+    a2s: List[int] = []
+    vecs: List[Tuple[int, bytes]] = []  # (record index, payload) sparse
+    clean = True
+    valid_bytes = off
+    n_commands = 0
+    while off < len(data):
+        if off + 28 + 8 > len(data):
+            clean = False
+            break
+        op, a0, a1, a2 = struct.unpack_from("<Iqqq", data, off)
+        body_len = 28 + (vec_nbytes if op == INSERT else 0)
+        if off + body_len + 8 > len(data):
+            clean = False
+            break
+        body = data[off:off + body_len]
+        (stored,) = struct.unpack_from("<Q", data, off + body_len)
+        next_chain = _chain_step(chain, body)
+        if stored != next_chain:
+            clean = False
+            break
+        chain = next_chain
+        off += body_len + 8
+        valid_bytes = off
+        if op == NOP_RUN:
+            if a0 < 0:
+                clean = False
+                valid_bytes -= body_len + 8
+                break
+            ops.extend([NOP] * a0)
+            a0s.extend([0] * a0)
+            a1s.extend([0] * a0)
+            a2s.extend([0] * a0)
+            n_commands += int(a0)
+        else:
+            if op == INSERT:
+                vecs.append((len(ops), body[28:]))
+            ops.append(op)
+            a0s.append(a0)
+            a1s.append(a1)
+            a2s.append(a2)
+            n_commands += 1
+    if strict and not clean:
+        fail(f"torn/corrupt record at byte {valid_bytes}")
+
+    vdt = np.dtype(f"<i{itemsize}")
+    vec = np.zeros((n_commands, dim), vdt)
+    for idx, payload in vecs:
+        vec[idx] = np.frombuffer(payload, dtype=vdt)
+    fields = dict(
+        opcode=np.asarray(ops, np.int32), arg0=np.asarray(a0s, np.int64),
+        arg1=np.asarray(a1s, np.int64), arg2=np.asarray(a2s, np.int64),
+        vec=vec,
+    )
+    return _SegmentData(base_t=base_t, n_commands=n_commands, clean=clean,
+                        valid_bytes=valid_bytes, chain=chain,
+                        contract_name=contract_name, fields=fields)
+
+
+# --------------------------------------------------------------------------- #
+# the WAL
+# --------------------------------------------------------------------------- #
+
+
+class WriteAheadLog:
+    """Append-only, segmented, hash-chained command log on disk.
+
+    ``t`` is the monotone applied-command cursor: the logical index of the
+    next command to be appended. ``read_range(t0, t1)`` returns the commands
+    [t0, t1) as a ``CommandLog``; replaying a round-tripped range is
+    bit-identical to replaying the original commands.
+    """
+
+    def __init__(self, directory: str | os.PathLike, dim: Optional[int] = None,
+                 contract: Optional[PrecisionContract] = None, *,
+                 segment_records: int = 1024):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.contract = contract  # None ⇒ adopt from segment headers
+        self.segment_records = segment_records
+        self.torn_tail_dropped = 0  # bytes truncated from a torn tail on open
+
+        self._repair_interrupted_compaction()
+        for stale in self.dir.glob("*.tmp"):  # stillborn segment creations
+            if stale.is_file():
+                stale.unlink()
+
+        self._segments: List[Tuple[int, pathlib.Path, int]] = []  # (base, path, n)
+        paths = sorted(self.dir.glob("seg_*.wal"))
+        self._dim = dim
+        tail_seg: Optional[_SegmentData] = None
+        for i, p in enumerate(paths):
+            last = i == len(paths) - 1
+            if last:
+                try:
+                    seg = _read_segment(p, strict=False)
+                except (ValueError, struct.error):  # short header ⇒ struct
+                    # stillborn tail: the crash tore the header itself.
+                    # Headers are fsynced at creation before any record can
+                    # be appended, so an unreadable header implies zero
+                    # durable records — dropping the file loses nothing.
+                    self.torn_tail_dropped += p.stat().st_size
+                    p.unlink()
+                    continue
+                if (self._dim is not None
+                        and seg.fields["vec"].shape[1] != self._dim):
+                    raise ValueError(
+                        f"{p.name}: dim {seg.fields['vec'].shape[1]} != "
+                        f"expected {self._dim}")
+            else:
+                seg = _read_segment(p, strict=True, expect_dim=self._dim)
+            if self._dim is None:
+                self._dim = seg.fields["vec"].shape[1]
+            # the header is authoritative for the storage contract: reopening
+            # with a mismatched (or defaulted) contract would wrap-cast
+            # read_range payloads into the wrong dtype with no error
+            hdr_contract = get_contract(seg.contract_name)
+            if self.contract is None:
+                self.contract = hdr_contract
+            elif self.contract.name != hdr_contract.name:
+                raise ValueError(
+                    f"{p.name}: segment contract {hdr_contract.name!r} != "
+                    f"given contract {self.contract.name!r}")
+            if not seg.clean:
+                # torn tail: truncate to the longest valid record prefix so
+                # future appends extend a verified chain
+                self.torn_tail_dropped += p.stat().st_size - seg.valid_bytes
+                with open(p, "r+b") as f:
+                    f.truncate(seg.valid_bytes)
+                    f.flush()
+                    os.fsync(f.fileno())
+            self._segments.append((seg.base_t, p, seg.n_commands))
+            if last:
+                tail_seg = seg
+        if self._dim is None:
+            raise ValueError("empty WAL directory needs an explicit dim")
+        if self.contract is None:  # fresh, empty WAL with no override
+            self.contract = DEFAULT_CONTRACT
+
+        if self._segments:
+            if tail_seg is None:  # stillborn tail was dropped: the previous
+                tail_seg = _read_segment(  # segment is the live tail now
+                    self._segments[-1][1], strict=True, expect_dim=self._dim)
+            base, _, n = self._segments[-1]
+            self.t = base + n
+            self._chain = tail_seg.chain
+            self._cur_records = n
+        else:
+            self.t = 0
+            self._chain = None   # set when the first segment is created
+            self._cur_records = 0
+
+    # ------------------------------------------------------------------ #
+    @property
+    def dim(self) -> int:
+        return self._dim
+
+    def segments(self) -> List[Tuple[int, int]]:
+        """[(base_t, n_commands)] in order."""
+        return [(b, n) for b, _, n in self._segments]
+
+    def _itemsize(self) -> int:
+        return np.dtype(jnp.dtype(self.contract.storage_dtype).name).itemsize
+
+    def _open_segment(self) -> None:
+        path = self.dir / f"seg_{self.t:020d}.wal"
+        hdr = _segment_header(self._dim, self._itemsize(), self.t,
+                              self.contract.name)
+        tmp = path.with_suffix(".wal.tmp")
+        with open(tmp, "wb") as f:  # fsync+rename: a crash can leave a
+            f.write(hdr)            # stale .tmp (ignored on open), never a
+            f.flush()               # torn header at the live name
+            os.fsync(f.fileno())
+        tmp.rename(path)
+        self._chain = _fnv1a(hdr[:-8])
+        self._segments.append((self.t, path, 0))
+        self._cur_records = 0
+
+    # ------------------------------------------------------------------ #
+    def append(self, log: CommandLog) -> int:
+        """Durably append a command log; returns the new cursor ``t``."""
+        n = len(log)
+        if n == 0:
+            return self.t
+        opcode = np.asarray(log.opcode)
+        arg0 = np.asarray(log.arg0)
+        arg1 = np.asarray(log.arg1)
+        arg2 = np.asarray(log.arg2)
+        vec = np.asarray(log.vec)
+        if vec.shape[1] != self._dim:
+            raise ValueError(f"log dim {vec.shape[1]} != WAL dim {self._dim}")
+        expected = np.dtype(jnp.dtype(self.contract.storage_dtype).name)
+        if vec.dtype != expected:
+            # a mismatched itemsize would desync record framing — every
+            # later record would read as torn and be silently discarded
+            raise ValueError(
+                f"log vec dtype {vec.dtype} != WAL storage dtype {expected}")
+        vdt = vec.dtype.newbyteorder("<")
+
+        i = 0
+        while i < n:
+            if self._chain is None or self._cur_records >= self.segment_records:
+                self._open_segment()
+            room = self.segment_records - self._cur_records
+            stop = min(n, i + room)
+            buf = bytearray()
+            chain = self._chain
+            wrote = 0
+            while i < stop:
+                op = int(opcode[i])
+                if (op == NOP and arg0[i] == 0 and arg1[i] == 0
+                        and arg2[i] == 0):
+                    j = i
+                    while (j < stop and opcode[j] == NOP and arg0[j] == 0
+                           and arg1[j] == 0 and arg2[j] == 0):
+                        j += 1
+                    rec, chain = _encode_record(NOP_RUN, j - i, 0, 0, b"",
+                                                chain)
+                    wrote += j - i
+                    i = j
+                else:
+                    vb = vec[i].astype(vdt, copy=False).tobytes() \
+                        if op == INSERT else b""
+                    rec, chain = _encode_record(op, int(arg0[i]), int(arg1[i]),
+                                                int(arg2[i]), vb, chain)
+                    wrote += 1
+                    i += 1
+                buf += rec
+            base, path, cnt = self._segments[-1]
+            with open(path, "ab") as f:
+                f.write(bytes(buf))
+                f.flush()
+                os.fsync(f.fileno())
+            self._chain = chain
+            self._cur_records = cnt + wrote
+            self._segments[-1] = (base, path, self._cur_records)
+            self.t += wrote
+        return self.t
+
+    # ------------------------------------------------------------------ #
+    def read_range(self, t0: int, t1: int) -> CommandLog:
+        """Commands [t0, t1) as a CommandLog (strict: chain must verify)."""
+        if not 0 <= t0 <= t1 <= self.t:
+            raise ValueError(f"range [{t0}, {t1}) outside WAL [0, {self.t})")
+        parts = []
+        cover = t0
+        for base, path, cnt in self._segments:
+            if base + cnt <= t0 or base >= t1:
+                continue
+            if base > cover:
+                raise ValueError(
+                    f"WAL gap at [{cover}, {base}): that history was "
+                    "dropped by retention or lost to a torn tail")
+            seg = _read_segment(path, strict=True, expect_dim=self._dim)
+            lo = max(t0 - base, 0)
+            hi = min(t1 - base, cnt)
+            parts.append({k: v[lo:hi] for k, v in seg.fields.items()})
+            cover = base + cnt
+        if cover < t1:
+            raise ValueError(
+                f"WAL gap at [{cover}, {t1}): that history was dropped by "
+                "retention or lost to a torn tail")
+        if not parts:
+            parts = [dict(
+                opcode=np.zeros((0,), np.int32),
+                arg0=np.zeros((0,), np.int64), arg1=np.zeros((0,), np.int64),
+                arg2=np.zeros((0,), np.int64),
+                vec=np.zeros((0, self._dim),
+                             np.dtype(f"<i{self._itemsize()}")),
+            )]
+        cat = {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
+        return CommandLog(
+            opcode=jnp.asarray(cat["opcode"], jnp.int32),
+            arg0=jnp.asarray(cat["arg0"], jnp.int64),
+            arg1=jnp.asarray(cat["arg1"], jnp.int64),
+            arg2=jnp.asarray(cat["arg2"], jnp.int64),
+            vec=jnp.asarray(cat["vec"], self.contract.storage_dtype),
+        )
+
+    # ------------------------------------------------------------------ #
+    def drop_below(self, t: int) -> int:
+        """Delete whole segments entirely below ``t`` (retention). Returns
+        the number of segments removed; partial segments are kept."""
+        removed = 0
+        keep = []
+        for base, path, cnt in self._segments:
+            if base + cnt <= t and base + cnt <= self.t:
+                path.unlink()
+                removed += 1
+            else:
+                keep.append((base, path, cnt))
+        if removed and (not keep
+                        or keep[-1][1] != self._segments[-1][1]):
+            # the active tail segment itself was dropped: the next append
+            # must open a fresh segment at the current cursor, not write
+            # into the unlinked file's stale bookkeeping
+            self._chain = None
+            self._cur_records = 0
+        self._segments = keep
+        return removed
+
+    def reset_to(self, t: int) -> None:
+        """Advance the cursor past a lost region (recovery found a snapshot
+        newer than the durable WAL prefix). The gap [self.t, t) becomes a
+        permanent hole: ``read_range`` refuses it, and the next append
+        opens a fresh segment at base ``t`` so new commands can never
+        collide with the lost offsets."""
+        if t < self.t:
+            raise ValueError(f"cannot reset cursor backwards ({t} < {self.t})")
+        if t == self.t:
+            return
+        self.t = t
+        self._chain = None
+        self._cur_records = 0
+
+    def _repair_interrupted_compaction(self) -> None:
+        """Finish or roll back a compaction the process died inside of. The
+        commit marker lists the new segment set; it is written (fsynced)
+        only after that set is complete in compact.tmp, so: marker present
+        ⇒ roll forward (the swap is replayable from the list), marker
+        absent ⇒ roll back (discard the partial build, old WAL intact)."""
+        marker = self.dir / "compact.commit"
+        tmp = self.dir / "compact.tmp"
+        if marker.exists():
+            keep = set(marker.read_text().split())
+            for p in self.dir.glob("seg_*.wal"):
+                if p.name not in keep:
+                    p.unlink()          # old segment superseded by the swap
+            if tmp.exists():
+                for p in sorted(tmp.glob("seg_*.wal")):
+                    os.replace(p, self.dir / p.name)
+                for p in tmp.iterdir():
+                    p.unlink()
+                tmp.rmdir()
+            marker.unlink()
+        elif tmp.exists():
+            for p in tmp.iterdir():
+                p.unlink()
+            tmp.rmdir()
+
+    def compact(self, genesis: MemoryState) -> Dict[str, int]:
+        """Rewrite the whole WAL with dead commands folded to NOPs (and NOP
+        runs RLE'd on disk). Replay-equivalent by the ``compact_log``
+        contract; logical time is preserved exactly. Crash-safe: the new
+        segment set is built and fsynced aside, committed with a marker,
+        then swapped in — an interruption anywhere leaves either the old
+        or the new WAL fully intact (see _repair_interrupted_compaction)."""
+        if self._segments and self._segments[0][0] != 0:
+            raise ValueError("cannot compact a WAL whose head was retained "
+                             "away (needs the full history from t=0)")
+        raw = self.read_range(0, self.t)
+        before = sum(p.stat().st_size for _, p, _ in self._segments)
+        compacted, stats = compact_log(genesis, raw)
+
+        marker = self.dir / "compact.commit"
+        tmp = self.dir / "compact.tmp"
+        self._repair_interrupted_compaction()  # clear any previous leftovers
+        tmp.mkdir()
+        new = WriteAheadLog(tmp, self._dim, self.contract,
+                            segment_records=self.segment_records)
+        new.append(compacted)
+        assert new.t == self.t, "compaction must preserve logical time"
+        names = sorted(p.name for p in tmp.glob("seg_*.wal"))
+        with open(marker, "wb") as f:  # commit point
+            f.write("\n".join(names).encode())
+            f.flush()
+            os.fsync(f.fileno())
+        self._repair_interrupted_compaction()  # roll the swap forward
+        fresh = WriteAheadLog(self.dir, self._dim, self.contract,
+                              segment_records=self.segment_records)
+        self.__dict__.update(fresh.__dict__)
+        after = sum(p.stat().st_size for _, p, _ in self._segments)
+        stats["bytes_before"] = before
+        stats["bytes_after"] = after
+        return stats
+
+
+# --------------------------------------------------------------------------- #
+# compaction: fold provably-dead commands to NOPs
+# --------------------------------------------------------------------------- #
+#
+# The contract is *bit-exact* final-state equality, so a command may only be
+# folded when replacing it with NOP provably leaves every leaf of the final
+# state unchanged (NOP advances ``version`` exactly like any command, so
+# logical time is never disturbed). Admissible folds, proven by a host-side
+# mirror of F's bookkeeping:
+#
+#   * apply-time no-ops: INSERT rejected by a full arena, DELETE of an
+#     absent id, duplicate DELETE, LINK that is a duplicate / has no free
+#     row entry / names an absent id, UNLINK with no matching entry;
+#   * superseded SET_META: an earlier write to meta cell (slot, col) that a
+#     later SET_META overwrites — nothing in F ever reads ``meta``, so the
+#     intermediate value is unobservable;
+#   * superseded upsert INSERT: an overwrite-in-place vector write that a
+#     later write to the same slot overwrites, provided no *fresh* INSERT
+#     ran in between (graph construction reads vectors — including
+#     tombstoned waypoints — so an intermediate value could steer edges);
+#   * cancelled LINK/UNLINK pairs on an otherwise-untouched row (any other
+#     LINK/UNLINK that resolves the same row in between blocks the fold:
+#     it observed the row's free/match layout).
+#
+# NOT admissible, ever: folding a fresh INSERT (it allocates a slot, bumps
+# ``cursor`` and builds HNSW edges that survive deletion) or an INSERT→
+# DELETE pair (the tombstoned row's vector bytes, graph level and inbound
+# edges all remain in — and hash into — the final state).
+
+
+def compact_log(genesis: MemoryState,
+                log: CommandLog) -> Tuple[CommandLog, Dict[str, int]]:
+    """Return (same-length log with dead commands folded to zero-NOPs,
+    stats). ``hash(bulk_apply(genesis, out)) == hash(replay(genesis, log))``
+    bit-exactly (tests/test_durability.py proves this on randomized logs)."""
+    cap = genesis.capacity
+    meta_cols = genesis.meta.shape[1]
+
+    ids_h = np.asarray(genesis.ids)
+    valid_h = np.asarray(genesis.valid)
+    links_h = np.asarray(genesis.links).copy()
+    id2slot = {int(i): s for s, i in enumerate(ids_h) if valid_h[s]}
+    free = [int(s) for s in np.nonzero(~valid_h)[0]]  # sorted ⇒ a valid heap
+
+    opcode = np.asarray(log.opcode)
+    arg0 = np.asarray(log.arg0)
+    arg1 = np.asarray(log.arg1)
+    n = len(opcode)
+    dead = np.zeros((n,), bool)
+
+    pending_vec: Dict[int, int] = {}              # slot -> foldable upsert idx
+    pending_meta: Dict[Tuple[int, int], int] = {} # (slot, col) -> write idx
+    row_pending: Dict[int, Dict[int, int]] = {}   # slot_a -> {slot_b: link idx}
+    last_fresh = -1                               # idx of last fresh INSERT
+
+    for i in range(n):
+        op = min(max(int(opcode[i]), 0), 5)  # F clips, mirror clips
+        a = int(arg0[i])
+        if op == NOP:
+            continue
+        if op == INSERT:
+            slot = id2slot.get(a)
+            if slot is not None:  # upsert: in-place vector write
+                prev = pending_vec.get(slot)
+                if prev is not None and last_fresh < prev:
+                    dead[prev] = True
+                pending_vec[slot] = i
+            elif free:            # fresh insert
+                slot = heapq.heappop(free)
+                id2slot[a] = slot
+                prev = pending_vec.pop(slot, None)
+                if prev is not None and last_fresh < prev:
+                    dead[prev] = True
+                last_fresh = i
+            else:                 # arena full: rejected, pure no-op
+                dead[i] = True
+        elif op == DELETE:
+            slot = id2slot.pop(a, None)
+            if slot is None:
+                dead[i] = True
+            else:
+                heapq.heappush(free, slot)
+        elif op in (LINK, UNLINK):
+            b = int(arg1[i])
+            sa = id2slot.get(a)
+            sb = id2slot.get(b)
+            if sa is None or sb is None:
+                dead[i] = True
+                continue
+            row = links_h[sa]
+            pend = row_pending.setdefault(sa, {})
+            if op == LINK:
+                if (row == sb).any() or not (row < 0).any():
+                    dead[i] = True  # duplicate / row full: no write
+                    pend.clear()    # but it DID observe the row layout
+                else:
+                    pos = int(np.argmax(row < 0))
+                    row[pos] = sb
+                    pend.clear()
+                    pend[sb] = i    # foldable if unlinked untouched
+            else:  # UNLINK
+                if not (row == sb).any():
+                    dead[i] = True
+                    pend.clear()
+                else:
+                    prev = pend.get(sb)
+                    if prev is not None:
+                        dead[prev] = True
+                        dead[i] = True
+                    row[row == sb] = -1
+                    pend.clear()
+        elif op == SET_META:
+            slot = id2slot.get(a)
+            if slot is None:
+                dead[i] = True
+            else:
+                col = min(max(int(arg1[i]), 0), meta_cols - 1)
+                prev = pending_meta.get((slot, col))
+                if prev is not None:
+                    dead[prev] = True
+                pending_meta[(slot, col)] = i
+
+    folded = int(dead.sum())
+    if folded == 0:
+        return log, {"n": n, "folded": 0}
+    keep = ~dead
+    out = CommandLog(
+        opcode=jnp.asarray(np.where(keep, opcode, NOP), jnp.int32),
+        arg0=jnp.asarray(np.where(keep, arg0, 0), jnp.int64),
+        arg1=jnp.asarray(np.where(keep, arg1, 0), jnp.int64),
+        arg2=jnp.asarray(np.where(keep, np.asarray(log.arg2), 0), jnp.int64),
+        vec=jnp.asarray(np.where(keep[:, None], np.asarray(log.vec), 0),
+                        log.vec.dtype),
+    )
+    return out, {"n": n, "folded": folded}

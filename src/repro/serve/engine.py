@@ -22,6 +22,7 @@ sets, which is the property the paper's §8.1 snapshot-transfer test checks.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -30,6 +31,7 @@ import numpy as np
 
 from repro.core import boundary, commands, machine, query, snapshot
 from repro.core.contracts import DEFAULT_CONTRACT, PrecisionContract
+from repro.core.durability import DurableStore
 from repro.core.state import MemoryState, init_state
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
@@ -50,6 +52,13 @@ class ServeConfig:
     ef: int = 64                 # HNSW beam width when that route is taken
     exact_threshold: int = 1024  # live count at/below which exact scan wins
     use_kernel: bool = False     # Pallas qgemm/qtopk on the exact route
+    # durability (DESIGN.md §5): with a durable_dir, every ingested command
+    # is WAL-appended before it is visible, incremental v2 snapshots are cut
+    # every checkpoint_every commands (0 = manual only), and recover()
+    # rebuilds the last durable prefix after a crash
+    durable_dir: Optional[str] = None
+    checkpoint_every: int = 0    # commands between background checkpoints
+    retain_snapshots: int = 0    # keep newest N (snapshot, WAL) pairs; 0=all
 
 
 class MemoryAugmentedEngine:
@@ -64,6 +73,13 @@ class MemoryAugmentedEngine:
         self.docs: Dict[int, np.ndarray] = {}   # id -> token prefix
         self._next_id = 0
         self.last_plan: Optional[query.QueryPlan] = None
+
+        self.durable: Optional[DurableStore] = None
+        self._ckpt_thread: Optional[threading.Thread] = None
+        self._ckpt_error: Optional[BaseException] = None
+        self._last_ckpt_t = 0
+        if serve_cfg.durable_dir is not None:
+            self.durable = DurableStore(serve_cfg.durable_dir, self.memory)
 
         self._embed_fn = jax.jit(self._embed_batch)
         self._prefill = jax.jit(
@@ -104,10 +120,15 @@ class MemoryAugmentedEngine:
         self._next_id += len(token_batches)
         batch_log = commands.insert_batch(jnp.asarray(ids), raw,
                                           self.sc.contract)
+        if self.durable is not None:
+            # WAL-first: the commands are durable before their effects are
+            # visible, so a crash can lose at most un-acked work
+            self.durable.append(batch_log)
         self.log = self.log.concat(batch_log)
         self.memory = machine.bulk_apply(self.memory, batch_log)
         for i, tid in enumerate(ids):
             self.docs[int(tid)] = np.asarray(token_batches[i])
+        self._maybe_checkpoint()
         return [int(i) for i in ids]
 
     # ------------------------------------------------------------------ #
@@ -172,6 +193,74 @@ class MemoryAugmentedEngine:
             logits, caches = self._decode(self.params, caches, tok, pos)
             tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         return out
+
+    # ------------------------------------------------------------------ #
+    # durability: background checkpoints + crash recovery (DESIGN.md §5)
+    # ------------------------------------------------------------------ #
+
+    def wait_durable(self) -> None:
+        """Join any in-flight background checkpoint; re-raise its error —
+        same no-silent-loss contract as checkpoint.CheckpointManager."""
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join()
+            self._ckpt_thread = None
+        if self._ckpt_error is not None:
+            err, self._ckpt_error = self._ckpt_error, None
+            raise RuntimeError("background checkpoint failed") from err
+
+    def checkpoint(self) -> Dict[str, int]:
+        """Synchronously cut an incremental v2 snapshot at the current
+        cursor; returns the snapshot stats (dirty chunks written, etc.)."""
+        if self.durable is None:
+            raise RuntimeError("no durable_dir configured")
+        self.wait_durable()
+        stats = self.durable.checkpoint(
+            jax.tree.map(np.asarray, self.memory))
+        self._last_ckpt_t = int(self.memory.version)
+        if self.sc.retain_snapshots > 0:
+            stats.update(self.durable.retain(self.sc.retain_snapshots))
+        return stats
+
+    def _maybe_checkpoint(self) -> None:
+        if (self.durable is None or self.sc.checkpoint_every <= 0
+                or int(self.memory.version) - self._last_ckpt_t
+                < self.sc.checkpoint_every):
+            return
+        self.wait_durable()  # one in flight at a time; surfaces past errors
+        host_state = jax.tree.map(np.asarray, self.memory)
+        self._last_ckpt_t = int(host_state.version)
+
+        def work():
+            try:
+                self.durable.checkpoint(host_state)
+                if self.sc.retain_snapshots > 0:
+                    self.durable.retain(self.sc.retain_snapshots)
+            except BaseException as e:  # noqa: BLE001 — re-raised on wait
+                self._ckpt_error = e
+
+        self._ckpt_thread = threading.Thread(target=work, daemon=True)
+        self._ckpt_thread.start()
+
+    def recover(self) -> Tuple[int, int]:
+        """Rebuild memory from the durable store after a crash: nearest
+        snapshot + WAL tail, bit-identical to replaying the durable prefix.
+        Returns (t, hash). Retrieval serves immediately; ``docs`` token
+        prefixes are serving-cache only and refill as documents re-insert
+        (the deterministic substrate never depended on them)."""
+        if self.durable is None:
+            raise RuntimeError("no durable_dir configured")
+        self.wait_durable()
+        state, h, t = self.durable.recover()
+        self.memory = state
+        self._last_ckpt_t = int(state.version)
+        try:  # audit trail, if retention kept the full history
+            self.log = self.durable.wal.read_range(0, t)
+        except ValueError:
+            self.log = commands.empty_log(self.cfg.d_model, self.sc.contract)
+        ids = np.asarray(state.ids)
+        live = ids[np.asarray(state.valid)]
+        self._next_id = int(live.max()) + 1 if live.size else 0
+        return t, h
 
     # ------------------------------------------------------------------ #
     # audit / replay (paper §8.1, §9)

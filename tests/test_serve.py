@@ -50,3 +50,33 @@ def test_snapshot_transferable(engine):
     blob = engine.snapshot_bytes()
     restored, h = snapshot.restore_bytes(blob)
     assert h == engine.memory_hash()
+
+
+def test_engine_crash_recovery(engine, tmp_path):
+    """WAL-first serving: kill the engine, recover a fresh one from the
+    durable store, get the same memory hash and the same retrievals."""
+    from repro.serve.engine import MemoryAugmentedEngine, ServeConfig
+    rng = np.random.default_rng(3)
+    sc = ServeConfig(capacity=128, retrieve_k=3, max_new_tokens=4, s_cache=96,
+                     context_tokens=8, durable_dir=str(tmp_path / "d"),
+                     checkpoint_every=16)
+    eng = MemoryAugmentedEngine(engine.cfg, engine.params, sc)
+    docs = rng.integers(0, engine.cfg.vocab_size, (20, 16), dtype=np.int32)
+    eng.insert_documents(docs[:12])
+    eng.insert_documents(docs[12:])  # crosses checkpoint_every=16
+    eng.wait_durable()
+    h_before = eng.memory_hash()
+    prompts = rng.integers(0, engine.cfg.vocab_size, (2, 8), dtype=np.int32)
+    rh_before = eng.retrieval_hash(prompts)
+    assert eng.durable.snapshots()[0] == 0  # genesis snapshot exists
+    assert eng.durable.t == 20
+
+    # "crash": a brand-new engine over the same directory, then recover
+    eng2 = MemoryAugmentedEngine(engine.cfg, engine.params, sc)
+    t, h = eng2.recover()
+    assert t == 20 and h == h_before
+    assert eng2.retrieval_hash(prompts) == rh_before
+    assert eng2.memory_hash() == eng2.replay_log_fresh()  # audit still holds
+    # recovered engines keep ingesting with fresh, non-colliding ids
+    new_ids = eng2.insert_documents(docs[:2])
+    assert min(new_ids) == 20
