@@ -1,0 +1,148 @@
+"""WAL ingest throughput: group commit vs fsync-per-command (DESIGN.md §6).
+
+Two tables, hash-checked on every run (a throughput number for a log that
+does not replay to the same state would be meaningless):
+
+  1. durable commands/sec at group-commit batch sizes 1/8/64/256 — batch 1
+     is the fsync-per-command baseline PR 3 shipped; each row re-reads its
+     WAL and asserts the replayed state hash equals the baseline's, so the
+     batched path is proven bit-identical while being measured;
+  2. the distributed durable-ingest scenario: a ShardedDurableStore group-
+     commits routed batches, the process is "killed" (a torn, never-acked
+     record suffix is injected into one shard's WAL tail), and recover()
+     must reproduce the exact retrieval_hash() of an uninterrupted
+     in-memory run.
+
+Run directly (``python benchmarks/bench_wal.py [--smoke]``) or via
+``benchmarks.run``. ``--smoke`` shrinks n so CI exercises the whole path
+in seconds; the ≥5x group-commit speedup at batch 64 is asserted there too.
+"""
+from __future__ import annotations
+
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+import repro  # noqa: F401
+import jax.numpy as jnp
+from benchmarks.common import emit
+from repro.core import (boundary, commands, distributed, hashing, machine,
+                        query, shard_wal, wal)
+from repro.core.state import init_state
+
+DIM = 32
+
+
+def _insert_log(n: int, dim: int, seed: int = 0) -> commands.CommandLog:
+    rng = np.random.default_rng(seed)
+    vecs = boundary.normalize_embedding(
+        rng.normal(size=(n, dim)).astype(np.float32))
+    return commands.insert_batch(jnp.arange(n, dtype=jnp.int64), vecs)
+
+
+def table1(n: int) -> None:
+    log = _insert_log(n, DIM)
+    genesis = init_state(int(n * 2), DIM, hnsw_levels=1, hnsw_degree=2)
+    h_ref = hashing.hash_pytree(machine.replay(genesis, log))
+    singles = [log.slice(i, i + 1) for i in range(n)]
+
+    cps = {}
+    for batch in (1, 8, 64, 256):
+        with tempfile.TemporaryDirectory() as tmp:
+            w = wal.WriteAheadLog(tmp, DIM, segment_records=max(n, 1024))
+            gw = wal.GroupCommitWriter(
+                w, wal.GroupCommitPolicy(max_batch=batch, max_delay_s=3600))
+            t0 = time.perf_counter()
+            for s in singles:
+                gw.submit(s)
+            gw.flush()
+            dt = time.perf_counter() - t0
+            assert w.t == n
+            h = hashing.hash_pytree(
+                machine.bulk_apply(genesis, w.read_range(0, n)))
+            if h != h_ref:
+                raise RuntimeError(
+                    f"group commit (batch={batch}) diverged from replay: "
+                    f"{h:#x} != {h_ref:#x}")
+            cps[batch] = n / dt
+            emit(f"wal_group_commit_batch{batch}", dt / n * 1e6,
+                 f"commands_per_sec={cps[batch]:.0f};fsyncs={gw.groups};"
+                 f"vs_fsync_per_cmd={cps[batch] / cps[1]:.1f}x;"
+                 f"hash_equal=True")
+    if cps[64] < 5 * cps[1]:
+        raise RuntimeError(
+            f"group commit at batch 64 must be >= 5x fsync-per-command "
+            f"({cps[64]:.0f} vs {cps[1]:.0f} cmds/s)")
+
+
+def table2(n: int, n_shards: int = 4) -> None:
+    dim = DIM
+    cap_per_shard = int(n * 1.5 / n_shards) + 8
+    genesis = distributed.init_sharded_host(n_shards, cap_per_shard, dim,
+                                            hnsw_levels=1, hnsw_degree=2)
+    log = _insert_log(n, dim, seed=1)
+    step = max(n // 8, 1)
+    batches = [log.slice(i, min(i + step, n)) for i in range(0, n, step)]
+
+    # uninterrupted in-memory reference
+    ref = genesis
+    for b in batches:
+        ref = shard_wal.bulk_apply_sharded(ref, b, n_shards)
+    rng = np.random.default_rng(7)
+    q = boundary.admit_query(rng.normal(size=(8, dim)).astype(np.float32))
+    ids_ref, s_ref = shard_wal.exact_search_sharded(ref, n_shards, q, 10)
+    rh_ref = query.retrieval_hash(ids_ref, s_ref)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        store = shard_wal.ShardedDurableStore(
+            tmp, genesis, n_shards=n_shards, segment_records=4096)
+        gw = wal.GroupCommitWriter(
+            store, wal.GroupCommitPolicy(max_batch=2 * step, max_delay_s=3600))
+        t0 = time.perf_counter()
+        for b in batches:
+            gw.submit(b)
+        gw.flush()
+        dt = time.perf_counter() - t0
+        t_acked = store.t
+
+        # "kill": a torn, never-acked suffix on one shard's WAL tail — the
+        # crash landed mid-flush of a group nobody was acked for
+        tail = sorted(
+            (store.shards[1].dir / "wal").glob("seg_*.wal"))[-1]
+        with open(tail, "ab") as f:
+            f.write(b"\x13torn-in-flight-group\x37" * 3)
+
+        reopened = shard_wal.ShardedDurableStore(tmp)
+        t1 = time.perf_counter()
+        state, h, t_rec = reopened.recover()
+        t_recover = time.perf_counter() - t1
+        ids_rec, s_rec = shard_wal.exact_search_sharded(
+            state, n_shards, q, 10)
+        rh_rec = query.retrieval_hash(ids_rec, s_rec)
+        emit(f"sharded_ingest_{n_shards}shards", dt / n * 1e6,
+             f"commands_per_sec={n / dt:.0f};global_t={t_acked};"
+             f"recover_us={t_recover * 1e6:.0f};"
+             f"retrieval_hash_equal={rh_rec == rh_ref}")
+        if t_rec != t_acked or rh_rec != rh_ref:
+            raise RuntimeError(
+                f"sharded recover diverged: t {t_rec} vs {t_acked}, "
+                f"retrieval hash {rh_rec:#x} vs {rh_ref:#x}")
+        if h != hashing.hash_pytree(ref):
+            raise RuntimeError("sharded recover state hash diverged from "
+                               "the uninterrupted run")
+
+
+def run(*, smoke: bool = False) -> None:
+    if smoke:
+        table1(n=192)
+        table2(n=96, n_shards=2)
+    else:
+        table1(n=1024)
+        table2(n=512, n_shards=4)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(smoke="--smoke" in sys.argv[1:])

@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV (stdout). Mapping to the paper:
   bench_recall      — Table 3 / §8.3 (Recall@10 f32 vs Q16.16 HNSW)
   bench_snapshot    — §8.1          (snapshot transfer, H_A == H_B, 10k rows)
   bench_latency     — §8.2          (retrieval latency, exact + HNSW + boundary)
+  bench_wal         — DESIGN.md §6  (group commit vs fsync-per-command;
+                                     sharded ingest + kill + recover)
   bench_roofline    — EXPERIMENTS.md §Roofline (reads dry-run artifacts)
 """
 import sys
@@ -15,11 +17,11 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_contracts, bench_divergence, bench_ingest,
                             bench_latency, bench_recall, bench_roofline,
-                            bench_snapshot)
+                            bench_snapshot, bench_wal)
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_divergence, bench_contracts, bench_recall,
-                bench_snapshot, bench_latency, bench_ingest,
+                bench_snapshot, bench_latency, bench_ingest, bench_wal,
                 bench_roofline):
         try:
             mod.run()

@@ -12,27 +12,48 @@ Public surface:
   snapshot    — serialize/restore with hash verification (paper §8.1):
                 v1 blobs + v2 chunked content-addressed store (DESIGN.md §5)
   wal         — segmented, hash-chained write-ahead command log with
-                replay-equivalent compaction (DESIGN.md §5)
+                replay-equivalent compaction (DESIGN.md §5), group commit
+                and scheduled compaction policies (DESIGN.md §6)
   durability  — DurableStore: snapshots + WAL + restore_at time travel,
                 crash recovery, retention (DESIGN.md §5)
+  shard_wal   — ShardedDurableStore: per-shard WALs reconciled to one
+                global cursor, durable distributed ingest (DESIGN.md §6)
   search      — exact deterministic k-NN (wide integer scores)
   hnsw        — deterministic HNSW (paper §7), TPU-adapted
   query       — batched deterministic query engine: vmapped HNSW, planner,
                 shard fan-out (DESIGN.md §4)
   distributed — pod-scale sharded memory over shard_map (DESIGN.md §2)
   compat      — version-bridging shims over moved JAX APIs
+
+Most-used entry points (each docstring states the contract it promises):
+  replay / bulk_apply      — Apply(S_0, {C_i}); bulk form is hash-identical
+  DurableStore, restore_at — durable history; restore_at(t) ≡ replay(log[:t])
+  GroupCommitPolicy, GroupCommitWriter — one fsync per group of commands
+  CompactionPolicy         — dead-ratio-scheduled WAL compaction
+  ShardedDurableStore      — per-shard WALs, one reconciled global cursor
+  plan_query               — deterministic exact-vs-HNSW route from host ints
 """
 from repro.core import (boundary, commands, contracts, distributed, durability,
                         fixedpoint, hashing, hnsw, machine, query, search,
-                        snapshot, state, wal)
+                        shard_wal, snapshot, state, wal)
 from repro.core.contracts import (CONTRACTS, DEFAULT_CONTRACT, Q8_8, Q16_16,
                                   Q32_32, PrecisionContract, get_contract)
+from repro.core.durability import DurableStore, restore_at
+from repro.core.machine import apply_command, bulk_apply, replay
+from repro.core.query import plan_query, retrieval_hash
+from repro.core.shard_wal import ShardedDurableStore
 from repro.core.state import MemoryState, init_state
+from repro.core.wal import (CompactionPolicy, GroupCommitPolicy,
+                            GroupCommitWriter, WriteAheadLog)
 
 __all__ = [
     "boundary", "commands", "contracts", "distributed", "durability",
-    "fixedpoint", "hashing", "hnsw", "machine", "query", "search", "snapshot",
-    "state", "wal",
+    "fixedpoint", "hashing", "hnsw", "machine", "query", "search",
+    "shard_wal", "snapshot", "state", "wal",
     "CONTRACTS", "DEFAULT_CONTRACT", "Q8_8", "Q16_16", "Q32_32",
     "PrecisionContract", "get_contract", "MemoryState", "init_state",
+    "apply_command", "bulk_apply", "replay",
+    "DurableStore", "restore_at", "plan_query", "retrieval_hash",
+    "ShardedDurableStore", "WriteAheadLog",
+    "CompactionPolicy", "GroupCommitPolicy", "GroupCommitWriter",
 ]

@@ -84,15 +84,18 @@ def route_commands(log: CommandLog, n_shards: int) -> CommandLog:
 # --------------------------------------------------------------------------- #
 
 
-def init_sharded_state(mesh: Mesh, axis: str, capacity_per_shard: int, dim: int,
-                       **kwargs) -> MemoryState:
-    n_shards = mesh.shape[axis]
+def init_sharded_host(n_shards: int, capacity_per_shard: int, dim: int,
+                      **kwargs) -> MemoryState:
+    """Empty sharded-layout state (shard-major rows, [n_shards] per-shard
+    scalars) as plain host/default-device arrays — no mesh required. This
+    is the genesis a ``shard_wal.ShardedDurableStore`` slices per shard;
+    ``init_sharded_state`` lays the same state out over a mesh."""
     proto = init_state(capacity_per_shard, dim, **kwargs)
 
     def rep(x):  # per-shard scalar → [n_shards]
         return jnp.broadcast_to(x[None], (n_shards,) + x.shape)
 
-    state = dataclasses.replace(
+    return dataclasses.replace(
         proto,
         vectors=jnp.tile(proto.vectors, (n_shards, 1)),
         ids=jnp.tile(proto.ids, (n_shards,)),
@@ -106,6 +109,12 @@ def init_sharded_state(mesh: Mesh, axis: str, capacity_per_shard: int, dim: int,
         count=rep(proto.count),
         version=rep(proto.version),
     )
+
+
+def init_sharded_state(mesh: Mesh, axis: str, capacity_per_shard: int, dim: int,
+                       **kwargs) -> MemoryState:
+    state = init_sharded_host(mesh.shape[axis], capacity_per_shard, dim,
+                              **kwargs)
     specs = state_specs(axis, state.contract_name)
     return jax.tree.map(
         lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), state, specs

@@ -20,7 +20,12 @@ and audit path:
     manifests are deleted, WAL segments wholly below the oldest retained
     snapshot are dropped, and chunks no surviving manifest references are
     swept. The time-travel window shrinks accordingly — never the ability
-    to recover the present.
+    to recover the present;
+  * ``append_many`` is the group-commit sink (one fsync per group,
+    DESIGN.md §6), a configured ``wal.CompactionPolicy`` schedules
+    dead-ratio-driven compaction automatically on append, and
+    ``rollback_to(t)`` drops durable-but-unacked suffixes — the primitive
+    ``shard_wal.ShardedDurableStore`` reconciles shards with.
 
 Layout of a store directory:
   store.json                    dim / contract / chunk_size / segment_records
@@ -50,12 +55,19 @@ from repro.core.state import MemoryState
 
 
 class DurableStore:
-    """One directory holding a memory's full durable history."""
+    """One directory holding a memory's full durable history.
+
+    Invariant: at every retained offset ``t``, ``restore_at(t)`` is
+    hash-identical to ``machine.replay(genesis, log[:t])``; after any
+    crash, ``recover()`` rebuilds the latest durable point and refuses
+    (never approximates) lost history."""
 
     def __init__(self, directory: str | os.PathLike,
                  genesis: Optional[MemoryState] = None, *,
                  chunk_size: int = snapshot.DEFAULT_CHUNK_SIZE,
-                 segment_records: int = 1024):
+                 segment_records: int = 1024,
+                 compaction: Optional[wal.CompactionPolicy] = None,
+                 chunks: Optional[snapshot.ChunkStore] = None):
         self.dir = pathlib.Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         meta_path = self.dir / "store.json"
@@ -76,14 +88,25 @@ class DurableStore:
             meta = {"dim": dim, "contract": contract.name,
                     "chunk_size": chunk_size,
                     "segment_records": segment_records}
-            meta_path.write_text(json.dumps(meta))
+            tmp = meta_path.with_suffix(".tmp")
+            with open(tmp, "w") as f:  # tmp+fsync+rename: a crash leaves a
+                f.write(json.dumps(meta))  # stale .tmp, never a torn
+                f.flush()                  # store.json that bricks reopen
+                os.fsync(f.fileno())
+            tmp.rename(meta_path)
 
         self.chunk_size = chunk_size
         # serializes WAL mutations (append / retain / compact) so a
         # background checkpoint+retention thread can never unlink or rewrite
         # a segment a foreground append is extending
         self._lock = threading.RLock()
-        self.chunks = snapshot.ChunkStore(self.dir / "chunks")
+        # a shared ChunkStore (sharded stores dedup chunks across shards)
+        # is swept by its owner, never by this store's retain()
+        self._owns_chunks = chunks is None
+        self.chunks = chunks if chunks is not None \
+            else snapshot.ChunkStore(self.dir / "chunks")
+        self.compaction = compaction
+        self._genesis_cache: Optional[MemoryState] = None
         self.wal = wal.WriteAheadLog(self.dir / "wal", dim, contract,
                                      segment_records=segment_records)
         self._snap_dir = self.dir / "snapshots"
@@ -142,9 +165,45 @@ class DurableStore:
     # ------------------------------------------------------------------ #
 
     def append(self, log: CommandLog) -> int:
-        """Durably append commands; returns the new WAL cursor."""
+        """Durably append commands (one fsync per touched segment); returns
+        the new WAL cursor. Runs scheduled compaction when a
+        ``CompactionPolicy`` was configured and is due."""
         with self._lock:
-            return self.wal.append(log)
+            t = self.wal.append(log)
+            self._maybe_compact()
+            return t
+
+    def append_many(self, logs) -> int:
+        """Group commit: durably append several logs under one fsync per
+        touched segment (``wal.WriteAheadLog.append_many``); returns the new
+        WAL cursor. This is the sink ``wal.GroupCommitWriter`` drives."""
+        with self._lock:
+            t = self.wal.append_many(logs)
+            self._maybe_compact()
+            return t
+
+    def _maybe_compact(self) -> None:
+        if self.compaction is None:
+            return
+
+        def genesis():
+            # lazily restored (costs only when a check actually runs); an
+            # unavailable t=0 snapshot legitimately skips the check, but
+            # ONLY that — a failure inside compaction itself (corrupt
+            # segment, disk full) must propagate, not vanish per append
+            try:
+                return self._genesis()
+            except _RESTORE_ERRORS:
+                return None
+
+        self.wal.maybe_compact(genesis, self.compaction)
+
+    def _genesis(self) -> MemoryState:
+        """The t=0 state (cached; immutable once restored)."""
+        if self._genesis_cache is None:
+            state, _ = self.restore_at(0)
+            self._genesis_cache = state
+        return self._genesis_cache
 
     @property
     def t(self) -> int:
@@ -212,14 +271,39 @@ class DurableStore:
                 return state, h, t
             raise ValueError("no recoverable state in the store") from last_err
 
+    def rollback_to(self, t: int) -> None:
+        """Drop every durable artifact above logical time ``t``: snapshots
+        with a newer cursor are deleted and the WAL is truncated to ``t``
+        (``wal.WriteAheadLog.truncate_to``). Used by the sharded store to
+        discard a shard's durable-but-never-globally-acked suffix so all
+        shards rejoin lockstep at one reconciled global cursor. Refuses a
+        ``t`` inside a lost gap — that history cannot be re-entered."""
+        with self._lock:
+            self.wal.truncate_to(t)  # raises before any snapshot is lost
+            for s in self.snapshots():
+                if s > t:
+                    self._snap_path(s).unlink()
+
     # ------------------------------------------------------------------ #
     # retention + compaction
     # ------------------------------------------------------------------ #
 
+    def referenced_chunk_keys(self) -> set:
+        """Chunk keys referenced by any retained snapshot manifest — the
+        live set a chunk-store sweep must preserve."""
+        with self._lock:
+            referenced = set()
+            for t in self.snapshots():
+                referenced.update(snapshot.manifest_chunk_keys(
+                    self._snap_path(t).read_bytes()))
+            return referenced
+
     def retain(self, keep: int) -> Dict[str, int]:
         """Keep the newest ``keep`` snapshots; drop older manifests, WAL
         segments wholly below the oldest retained snapshot, and chunks no
-        surviving manifest references."""
+        surviving manifest references. When the chunk store is shared
+        (sharded stores), the chunk sweep is the owner's job — other
+        shards' manifests may reference keys this store no longer does."""
         if keep < 1:
             raise ValueError("must retain at least one snapshot")
         with self._lock:
@@ -230,15 +314,13 @@ class DurableStore:
             kept = self.snapshots()
             segs_dropped = self.wal.drop_below(kept[0]) if kept else 0
 
-            referenced = set()
-            for t in kept:
-                referenced.update(snapshot.manifest_chunk_keys(
-                    self._snap_path(t).read_bytes()))
             chunks_dropped = 0
-            for key in self.chunks.keys():
-                if key not in referenced:
-                    self.chunks.delete(key)
-                    chunks_dropped += 1
+            if self._owns_chunks:
+                referenced = self.referenced_chunk_keys()
+                for key in self.chunks.keys():
+                    if key not in referenced:
+                        self.chunks.delete(key)
+                        chunks_dropped += 1
             return {"snapshots_dropped": len(dropped),
                     "wal_segments_dropped": segs_dropped,
                     "chunks_dropped": chunks_dropped}

@@ -147,7 +147,13 @@ def apply_command(state: MemoryState, rec: CommandLog,
 @partial(jax.jit, static_argnames=("ef_construction",))
 def replay(state: MemoryState, log: CommandLog,
            *, ef_construction: int = 32) -> MemoryState:
-    """Apply a whole log: the paper's Apply(S_0, {C_i}). One lax.scan."""
+    """Apply a whole log: the paper's Apply(S_0, {C_i}). One lax.scan.
+
+    Invariant: a pure function of (state, log) — the same inputs produce a
+    bit-identical final state (same ``hashing.hash_pytree``) on any
+    platform, in any chunking (``apply_chunked``), and under
+    ``bulk_apply``'s batched form. This is the replayability guarantee
+    every durability and audit contract reduces to."""
 
     def step(s, rec):
         return apply_command(s, rec, ef_construction=ef_construction), None

@@ -1,0 +1,340 @@
+"""Per-shard WALs under one global clock (DESIGN.md §6).
+
+PR 3 made a single-host log durable; this module makes *distributed*
+ingest durable without that single-host log. Each shard owns a full
+``durability.DurableStore`` (its own hash-chained WAL + chunked snapshots);
+a ``ShardedDurableStore`` keeps the fleet in lockstep on one global
+applied-command cursor ``t``:
+
+  * every appended batch is routed with ``distributed.route_commands``
+    (pure integer id hash) and NOP-padded to one common length, so every
+    shard's WAL advances by exactly the same amount per batch — per-shard
+    cursors are the global cursor;
+  * a group commit (``append_many``, the sink ``wal.GroupCommitWriter``
+    drives) flushes each shard's share of the group under one fsync per
+    shard;
+  * recovery reconciles: each shard recovers its own durable prefix, the
+    global cursor is the *minimum* (a command is globally durable only
+    when every shard's share of its batch is), and shards that got ahead —
+    a crash landed between per-shard flushes — roll their never-globally-
+    acked suffix back with ``DurableStore.rollback_to``. The torn-group
+    contract thus extends across shards: recovery lands on the last
+    globally-whole batch boundary prefix, never a partial group;
+  * the merged restore verifies one number: ``hash_pytree`` of the merged
+    sharded-layout state, the same whole-state hash ``snapshot_sharded``'s
+    merged manifest carries — a pod and a single-kernel holder of the same
+    content agree on it.
+
+Shards share one content-addressed ``ChunkStore`` (identical chunks — e.g.
+untouched arena regions — are stored once across shards); the sharded
+store owns the cross-shard sweep, per-shard ``retain`` never deletes a
+chunk another shard still references.
+
+Layout of a store directory:
+  store.json                 n_shards
+  chunks/<key:016x>.chk      chunk store shared by all shards
+  merged/t_<t:020d>.json     global-cursor records: {"t", "hash"}
+  shard_<s:04d>/             a full DurableStore per shard (own WAL,
+                             snapshots, store.json; chunks redirected up)
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributed, hashing, machine, search, snapshot, wal
+from repro.core.commands import CommandLog
+from repro.core.durability import _RESTORE_ERRORS, DurableStore
+from repro.core.state import MemoryState
+
+
+class ShardedDurableStore:
+    """n_shards lockstep ``DurableStore``s under one global cursor.
+
+    Invariant (healthy store): every shard's durable cursor equals the
+    global ``t``, and ``restore_at(t)`` merged across shards is hash-
+    identical to applying the same routed batches to a fresh sharded
+    genesis — the sharded twin of ``DurableStore``'s replay contract.
+    """
+
+    def __init__(self, directory: str | os.PathLike,
+                 genesis: Optional[MemoryState] = None, *,
+                 n_shards: Optional[int] = None,
+                 chunk_size: int = snapshot.DEFAULT_CHUNK_SIZE,
+                 segment_records: int = 1024,
+                 compaction: Optional[wal.CompactionPolicy] = None):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        meta_path = self.dir / "store.json"
+
+        if meta_path.exists():
+            meta = json.loads(meta_path.read_text())
+            if n_shards is not None and n_shards != meta["n_shards"]:
+                raise ValueError(
+                    f"store has {meta['n_shards']} shards, {n_shards} given")
+            n_shards = meta["n_shards"]
+        else:
+            if genesis is None or n_shards is None:
+                raise ValueError(
+                    f"{self.dir} is not a ShardedDurableStore and no "
+                    "(genesis, n_shards) was given to create one")
+            tmp = meta_path.with_suffix(".tmp")
+            with open(tmp, "w") as f:  # tmp+fsync+rename: a crash leaves a
+                f.write(json.dumps({"n_shards": n_shards}))  # stale .tmp,
+                f.flush()                                    # never a torn
+                os.fsync(f.fileno())                         # store.json
+            tmp.rename(meta_path)
+
+        self.n_shards = n_shards
+        self.chunks = snapshot.ChunkStore(self.dir / "chunks")
+        self._merged_dir = self.dir / "merged"
+        self._merged_dir.mkdir(exist_ok=True)
+        self.shards: List[DurableStore] = [
+            DurableStore(
+                self.dir / f"shard_{s:04d}",
+                distributed.shard_slice(genesis, s, n_shards)
+                if genesis is not None else None,
+                chunk_size=chunk_size, segment_records=segment_records,
+                compaction=compaction, chunks=self.chunks)
+            for s in range(n_shards)
+        ]
+
+    # ------------------------------------------------------------------ #
+    # the global command stream
+    # ------------------------------------------------------------------ #
+
+    @property
+    def t(self) -> int:
+        """Globally durable logical time: the minimum shard cursor (a
+        command counts only once every shard's share of its batch is on
+        disk). Equal to every shard's cursor in a healthy store."""
+        return min(s.t for s in self.shards)
+
+    def shard_ts(self) -> List[int]:
+        """Per-shard durable cursors (diagnostic; all equal when healthy)."""
+        return [s.t for s in self.shards]
+
+    def planned_advance(self, log: CommandLog) -> int:
+        """Global-cursor advance appending ``log`` will cause: the batch's
+        NOP-padded common per-shard length (its heaviest shard's share,
+        min 1) — what ``GroupCommitWriter.target_t`` must add per batch
+        instead of the raw command count."""
+        if len(log) == 0:
+            return 0
+        owners = np.asarray(distributed.shard_of_id(
+            jnp.asarray(np.asarray(log.arg0)), self.n_shards))
+        counts = np.bincount(owners, minlength=self.n_shards)
+        return max(int(counts.max()), 1)
+
+    def append(self, log: CommandLog) -> int:
+        """Route one global batch to the shards and durably append each
+        share (one fsync per shard); returns the new global cursor. Every
+        shard advances by the batch's common padded length."""
+        return self.append_many([log])
+
+    def append_many(self, logs: Sequence[CommandLog]) -> int:
+        """Group commit across shards: each batch is routed exactly as
+        ``append`` would route it (per-batch NOP padding, so cursors are
+        identical whether or not batches were grouped), then each shard
+        commits its whole share of the group under one fsync. Shards are
+        flushed in shard order — a crash mid-flush leaves a *prefix* of
+        shards with the group, which ``recover()`` rolls back to the last
+        globally-complete point."""
+        logs = [log for log in logs if len(log)]
+        if not logs:
+            return self.t
+        # refuse BEFORE anything is fsynced: appending to an unreconciled
+        # post-crash store would durably put different batches at the same
+        # logical offset on different shards — run recover() first
+        if len(set(self.shard_ts())) != 1:
+            raise RuntimeError(
+                f"shard cursors diverged ({self.shard_ts()}): the store "
+                "needs recover() before it can accept new appends")
+        per_shard: List[List[CommandLog]] = [[] for _ in range(self.n_shards)]
+        for log in logs:
+            routed = distributed.route_commands(log, self.n_shards)
+            for s in range(self.n_shards):
+                per_shard[s].append(
+                    jax.tree.map(lambda a, s=s: a[s], routed))
+        ts = [self.shards[s].append_many(per_shard[s])
+              for s in range(self.n_shards)]
+        assert len(set(ts)) == 1, f"lockstep violated: {ts}"
+        return ts[0]
+
+    # ------------------------------------------------------------------ #
+    # checkpoints + the merged-hash contract
+    # ------------------------------------------------------------------ #
+
+    def _merged_path(self, t: int) -> pathlib.Path:
+        return self._merged_dir / f"t_{t:020d}.json"
+
+    def merged_records(self) -> List[int]:
+        """Cursors with a recorded merged whole-state hash, ascending."""
+        return sorted(int(p.stem.split("_")[1])
+                      for p in self._merged_dir.glob("t_*.json"))
+
+    def checkpoint(self, state: MemoryState) -> Dict[str, int]:
+        """Snapshot a sharded-layout state: one v2 snapshot per shard (into
+        the shared chunk store) plus a merged record carrying the whole-
+        state hash — the same combined-hash contract as
+        ``distributed.snapshot_sharded``, so restore can verify the merge
+        against one number. The state's per-shard cursors must agree (a
+        mid-batch or diverged state is not a global checkpoint)."""
+        host = jax.tree.map(np.asarray, state)
+        versions = {int(v) for v in np.asarray(host.version)}
+        if len(versions) != 1:
+            raise ValueError(
+                f"per-shard cursors disagree ({sorted(versions)}): "
+                "checkpoint only at global batch boundaries")
+        t = versions.pop()
+        stats: Dict[str, int] = {"t": t, "bytes_written": 0}
+        for s in range(self.n_shards):
+            sh = self.shards[s].checkpoint(
+                distributed.shard_slice(host, s, self.n_shards))
+            stats["bytes_written"] += sh.get("bytes_written", 0)
+        record = {"t": t, "hash": f"{hashing.hash_pytree(host):#018x}"}
+        tmp = self._merged_path(t).with_suffix(".tmp")
+        with open(tmp, "w") as f:
+            f.write(json.dumps(record))
+            f.flush()
+            os.fsync(f.fileno())
+        tmp.rename(self._merged_path(t))
+        return stats
+
+    def _verify_merged(self, t: int, h: int) -> None:
+        path = self._merged_path(t)
+        if not path.exists():
+            return
+        stored = int(json.loads(path.read_text())["hash"], 16)
+        if stored != h:
+            raise ValueError(
+                f"merged-state hash mismatch at t={t}: manifest "
+                f"{stored:#x}, restored {h:#x}")
+
+    # ------------------------------------------------------------------ #
+    # restore + recovery
+    # ------------------------------------------------------------------ #
+
+    def restore_at(self, t: int, *, ef_construction: int = 32
+                   ) -> Tuple[MemoryState, int]:
+        """The merged sharded-layout state as of global command ``t`` —
+        each shard restores its own cursor-``t`` state (nearest snapshot +
+        WAL tail), the merge is hash-verified against the merged record
+        when one exists at ``t``. Returns (state, hash)."""
+        parts = [s.restore_at(t, ef_construction=ef_construction)[0]
+                 for s in self.shards]
+        state = distributed.merge_shards(parts)
+        h = hashing.hash_pytree(state)
+        self._verify_merged(t, h)
+        return state, h
+
+    def recover(self, *, ef_construction: int = 32
+                ) -> Tuple[MemoryState, int, int]:
+        """Crash recovery with cross-shard reconciliation. Each shard
+        recovers its own durable prefix; the global cursor is the minimum
+        (commands beyond it were never globally acked); shards that got
+        ahead — the crash hit between per-shard group flushes — roll back
+        their unacked suffix so the fleet rejoins lockstep. Returns
+        (merged state, hash, t); the hash is verified against the merged
+        record when one exists at the reconciled cursor."""
+        ts = []
+        for s, shard in enumerate(self.shards):
+            try:
+                ts.append(shard.recover(
+                    ef_construction=ef_construction)[2])
+            except _RESTORE_ERRORS as e:
+                raise ValueError(
+                    f"shard {s} has no recoverable state") from e
+        t = min(ts)
+        for s, shard in enumerate(self.shards):
+            if shard.t > t:
+                try:
+                    shard.rollback_to(t)
+                except ValueError as e:
+                    raise ValueError(
+                        f"shard {s} cannot rejoin the global cursor t={t} "
+                        f"(its durable history has a hole there); the "
+                        f"store is irreconcilable without that history"
+                    ) from e
+        state, h = self.restore_at(t, ef_construction=ef_construction)
+        return state, h, t
+
+    # ------------------------------------------------------------------ #
+    # retention
+    # ------------------------------------------------------------------ #
+
+    def retain(self, keep: int) -> Dict[str, int]:
+        """Keep the newest ``keep`` snapshots per shard, then sweep shared
+        chunks no *surviving manifest of any shard* references — the cross-
+        shard gc a per-shard retain cannot safely do. Merged records below
+        the new window are pruned with the snapshots they described."""
+        stats = {"snapshots_dropped": 0, "wal_segments_dropped": 0,
+                 "chunks_dropped": 0}
+        for shard in self.shards:
+            sh = shard.retain(keep)
+            stats["snapshots_dropped"] += sh["snapshots_dropped"]
+            stats["wal_segments_dropped"] += sh["wal_segments_dropped"]
+        referenced = set()
+        for shard in self.shards:
+            referenced |= shard.referenced_chunk_keys()
+        for key in self.chunks.keys():
+            if key not in referenced:
+                self.chunks.delete(key)
+                stats["chunks_dropped"] += 1
+        oldest = min((s.snapshots()[0] for s in self.shards
+                      if s.snapshots()), default=0)
+        for t in self.merged_records():
+            if t < oldest:
+                self._merged_path(t).unlink()
+        return stats
+
+
+# --------------------------------------------------------------------------- #
+# host-side sharded apply + search (the mesh-free twins of distributed.py)
+# --------------------------------------------------------------------------- #
+
+
+def bulk_apply_sharded(state: MemoryState, log: CommandLog, n_shards: int,
+                       *, ef_construction: int = 32) -> MemoryState:
+    """Route a global batch and bulk-apply each shard's share to its slice
+    of a sharded-layout state — the in-memory reference for what a
+    ``ShardedDurableStore`` ingest makes durable: applying the same batches
+    here and recovering the store yield hash-identical merged states."""
+    routed = distributed.route_commands(log, n_shards)
+    parts = []
+    for s in range(n_shards):
+        local = distributed.shard_slice(state, s, n_shards)
+        local_log = jax.tree.map(lambda a, s=s: a[s], routed)
+        parts.append(machine.bulk_apply(local, local_log,
+                                        ef_construction=ef_construction))
+    return distributed.merge_shards(parts)
+
+
+def exact_search_sharded(state: MemoryState, n_shards: int,
+                         queries_raw: jax.Array, k: int, *,
+                         metric: str = search.METRIC_L2,
+                         use_kernel: bool = False
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Exact k-NN over a host-side sharded-layout state: per-shard top-k
+    then the one shared (score, id) combine — bit-identical to
+    ``distributed.distributed_search`` on a mesh and to a single kernel
+    holding the same rows (the merge is permutation-invariant). Returns
+    (ids [nq, k], scores [nq, k])."""
+    ids_parts, score_parts = [], []
+    for s in range(n_shards):
+        local = distributed.shard_slice(state, s, n_shards)
+        ids, scores = search.exact_search(local, queries_raw, k,
+                                          metric=metric,
+                                          use_kernel=use_kernel)
+        ids_parts.append(ids)
+        score_parts.append(scores)
+    flat_ids = jnp.concatenate(ids_parts, axis=-1)
+    flat_scores = jnp.concatenate(score_parts, axis=-1)
+    s_out, i_out = search.merge_candidates(flat_scores, flat_ids, k)
+    return i_out, s_out

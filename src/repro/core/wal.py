@@ -28,7 +28,11 @@ Crash safety: a torn write leaves a partial record or a record whose chain
 word no longer matches; ``_read_segment(strict=False)`` keeps the longest
 valid record prefix, which is exactly the durable prefix of the log. On
 open, ``WriteAheadLog`` truncates a torn tail in place so later appends
-extend a clean chain.
+extend a clean chain. Group commit (``append_many`` /
+``GroupCommitWriter``) batches many logs under one fsync; the torn-tail
+contract is unchanged and record-granular — a crash mid-group keeps the
+longest whole-record prefix of the group, never a partial record
+(DESIGN.md §6).
 
 ``compact_log`` rewrites provably-dead commands as NOPs while keeping the
 log the same length (logical time must not shift), under the *bit-exact*
@@ -43,7 +47,8 @@ import heapq
 import os
 import pathlib
 import struct
-from typing import Dict, List, Optional, Tuple
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -76,6 +81,51 @@ def _pack_str(s: str) -> bytes:
 
 
 # --------------------------------------------------------------------------- #
+# durability policies (DESIGN.md §6)
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupCommitPolicy:
+    """When a ``GroupCommitWriter`` flushes its pending group.
+
+    ``max_batch``: flush once this many commands are pending (the batched-
+    fsync knob — one fsync then covers the whole group). ``max_delay_s``:
+    flush when the oldest pending command has waited this long; the deadline
+    is checked at ``submit()``/``flush()`` time (no timer thread), so pair
+    it with a sync-on-read barrier for a hard visibility bound."""
+    max_batch: int = 64
+    max_delay_s: float = 0.010
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.max_delay_s < 0:
+            raise ValueError("max_delay_s must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPolicy:
+    """When scheduled compaction rewrites the WAL (DESIGN.md §6).
+
+    Every ``check_every`` appended commands (and only once the log holds at
+    least ``min_commands``), the dead-command ratio is measured with one
+    host mirror pass; the on-disk rewrite runs only when folded / n reaches
+    ``dead_ratio`` — so a write-once workload never pays a rewrite, and a
+    churn-heavy one compacts as soon as enough of its history is provably
+    dead."""
+    dead_ratio: float = 0.5
+    min_commands: int = 1024
+    check_every: int = 1024
+
+    def __post_init__(self):
+        if not 0.0 < self.dead_ratio <= 1.0:
+            raise ValueError("dead_ratio must be in (0, 1]")
+        if self.check_every < 1:
+            raise ValueError("check_every must be >= 1")
+
+
+# --------------------------------------------------------------------------- #
 # segment encode / decode
 # --------------------------------------------------------------------------- #
 
@@ -105,6 +155,8 @@ class _SegmentData:
     chain: int               # chain value at the last valid record
     contract_name: str       # precision contract recorded in the header
     fields: Dict[str, np.ndarray]  # opcode/arg0/arg1/arg2/vec, expanded
+    header_bytes: int        # byte offset where records start
+    bounds: List[Tuple[int, int]]  # per record: (offset after, cum commands)
 
 
 def _read_segment(path: pathlib.Path, *, strict: bool = True,
@@ -135,6 +187,8 @@ def _read_segment(path: pathlib.Path, *, strict: bool = True,
     off += 8
 
     vec_nbytes = dim * itemsize
+    header_bytes = off
+    bounds: List[Tuple[int, int]] = []
     ops: List[int] = []
     a0s: List[int] = []
     a1s: List[int] = []
@@ -179,6 +233,7 @@ def _read_segment(path: pathlib.Path, *, strict: bool = True,
             a1s.append(a1)
             a2s.append(a2)
             n_commands += 1
+        bounds.append((off, n_commands))
     if strict and not clean:
         fail(f"torn/corrupt record at byte {valid_bytes}")
 
@@ -193,7 +248,8 @@ def _read_segment(path: pathlib.Path, *, strict: bool = True,
     )
     return _SegmentData(base_t=base_t, n_commands=n_commands, clean=clean,
                         valid_bytes=valid_bytes, chain=chain,
-                        contract_name=contract_name, fields=fields)
+                        contract_name=contract_name, fields=fields,
+                        header_bytes=header_bytes, bounds=bounds)
 
 
 # --------------------------------------------------------------------------- #
@@ -275,6 +331,7 @@ class WriteAheadLog:
             raise ValueError("empty WAL directory needs an explicit dim")
         if self.contract is None:  # fresh, empty WAL with no override
             self.contract = DEFAULT_CONTRACT
+        self._last_compact_check = 0  # cursor at the last policy check
 
         if self._segments:
             if tail_seg is None:  # stillborn tail was dropped: the previous
@@ -316,11 +373,7 @@ class WriteAheadLog:
         self._cur_records = 0
 
     # ------------------------------------------------------------------ #
-    def append(self, log: CommandLog) -> int:
-        """Durably append a command log; returns the new cursor ``t``."""
-        n = len(log)
-        if n == 0:
-            return self.t
+    def _validated_fields(self, log: CommandLog) -> Tuple[np.ndarray, ...]:
         opcode = np.asarray(log.opcode)
         arg0 = np.asarray(log.arg0)
         arg1 = np.asarray(log.arg1)
@@ -334,6 +387,48 @@ class WriteAheadLog:
             # later record would read as torn and be silently discarded
             raise ValueError(
                 f"log vec dtype {vec.dtype} != WAL storage dtype {expected}")
+        return opcode, arg0, arg1, arg2, vec
+
+    def append(self, log: CommandLog) -> int:
+        """Durably append a command log; returns the new cursor ``t``.
+
+        Invariant: on return every record is fsynced, so a crash can only
+        lose commands the caller was never acked for. One fsync per touched
+        segment — batching commands into one ``append`` (or using
+        ``append_many`` / ``GroupCommitWriter``) amortizes that cost."""
+        if len(log) == 0:
+            return self.t
+        return self._append_fields(*self._validated_fields(log))
+
+    def append_many(self, logs: Sequence[CommandLog]) -> int:
+        """Group commit: durably append several command logs with a single
+        fsync per touched segment (usually exactly one), instead of one per
+        log. Returns the new cursor ``t``.
+
+        Durability is acknowledged for the whole group at once; the torn-
+        tail contract is unchanged and record-granular — a crash inside the
+        group's write leaves the longest valid *record* prefix (never a
+        partial record, possibly a partial group), which recovery truncates
+        to exactly as for single appends."""
+        logs = [log for log in logs if len(log)]
+        if not logs:
+            return self.t
+        fields = [self._validated_fields(log) for log in logs]
+        # NOP runs must not merge across log boundaries: each log's records
+        # are encoded exactly as a lone append would encode them, so the
+        # grouped segment bytes equal the ungrouped ones (the §6 audit
+        # contract tests/test_group_commit.py pins byte-for-byte)
+        breaks, acc = set(), 0
+        for f in fields[:-1]:
+            acc += len(f[0])
+            breaks.add(acc)
+        return self._append_fields(
+            *(np.concatenate([f[j] for f in fields]) for j in range(5)),
+            run_breaks=frozenset(breaks))
+
+    def _append_fields(self, opcode, arg0, arg1, arg2, vec, *,
+                       run_breaks: frozenset = frozenset()) -> int:
+        n = len(opcode)
         vdt = vec.dtype.newbyteorder("<")
 
         i = 0
@@ -351,7 +446,8 @@ class WriteAheadLog:
                         and arg2[i] == 0):
                     j = i
                     while (j < stop and opcode[j] == NOP and arg0[j] == 0
-                           and arg1[j] == 0 and arg2[j] == 0):
+                           and arg1[j] == 0 and arg2[j] == 0
+                           and (j == i or j not in run_breaks)):
                         j += 1
                     rec, chain = _encode_record(NOP_RUN, j - i, 0, 0, b"",
                                                 chain)
@@ -452,6 +548,70 @@ class WriteAheadLog:
         self._chain = None
         self._cur_records = 0
 
+    def truncate_to(self, t: int) -> None:
+        """Roll the log back to logical time ``t``: every record at or above
+        ``t`` is deleted from disk. The inverse of a partial group commit —
+        a distributed store uses it to drop a shard's durable-but-never-
+        globally-acked suffix so all shards rejoin lockstep at one global
+        cursor (shard_wal.ShardedDurableStore.recover).
+
+        A NOP run straddling ``t`` is split: the segment is truncated at the
+        record boundary below the run and a shorter run is re-appended.
+        Raises if ``t`` falls inside a lost gap (reset_to hole) — that
+        history cannot be re-entered."""
+        if not 0 <= t <= self.t:
+            raise ValueError(f"truncate_to({t}) outside WAL [0, {self.t}]")
+        if t == self.t:
+            return
+        # refuse BEFORE deleting anything: t must sit inside or at the end
+        # of a live segment (t=0 with no retained prefix is the empty log)
+        covered = t == 0 and (not self._segments
+                              or self._segments[0][0] == 0)
+        covered = covered or any(base <= t <= base + cnt
+                                 for base, _, cnt in self._segments)
+        if not covered:
+            raise ValueError(
+                f"truncate_to({t}): t falls inside a lost gap or retained-"
+                "away history; that history cannot be re-entered")
+        nop_remainder = 0
+        for base, path, cnt in list(self._segments):
+            if base >= t:
+                path.unlink()
+            elif base + cnt > t:
+                # straddling segment: cut at the last whole-record boundary
+                # at/below t, using the framing the (verifying) segment
+                # parse itself derived — no second record walk
+                seg = _read_segment(path, strict=True, expect_dim=self._dim)
+                target = t - base
+                cut, cum = seg.header_bytes, 0
+                for off_after, cum_after in seg.bounds:
+                    if cum_after > target:
+                        break  # record straddles t (only a NOP run can)
+                    cut, cum = off_after, cum_after
+                nop_remainder = target - cum
+                with open(path, "r+b") as f:
+                    f.truncate(cut)
+                    f.flush()
+                    os.fsync(f.fileno())
+        fresh = WriteAheadLog(self.dir, self._dim, self.contract,
+                              segment_records=self.segment_records)
+        self.__dict__.update(fresh.__dict__)
+        if nop_remainder:
+            self.append(CommandLog(
+                opcode=jnp.zeros((nop_remainder,), jnp.int32),
+                arg0=jnp.zeros((nop_remainder,), jnp.int64),
+                arg1=jnp.zeros((nop_remainder,), jnp.int64),
+                arg2=jnp.zeros((nop_remainder,), jnp.int64),
+                vec=jnp.zeros((nop_remainder, self._dim),
+                              self.contract.storage_dtype)))
+        if self.t < t:
+            # coverage was verified before any deletion, so a short cursor
+            # here means exactly one thing: every segment at/above t was
+            # deleted whole and a pre-existing reset_to hole ends at t —
+            # preserve the hole rather than refuse or fabricate history
+            self.reset_to(t)
+        assert self.t == t, f"truncate_to({t}) landed at {self.t}"
+
     def _repair_interrupted_compaction(self) -> None:
         """Finish or roll back a compaction the process died inside of. The
         commit marker lists the new segment set; it is written (fsynced)
@@ -477,19 +637,31 @@ class WriteAheadLog:
                 p.unlink()
             tmp.rmdir()
 
-    def compact(self, genesis: MemoryState) -> Dict[str, int]:
+    def compact(self, genesis: MemoryState, *,
+                min_dead_ratio: float = 0.0) -> Dict[str, int]:
         """Rewrite the whole WAL with dead commands folded to NOPs (and NOP
         runs RLE'd on disk). Replay-equivalent by the ``compact_log``
         contract; logical time is preserved exactly. Crash-safe: the new
         segment set is built and fsynced aside, committed with a marker,
         then swapped in — an interruption anywhere leaves either the old
-        or the new WAL fully intact (see _repair_interrupted_compaction)."""
+        or the new WAL fully intact (see _repair_interrupted_compaction).
+
+        ``min_dead_ratio`` gates the rewrite on the measured dead-command
+        ratio (folded / n): below it — or when nothing folds — the fold
+        analysis still runs (one host mirror pass) but the on-disk WAL is
+        left untouched and ``stats["skipped"]`` is 1. This is what
+        ``CompactionPolicy`` scheduling drives."""
         if self._segments and self._segments[0][0] != 0:
             raise ValueError("cannot compact a WAL whose head was retained "
                              "away (needs the full history from t=0)")
         raw = self.read_range(0, self.t)
         before = sum(p.stat().st_size for _, p, _ in self._segments)
         compacted, stats = compact_log(genesis, raw)
+        stats["dead_ratio"] = stats["folded"] / max(stats["n"], 1)
+        if stats["folded"] == 0 or stats["dead_ratio"] < min_dead_ratio:
+            stats.update(skipped=1, bytes_before=before, bytes_after=before)
+            return stats
+        stats["skipped"] = 0
 
         marker = self.dir / "compact.commit"
         tmp = self.dir / "compact.tmp"
@@ -512,6 +684,146 @@ class WriteAheadLog:
         stats["bytes_before"] = before
         stats["bytes_after"] = after
         return stats
+
+    def maybe_compact(self, genesis,
+                      policy: Optional[CompactionPolicy]
+                      ) -> Optional[Dict[str, int]]:
+        """Run ``compact`` iff the scheduling policy says it is due — the
+        dead-command-ratio-driven automatic path (DESIGN.md §6). Returns
+        the compact stats when a check ran, else None. No-ops (cheaply)
+        when no policy is set, the check interval has not elapsed, the log
+        is still small, or retention dropped the head (compaction needs the
+        full history from t=0). ``genesis`` may be the t=0 state or a
+        zero-arg callable returning it — callers with an expensive genesis
+        (DurableStore restores it from the t=0 snapshot) pay only when a
+        check actually runs; the callable may return None to skip the
+        check (genesis legitimately unavailable)."""
+        if policy is None:
+            return None
+        if self.t - self._last_compact_check < policy.check_every:
+            return None
+        self._last_compact_check = self.t
+        if self.t < policy.min_commands:
+            return None
+        if self._segments and self._segments[0][0] != 0:
+            return None  # head retained away: nothing to fold from genesis
+        if callable(genesis):
+            genesis = genesis()
+        if genesis is None:
+            return None  # caller could not produce the t=0 state: skip
+        stats = self.compact(genesis, min_dead_ratio=policy.dead_ratio)
+        self._last_compact_check = self.t  # compact() reloads bookkeeping
+        return stats
+
+
+# --------------------------------------------------------------------------- #
+# group commit
+# --------------------------------------------------------------------------- #
+
+
+class GroupCommitWriter:
+    """Batches submitted command logs and commits them with one fsync per
+    group — the high-QPS ingest path (DESIGN.md §6).
+
+    ``sink`` is anything with ``append_many(logs) -> t`` and a durable
+    cursor ``t`` (``WriteAheadLog``, ``durability.DurableStore``,
+    ``shard_wal.ShardedDurableStore``). ``submit`` buffers a log and flushes
+    when the policy's batch or delay bound is hit; ``flush`` forces the
+    pending group durable. Deadlines are only observed at ``submit``/
+    ``flush`` calls (no timer thread): a serving layer gets a hard bound by
+    calling ``flush()`` before any read that could observe pending commands
+    (the sync-on-read barrier, serve/engine.py).
+
+    Crash contract: commands in a flushed group are durable (fsynced)
+    before ``flush`` returns; commands still pending are not — they were
+    never acked. A crash inside a flush leaves the longest valid record
+    prefix of the group (torn-group truncation, wal.py module docs)."""
+
+    def __init__(self, sink, policy: GroupCommitPolicy = GroupCommitPolicy()):
+        self.sink = sink
+        self.policy = policy
+        self._pending: List[CommandLog] = []
+        self._advance: List[int] = []  # cursor advance each log will cause
+        self._pending_n = 0
+        self._oldest: Optional[float] = None
+        self.groups = 0        # flushes that wrote something
+        self.submitted = 0     # commands ever submitted
+
+    @property
+    def pending(self) -> int:
+        """Commands buffered but not yet durable."""
+        return self._pending_n
+
+    @property
+    def target_t(self) -> int:
+        """The cursor the sink will reach once pending commands flush.
+        Exact for every sink: sharded sinks advance by each batch's padded
+        common length, not its raw command count, so the writer asks the
+        sink (``planned_advance``) when it knows better than ``len``."""
+        return self.sink.t + sum(self._advance)
+
+    def _sink_advance(self, log: CommandLog) -> int:
+        fn = getattr(self.sink, "planned_advance", None)
+        return fn(log) if fn is not None else len(log)
+
+    def submit(self, log: CommandLog) -> int:
+        """Buffer a log for the next group commit; returns ``target_t``.
+        The commands are NOT durable until the group flushes — the caller
+        must not ack them upstream before ``flush()`` (or a policy-driven
+        flush) covers their offsets."""
+        if len(log):
+            self._pending.append(log)
+            self._advance.append(self._sink_advance(log))
+            self._pending_n += len(log)
+            self.submitted += len(log)
+            if self._oldest is None:
+                self._oldest = time.monotonic()
+        if (self._pending_n >= self.policy.max_batch
+                or (self._oldest is not None
+                    and time.monotonic() - self._oldest
+                    >= self.policy.max_delay_s)):
+            self.flush()
+        return self.target_t
+
+    def flush(self) -> int:
+        """Make every pending command durable (one group commit); returns
+        the sink's durable cursor. On a sink failure, whatever prefix the
+        sink already made durable (it fsyncs per segment) is dropped from
+        the buffer and the rest stays retryable — a retry can neither
+        duplicate durable commands nor silently lose pending ones."""
+        if self._pending:
+            t0 = self.sink.t
+            try:
+                self.sink.append_many(self._pending)
+            except BaseException:
+                self._drop_landed(self.sink.t - t0)
+                raise
+            self._pending = []
+            self._advance = []
+            self._pending_n = 0
+            self._oldest = None
+            self.groups += 1
+        return self.sink.t
+
+    def _drop_landed(self, landed: int) -> None:
+        """Remove the prefix a failed flush already made durable. The sink
+        cursor advances one-per-command on single-host sinks (NOP runs
+        count their length), so ``landed`` maps directly onto pending
+        commands; a sharded sink's global cursor never advances on a
+        partial flush (min over shards), so ``landed`` is 0 there and the
+        whole group stays queued for retry after ``recover()``."""
+        while landed > 0 and self._pending:
+            log = self._pending[0]
+            if len(log) <= landed:
+                landed -= len(log)
+                self._pending_n -= len(log)
+                self._pending.pop(0)
+                self._advance.pop(0)
+            else:
+                self._pending[0] = log.slice(landed, len(log))
+                self._advance[0] = self._sink_advance(self._pending[0])
+                self._pending_n -= landed
+                landed = 0
 
 
 # --------------------------------------------------------------------------- #

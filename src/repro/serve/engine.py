@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import boundary, commands, machine, query, snapshot
+from repro.core import wal as wal_lib
 from repro.core.contracts import DEFAULT_CONTRACT, PrecisionContract
 from repro.core.durability import DurableStore
 from repro.core.state import MemoryState, init_state
@@ -59,6 +60,13 @@ class ServeConfig:
     durable_dir: Optional[str] = None
     checkpoint_every: int = 0    # commands between background checkpoints
     retain_snapshots: int = 0    # keep newest N (snapshot, WAL) pairs; 0=all
+    # high-QPS ingest (DESIGN.md §6): with a group-commit policy, ingested
+    # batches buffer in a GroupCommitWriter and fsync once per group instead
+    # of once per append; the read path flushes pending commands first (the
+    # sync-on-read barrier), so retrieval never observes un-durable state.
+    # A compaction policy schedules dead-ratio-driven WAL compaction.
+    group_commit: Optional[wal_lib.GroupCommitPolicy] = None
+    compaction: Optional[wal_lib.CompactionPolicy] = None
 
 
 class MemoryAugmentedEngine:
@@ -75,11 +83,23 @@ class MemoryAugmentedEngine:
         self.last_plan: Optional[query.QueryPlan] = None
 
         self.durable: Optional[DurableStore] = None
+        self._group: Optional[wal_lib.GroupCommitWriter] = None
         self._ckpt_thread: Optional[threading.Thread] = None
         self._ckpt_error: Optional[BaseException] = None
         self._last_ckpt_t = 0
         if serve_cfg.durable_dir is not None:
-            self.durable = DurableStore(serve_cfg.durable_dir, self.memory)
+            self.durable = DurableStore(serve_cfg.durable_dir, self.memory,
+                                        compaction=serve_cfg.compaction)
+            if serve_cfg.group_commit is not None:
+                self._group = wal_lib.GroupCommitWriter(
+                    self.durable, serve_cfg.group_commit)
+        elif (serve_cfg.group_commit is not None
+              or serve_cfg.compaction is not None):
+            # refuse the inconsistent config loudly: an operator who set a
+            # durability policy believes ingest is durable — silently
+            # running non-durable would be the worst possible reading
+            raise ValueError(
+                "group_commit/compaction policies need durable_dir set")
 
         self._embed_fn = jax.jit(self._embed_batch)
         self._prefill = jax.jit(
@@ -120,7 +140,13 @@ class MemoryAugmentedEngine:
         self._next_id += len(token_batches)
         batch_log = commands.insert_batch(jnp.asarray(ids), raw,
                                           self.sc.contract)
-        if self.durable is not None:
+        if self._group is not None:
+            # group commit: the batch buffers toward one fsync per group —
+            # it is NOT yet durable, so it also must not be readable; the
+            # read path's flush() barrier restores WAL-first ordering at
+            # the moment of first observation (DESIGN.md §6)
+            self._group.submit(batch_log)
+        elif self.durable is not None:
             # WAL-first: the commands are durable before their effects are
             # visible, so a crash can lose at most un-acked work
             self.durable.append(batch_log)
@@ -144,6 +170,7 @@ class MemoryAugmentedEngine:
         per-query reference loop either way (DESIGN.md §4). The decision is
         recorded on ``self.last_plan`` for audit."""
         k = k or self.sc.retrieve_k
+        self.flush()  # sync-on-read: nothing un-durable is observable
         emb = self._embed_fn(self.params, jnp.asarray(prompt_tokens))
         q_raw = boundary.admit_query(emb, self.sc.contract)
         plan = query.plan_query(
@@ -198,6 +225,17 @@ class MemoryAugmentedEngine:
     # durability: background checkpoints + crash recovery (DESIGN.md §5)
     # ------------------------------------------------------------------ #
 
+    def flush(self) -> int:
+        """Force any pending group-commit batch durable; returns the
+        durable WAL cursor (== memory cursor afterwards). The read path
+        calls this before serving — the sync-on-read barrier that keeps
+        retrieval from ever observing un-durable commands — and it is the
+        ack point for upstream callers under group commit."""
+        if self._group is not None:
+            return self._group.flush()
+        return self.durable.t if self.durable is not None else \
+            int(self.memory.version)
+
     def wait_durable(self) -> None:
         """Join any in-flight background checkpoint; re-raise its error —
         same no-silent-loss contract as checkpoint.CheckpointManager."""
@@ -213,6 +251,7 @@ class MemoryAugmentedEngine:
         cursor; returns the snapshot stats (dirty chunks written, etc.)."""
         if self.durable is None:
             raise RuntimeError("no durable_dir configured")
+        self.flush()  # a snapshot may only cover durable commands
         self.wait_durable()
         stats = self.durable.checkpoint(
             jax.tree.map(np.asarray, self.memory))
@@ -226,6 +265,7 @@ class MemoryAugmentedEngine:
                 or int(self.memory.version) - self._last_ckpt_t
                 < self.sc.checkpoint_every):
             return
+        self.flush()  # a snapshot may only cover durable commands
         self.wait_durable()  # one in flight at a time; surfaces past errors
         host_state = jax.tree.map(np.asarray, self.memory)
         self._last_ckpt_t = int(host_state.version)
@@ -249,6 +289,7 @@ class MemoryAugmentedEngine:
         (the deterministic substrate never depended on them)."""
         if self.durable is None:
             raise RuntimeError("no durable_dir configured")
+        self.flush()  # a live engine recovering: don't drop acked-to-us work
         self.wait_durable()
         state, h, t = self.durable.recover()
         self.memory = state

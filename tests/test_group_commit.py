@@ -1,0 +1,396 @@
+"""Group commit + scheduled compaction (DESIGN.md §6).
+
+The acceptance contract: a group-committed WAL replays bit-identically to
+a fsync-per-command WAL of the same commands; killing the process mid-
+group (random byte truncation inside the group's write) recovers to the
+last whole record, and ``recover()`` hash-matches ``replay(genesis,
+log[:t])`` at that prefix; the dead-ratio compaction policy rewrites the
+log only when due and never changes the replayed state.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+import repro  # noqa: F401
+from repro.core import commands, durability, hashing, machine, wal
+from repro.core.state import init_state
+from test_bulk_apply import _random_log
+from test_durability import _hash_trace, _record_boundaries
+
+D = 8
+
+
+# --------------------------------------------------------------------------- #
+# append_many: one fsync, same bits
+# --------------------------------------------------------------------------- #
+
+
+def test_append_many_is_bit_identical_to_sequential_appends(tmp_path):
+    log = _random_log(3, 48, id_space=12)
+    a = wal.WriteAheadLog(tmp_path / "a", D, segment_records=16)
+    for i in range(48):
+        a.append(log.slice(i, i + 1))
+    b = wal.WriteAheadLog(tmp_path / "b", D, segment_records=16)
+    b.append_many([log.slice(i, i + 12) for i in range(0, 48, 12)])
+    assert a.t == b.t == 48
+    genesis = init_state(32, D)
+    ha = hashing.hash_pytree(machine.replay(genesis, a.read_range(0, 48)))
+    hb = hashing.hash_pytree(machine.replay(genesis, b.read_range(0, 48)))
+    assert ha == hb == hashing.hash_pytree(machine.replay(genesis, log))
+    # and the on-disk segments are byte-identical: grouping is invisible
+    for pa, pb in zip(sorted((tmp_path / "a").glob("seg_*.wal")),
+                      sorted((tmp_path / "b").glob("seg_*.wal"))):
+        assert pa.read_bytes() == pb.read_bytes()
+
+
+def test_append_many_does_not_merge_nop_runs_across_logs(tmp_path):
+    """Byte-invisibility of grouping, worst case: logs that end/start with
+    zero-NOP runs. Merging runs across the boundary would change record
+    framing and the FNV chain — two replicas grouping differently would
+    stop comparing bit-identically for audit."""
+    nop2 = machine._pad_log(commands.empty_log(D), 2)
+    nop3 = machine._pad_log(commands.empty_log(D), 3)
+    a = wal.WriteAheadLog(tmp_path / "a", D, segment_records=1024)
+    a.append(nop2)
+    a.append(nop3)
+    b = wal.WriteAheadLog(tmp_path / "b", D, segment_records=1024)
+    b.append_many([nop2, nop3])
+    assert a.t == b.t == 5
+    sa = next((tmp_path / "a").glob("seg_*.wal")).read_bytes()
+    sb = next((tmp_path / "b").glob("seg_*.wal")).read_bytes()
+    assert sa == sb, "NOP runs must not merge across log boundaries"
+
+
+def test_writer_keeps_pending_group_on_sink_failure(tmp_path):
+    """A sink exception must not discard the pending (never-acked) group:
+    it stays buffered and a retry flush lands every command."""
+    w = wal.WriteAheadLog(tmp_path, D, segment_records=1024)
+    gw = wal.GroupCommitWriter(
+        w, wal.GroupCommitPolicy(max_batch=1 << 20, max_delay_s=3600))
+    log = _random_log(20, 12, id_space=6)
+    gw.submit(log)
+
+    real = w.append_many
+    w.append_many = lambda logs: (_ for _ in ()).throw(OSError("disk full"))
+    with pytest.raises(OSError):
+        gw.flush()
+    assert gw.pending == 12, "failed flush must keep the group retryable"
+    w.append_many = real
+    assert gw.flush() == 12 and gw.pending == 0
+    genesis = init_state(16, D)
+    assert (hashing.hash_pytree(machine.replay(genesis, w.read_range(0, 12)))
+            == hashing.hash_pytree(machine.replay(genesis, log)))
+
+
+def test_writer_retry_after_partial_flush_never_duplicates(tmp_path):
+    """A flush that fails midway through a multi-segment group leaves its
+    durable prefix on disk (per-segment fsync); the retry must append only
+    the rest — duplicating the prefix would silently corrupt replay."""
+    w = wal.WriteAheadLog(tmp_path, D, segment_records=8)
+    gw = wal.GroupCommitWriter(
+        w, wal.GroupCommitPolicy(max_batch=1 << 20, max_delay_s=3600))
+    log = _random_log(22, 20, id_space=8)
+    gw.submit(log)
+
+    orig = w._open_segment
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] == 2:  # the roll into the second segment fails
+            raise OSError("disk full")
+        orig()
+
+    w._open_segment = flaky
+    with pytest.raises(OSError):
+        gw.flush()
+    assert w.t == 8, "first segment's records are durable"
+    assert gw.pending == 12, "only the un-durable suffix stays pending"
+    w._open_segment = orig
+    assert gw.flush() == 20
+    genesis = init_state(32, D)
+    assert (hashing.hash_pytree(machine.replay(genesis, w.read_range(0, 20)))
+            == hashing.hash_pytree(machine.replay(genesis, log)))
+
+
+def test_compaction_failure_propagates_not_swallowed(tmp_path):
+    """A failure inside scheduled compaction itself (corrupt mid-history
+    segment) must surface on append, not vanish — the CheckpointManager
+    no-silent-loss discipline applies to compaction too."""
+    genesis = init_state(6, D)
+    policy = wal.CompactionPolicy(dead_ratio=0.01, min_commands=8,
+                                  check_every=8)
+    store = durability.DurableStore(tmp_path, genesis, segment_records=4,
+                                    compaction=policy)
+    log = _churny_log(13, 12)
+    store.append(log.slice(0, 6))  # below check_every: no check yet
+    seg0 = sorted((tmp_path / "wal").glob("seg_*.wal"))[0]
+    raw = bytearray(seg0.read_bytes())
+    raw[-4] ^= 0xFF  # corrupt an interior segment's chain mid-history
+    seg0.write_bytes(bytes(raw))
+    with pytest.raises(ValueError):
+        store.append(log.slice(6, 10))  # check due → read hits corruption
+
+
+def test_compaction_skips_when_genesis_snapshot_unavailable(tmp_path):
+    """Deleting the t=0 snapshot (so genesis cannot be restored) must skip
+    scheduled compaction silently — that one case is legitimate."""
+    genesis = init_state(6, D)
+    policy = wal.CompactionPolicy(dead_ratio=0.01, min_commands=8,
+                                  check_every=8)
+    store = durability.DurableStore(tmp_path, genesis, segment_records=64,
+                                    compaction=policy)
+    for p in (tmp_path / "snapshots").glob("t_*.vsn2"):
+        p.unlink()
+    log = _churny_log(14, 24)
+    store.append(log)  # check due, genesis unavailable: no raise, no compact
+    assert store.t == 24
+    h = hashing.hash_pytree(
+        machine.bulk_apply(genesis, store.wal.read_range(0, 24)))
+    assert h == hashing.hash_pytree(machine.replay(genesis, log))
+
+
+def test_append_many_skips_empty_logs(tmp_path):
+    w = wal.WriteAheadLog(tmp_path, D, segment_records=16)
+    assert w.append_many([]) == 0
+    assert w.append_many([commands.empty_log(D)]) == 0
+    log = _random_log(0, 4, id_space=4)
+    assert w.append_many([commands.empty_log(D), log]) == 4
+
+
+# --------------------------------------------------------------------------- #
+# GroupCommitWriter: batching semantics
+# --------------------------------------------------------------------------- #
+
+
+def test_writer_flushes_at_max_batch(tmp_path):
+    w = wal.WriteAheadLog(tmp_path, D, segment_records=1024)
+    gw = wal.GroupCommitWriter(
+        w, wal.GroupCommitPolicy(max_batch=16, max_delay_s=3600))
+    log = _random_log(1, 40, id_space=10)
+    for i in range(40):
+        gw.submit(log.slice(i, i + 1))
+    assert gw.groups == 2 and w.t == 32  # two full groups committed
+    assert gw.pending == 8 and gw.target_t == 40
+    assert gw.flush() == 40 and gw.pending == 0
+    assert gw.groups == 3
+
+
+def test_writer_flushes_on_deadline(tmp_path):
+    w = wal.WriteAheadLog(tmp_path, D, segment_records=1024)
+    gw = wal.GroupCommitWriter(
+        w, wal.GroupCommitPolicy(max_batch=1 << 20, max_delay_s=0.01))
+    log = _random_log(2, 4, id_space=4)
+    gw.submit(log.slice(0, 2))
+    assert w.t == 0  # buffered: deadline not reached
+    time.sleep(0.02)
+    gw.submit(log.slice(2, 4))  # deadline observed at the next submit
+    assert w.t == 4 and gw.pending == 0
+
+
+def test_writer_commands_not_durable_until_flush(tmp_path):
+    w = wal.WriteAheadLog(tmp_path, D, segment_records=1024)
+    gw = wal.GroupCommitWriter(
+        w, wal.GroupCommitPolicy(max_batch=64, max_delay_s=3600))
+    log = _random_log(4, 10, id_space=6)
+    gw.submit(log)
+    assert w.t == 0 and gw.pending == 10  # buffered only — never acked
+    # the crash model: the writer dies; a reopened WAL has nothing
+    reopened = wal.WriteAheadLog(tmp_path, D)
+    assert reopened.t == 0
+
+
+# --------------------------------------------------------------------------- #
+# crash inside a group commit: random truncation, longest-whole-record rule
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_kill_mid_group_recovers_last_whole_record(tmp_path, seed):
+    """Kill the process mid-group-write (random byte cut inside the group's
+    extent): recovery keeps the longest whole-record prefix — possibly a
+    partial group, never a partial record — and recover() hash-matches
+    replay(genesis, log[:t])."""
+    rng = np.random.default_rng(seed)
+    log = _random_log(seed, 30, id_space=8)
+    genesis = init_state(32, D)
+    ref = _hash_trace(genesis, log)
+
+    wdir = tmp_path / "wal"
+    w = wal.WriteAheadLog(wdir, D, segment_records=1024)
+    w.append(log.slice(0, 6))  # acked pre-group history
+    seg = next(wdir.glob("seg_*.wal"))
+    group_start = seg.stat().st_size
+    w.append_many([log.slice(i, i + 8) for i in range(6, 30, 8)])
+
+    header, bounds = _record_boundaries(seg)
+    cut = int(rng.integers(group_start, seg.stat().st_size))
+    with open(seg, "r+b") as f:
+        f.truncate(cut)
+
+    expect_t = max([c for o, c in bounds if o <= cut], default=0)
+    assert expect_t >= 6, "acked pre-group records must survive"
+
+    recovered = wal.WriteAheadLog(wdir)
+    assert recovered.t == expect_t
+    state = machine.replay(genesis, recovered.read_range(0, expect_t))
+    assert hashing.hash_pytree(state) == ref[expect_t]
+    # the group is re-submittable: extend to the full log and verify
+    recovered.append(log.slice(expect_t, 30))
+    state2 = machine.replay(genesis, recovered.read_range(0, 30))
+    assert hashing.hash_pytree(state2) == ref[30]
+
+
+def test_store_recover_after_torn_group(tmp_path):
+    """DurableStore + writer: flushed groups are durable, a torn in-flight
+    suffix is truncated, recover() lands exactly on the flushed prefix."""
+    log = _random_log(21, 24, id_space=8)
+    genesis = init_state(32, D)
+    ref = _hash_trace(genesis, log)
+    store = durability.DurableStore(tmp_path / "s", genesis,
+                                    segment_records=1024)
+    gw = wal.GroupCommitWriter(
+        store, wal.GroupCommitPolicy(max_batch=8, max_delay_s=3600))
+    for i in range(24):
+        gw.submit(log.slice(i, i + 1))
+    assert store.t == 24  # three full groups
+    seg = sorted((tmp_path / "s" / "wal").glob("seg_*.wal"))[-1]
+    with open(seg, "ab") as f:
+        f.write(b"\x99torn in-flight group bytes\x99")
+
+    reopened = durability.DurableStore(tmp_path / "s")
+    state, h, t = reopened.recover()
+    assert t == 24 and h == ref[24]
+
+
+# --------------------------------------------------------------------------- #
+# truncate_to: the group-rollback primitive
+# --------------------------------------------------------------------------- #
+
+
+def test_truncate_to_record_boundary_and_reappend(tmp_path):
+    log = _random_log(5, 30, id_space=10)
+    genesis = init_state(32, D)
+    ref = _hash_trace(genesis, log)
+    w = wal.WriteAheadLog(tmp_path, D, segment_records=8)  # multi-segment
+    w.append(log)
+    w.truncate_to(13)
+    assert w.t == 13
+    assert hashing.hash_pytree(
+        machine.replay(genesis, w.read_range(0, 13))) == ref[13]
+    w.append(log.slice(13, 30))  # the chain extends cleanly after rollback
+    assert hashing.hash_pytree(
+        machine.replay(genesis, w.read_range(0, 30))) == ref[30]
+
+
+def test_truncate_to_splits_a_nop_run(tmp_path):
+    w = wal.WriteAheadLog(tmp_path, D, segment_records=1024)
+    log = _random_log(6, 5, id_space=4)
+    w.append(log)
+    w.append(machine._pad_log(commands.empty_log(D), 12))  # 12-NOP run
+    w.truncate_to(9)  # lands inside the run
+    assert w.t == 9
+    back = w.read_range(0, 9)
+    assert (np.asarray(back.opcode)[5:] == commands.NOP).all()
+    genesis = init_state(16, D)
+    expect = log.concat(machine._pad_log(commands.empty_log(D), 4))
+    assert (hashing.hash_pytree(machine.replay(genesis, back))
+            == hashing.hash_pytree(machine.replay(genesis, expect)))
+
+
+def test_truncate_to_refuses_gaps_and_stays_intact(tmp_path):
+    w = wal.WriteAheadLog(tmp_path, D, segment_records=1024)
+    w.append(_random_log(7, 6, id_space=4))
+    w.reset_to(20)  # lost region [6, 20)
+    w.append(_random_log(8, 4, id_space=4))
+    with pytest.raises(ValueError, match="gap|retained"):
+        w.truncate_to(10)  # inside the hole
+    assert w.t == 24, "a refused truncate must not damage the WAL"
+    w.truncate_to(20)  # the hole's end is a valid rollback point
+    assert w.t == 20
+
+
+def test_rollback_to_drops_snapshots_above(tmp_path):
+    log = _random_log(9, 20, id_space=8)
+    genesis = init_state(32, D)
+    store = durability.DurableStore(tmp_path, genesis, segment_records=1024)
+    store.append(log)
+    s = machine.bulk_apply(genesis, log.slice(0, 10))
+    store.checkpoint(jax.tree.map(np.asarray, s))
+    s2 = machine.bulk_apply(s, log.slice(10, 20))
+    store.checkpoint(jax.tree.map(np.asarray, s2))
+    assert store.snapshots() == [0, 10, 20]
+    store.rollback_to(15)
+    assert store.snapshots() == [0, 10] and store.t == 15
+    _, h = store.restore_at(15)
+    assert h == _hash_trace(genesis, log)[15]
+
+
+# --------------------------------------------------------------------------- #
+# scheduled compaction: dead-ratio driven, replay-invariant
+# --------------------------------------------------------------------------- #
+
+
+def _churny_log(seed, n):
+    # small id space + deletes/meta churn: plenty of provably-dead commands
+    return _random_log(seed, n, id_space=5, opcode_weights=(1, 4, 2, 1, 1, 4))
+
+
+def test_compaction_policy_triggers_on_dead_ratio(tmp_path):
+    genesis = init_state(6, D)
+    policy = wal.CompactionPolicy(dead_ratio=0.05, min_commands=20,
+                                  check_every=20)
+    store = durability.DurableStore(tmp_path, genesis, segment_records=8,
+                                    compaction=policy)
+    log = _churny_log(10, 60)
+    ref = hashing.hash_pytree(machine.replay(genesis, log))
+    for i in range(0, 60, 10):
+        store.append(log.slice(i, i + 10))
+    after = sum(p.stat().st_size
+                for p in (tmp_path / "wal").glob("seg_*.wal"))
+    # the policy fired at least once: NOP-run RLE + dropped INSERT payloads
+    # must have shrunk the on-disk log relative to the raw append total
+    raw = durability.DurableStore(tmp_path.parent / "raw", genesis,
+                                  segment_records=8)
+    raw.append(log)
+    raw_bytes = sum(p.stat().st_size
+                    for p in (tmp_path.parent / "raw" / "wal").glob("*.wal"))
+    assert after < raw_bytes, "scheduled compaction never fired"
+    _, h = store.restore_at(60)
+    assert h == ref, "compaction changed the replayed state"
+
+
+def test_compaction_policy_respects_min_commands(tmp_path):
+    genesis = init_state(6, D)
+    policy = wal.CompactionPolicy(dead_ratio=0.01, min_commands=10_000,
+                                  check_every=10)
+    store = durability.DurableStore(tmp_path, genesis, segment_records=8,
+                                    compaction=policy)
+    log = _churny_log(11, 40)
+    store.append(log)
+    raw = durability.DurableStore(tmp_path.parent / "raw2", genesis,
+                                  segment_records=8)
+    raw.append(log)
+    a = sorted(p.read_bytes()
+               for p in (tmp_path / "wal").glob("seg_*.wal"))
+    b = sorted(p.read_bytes()
+               for p in (tmp_path.parent / "raw2" / "wal").glob("seg_*.wal"))
+    assert a == b, "compaction must not run below min_commands"
+
+
+def test_compact_min_dead_ratio_skips_without_rewrite(tmp_path):
+    w = wal.WriteAheadLog(tmp_path, D, segment_records=8)
+    log = _churny_log(12, 50)
+    w.append(log)
+    genesis = init_state(6, D)
+    stats = w.compact(genesis, min_dead_ratio=0.999)
+    assert stats["skipped"] == 1
+    assert stats["bytes_after"] == stats["bytes_before"]
+    assert 0.0 < stats["dead_ratio"] < 0.999
+    stats2 = w.compact(genesis)  # no gate: the rewrite happens
+    assert stats2["skipped"] == 0
+    assert stats2["bytes_after"] < stats["bytes_before"]
+    h = hashing.hash_pytree(machine.bulk_apply(genesis, w.read_range(0, 50)))
+    assert h == hashing.hash_pytree(machine.replay(genesis, log))

@@ -80,3 +80,42 @@ def test_engine_crash_recovery(engine, tmp_path):
     # recovered engines keep ingesting with fresh, non-colliding ids
     new_ids = eng2.insert_documents(docs[:2])
     assert min(new_ids) == 20
+
+
+def test_engine_refuses_durability_policies_without_durable_dir(engine):
+    from repro.core import wal
+    from repro.serve.engine import MemoryAugmentedEngine, ServeConfig
+    sc = ServeConfig(capacity=32, group_commit=wal.GroupCommitPolicy())
+    with pytest.raises(ValueError, match="durable_dir"):
+        MemoryAugmentedEngine(engine.cfg, engine.params, sc)
+
+
+def test_engine_group_commit_sync_on_read(engine, tmp_path):
+    """Group-commit serving: ingested batches buffer toward one fsync per
+    group; the read path flushes first, so everything a retrieval observed
+    is durable — and recovery reproduces exactly those retrievals."""
+    from repro.core import wal
+    from repro.serve.engine import MemoryAugmentedEngine, ServeConfig
+    rng = np.random.default_rng(5)
+    sc = ServeConfig(capacity=128, retrieve_k=3, max_new_tokens=4, s_cache=96,
+                     context_tokens=8, durable_dir=str(tmp_path / "d"),
+                     group_commit=wal.GroupCommitPolicy(max_batch=64,
+                                                        max_delay_s=3600))
+    eng = MemoryAugmentedEngine(engine.cfg, engine.params, sc)
+    docs = rng.integers(0, engine.cfg.vocab_size, (12, 16), dtype=np.int32)
+    eng.insert_documents(docs[:8])
+    assert eng.durable.t == 0, "small batch must buffer, not fsync"
+    assert eng._group.pending == 8
+
+    prompts = rng.integers(0, engine.cfg.vocab_size, (2, 8), dtype=np.int32)
+    rh = eng.retrieval_hash(prompts)         # sync-on-read barrier
+    assert eng.durable.t == 8, "reads must flush pending commands first"
+    assert eng._group.pending == 0
+
+    eng.insert_documents(docs[8:])           # pending again, then "crash"
+    assert eng.durable.t == 8
+    eng2 = MemoryAugmentedEngine(engine.cfg, engine.params, sc)
+    t, _ = eng2.recover()
+    assert t == 8, "only the flushed (read-observed) prefix is durable"
+    assert eng2.retrieval_hash(prompts) == rh
+    assert eng2.memory_hash() == eng2.replay_log_fresh()

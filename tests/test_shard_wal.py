@@ -1,0 +1,316 @@
+"""Per-shard WALs under one global cursor (DESIGN.md §6).
+
+The acceptance contract: a ShardedDurableStore ingest (group-committed,
+routed, NOP-padded to lockstep) + kill + ``recover()`` reproduces the
+exact merged state hash AND ``retrieval_hash()`` of an uninterrupted
+in-memory run; a crash between per-shard flushes reconciles to the last
+globally-complete point (shards ahead roll back their never-acked
+suffix); the merged-manifest hash is the whole-state hash.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro  # noqa: F401
+from repro.core import (boundary, commands, distributed, hashing, machine,
+                        query, search, shard_wal, wal)
+from repro.core.state import init_state
+from test_bulk_apply import _random_log
+
+D = 8
+NS = 3
+
+
+def _genesis(n_shards=NS, cap=16):
+    return distributed.init_sharded_host(n_shards, cap, D)
+
+
+def _batches(seed, n, step, id_space=20):
+    log = _random_log(seed, n, id_space=id_space)
+    return [log.slice(i, min(i + step, n)) for i in range(0, n, step)], log
+
+
+def _apply_all(state, batches, n_shards=NS):
+    for b in batches:
+        state = shard_wal.bulk_apply_sharded(state, b, n_shards)
+    return state
+
+
+# --------------------------------------------------------------------------- #
+# lockstep ingest + restore
+# --------------------------------------------------------------------------- #
+
+
+def test_sharded_ingest_restore_roundtrip(tmp_path):
+    genesis = _genesis()
+    batches, _ = _batches(0, 48, 12)
+    store = shard_wal.ShardedDurableStore(tmp_path, genesis, n_shards=NS,
+                                          segment_records=64, chunk_size=256)
+    ref = genesis
+    for b in batches:
+        store.append(b)
+        ref = shard_wal.bulk_apply_sharded(ref, b, NS)
+    assert len(set(store.shard_ts())) == 1, "shards must stay in lockstep"
+    state, h = store.restore_at(store.t)
+    assert h == hashing.hash_pytree(ref)
+    for la, lb in zip(jax.tree_util.tree_leaves(state),
+                      jax.tree_util.tree_leaves(ref)):
+        assert (np.asarray(la) == np.asarray(lb)).all()
+
+
+def test_group_commit_path_is_bit_identical_to_per_batch(tmp_path):
+    """Grouping batches must not change routing or padding: the WALs (and
+    hence every restore) are bit-identical to the ungrouped path."""
+    genesis = _genesis()
+    batches, _ = _batches(1, 40, 8)
+    a = shard_wal.ShardedDurableStore(tmp_path / "a", genesis, n_shards=NS,
+                                      segment_records=256)
+    for b in batches:
+        a.append(b)
+    b_store = shard_wal.ShardedDurableStore(tmp_path / "b", genesis,
+                                            n_shards=NS, segment_records=256)
+    gw = wal.GroupCommitWriter(
+        b_store, wal.GroupCommitPolicy(max_batch=1 << 20, max_delay_s=3600))
+    for b in batches:
+        gw.submit(b)
+    gw.flush()
+    assert a.t == b_store.t
+    for s in range(NS):
+        segs_a = sorted((tmp_path / "a" / f"shard_{s:04d}" / "wal").glob("*.wal"))
+        segs_b = sorted((tmp_path / "b" / f"shard_{s:04d}" / "wal").glob("*.wal"))
+        for pa, pb in zip(segs_a, segs_b):
+            assert pa.read_bytes() == pb.read_bytes()
+
+
+def test_restore_at_historic_batch_boundaries(tmp_path):
+    genesis = _genesis()
+    batches, _ = _batches(2, 36, 9)
+    store = shard_wal.ShardedDurableStore(tmp_path, genesis, n_shards=NS,
+                                          segment_records=64)
+    ref = genesis
+    cursors = [0]
+    refs = {0: hashing.hash_pytree(genesis)}
+    for b in batches:
+        t = store.append(b)
+        ref = shard_wal.bulk_apply_sharded(ref, b, NS)
+        cursors.append(t)
+        refs[t] = hashing.hash_pytree(ref)
+    for t in cursors:  # every boundary, not just the head
+        _, h = store.restore_at(t)
+        assert h == refs[t], f"restore_at({t}) diverged"
+
+
+# --------------------------------------------------------------------------- #
+# the acceptance scenario: ingest + kill + recover == uninterrupted run
+# --------------------------------------------------------------------------- #
+
+
+def test_kill_and_recover_matches_uninterrupted_retrieval_hash(tmp_path):
+    genesis = _genesis(cap=32)
+    batches, _ = _batches(3, 60, 12)
+    ref = _apply_all(genesis, batches)
+
+    store = shard_wal.ShardedDurableStore(tmp_path, genesis, n_shards=NS,
+                                          segment_records=256)
+    gw = wal.GroupCommitWriter(
+        store, wal.GroupCommitPolicy(max_batch=24, max_delay_s=3600))
+    for b in batches:
+        gw.submit(b)
+    gw.flush()
+    t_acked = store.t
+
+    # kill: torn, never-acked garbage lands on two shards' WAL tails
+    for s in (0, 2):
+        seg = sorted((tmp_path / f"shard_{s:04d}" / "wal").glob("*.wal"))[-1]
+        with open(seg, "ab") as f:
+            f.write(b"\xde\xadtorn group\xbe\xef" * (s + 1))
+
+    reopened = shard_wal.ShardedDurableStore(tmp_path)
+    state, h, t = reopened.recover()
+    assert t == t_acked
+    assert h == hashing.hash_pytree(ref), "recover diverged from the run"
+
+    rng = np.random.default_rng(0)
+    q = boundary.admit_query(rng.normal(size=(6, D)).astype(np.float32))
+    ids_a, s_a = shard_wal.exact_search_sharded(ref, NS, q, 5)
+    ids_b, s_b = shard_wal.exact_search_sharded(state, NS, q, 5)
+    assert (query.retrieval_hash(ids_a, s_a)
+            == query.retrieval_hash(ids_b, s_b))
+
+
+def test_crash_between_shard_flushes_reconciles_to_min(tmp_path):
+    """A kill between per-shard group flushes leaves a shard-order prefix
+    holding the group; recover() must land every shard on the last
+    globally-complete cursor and leave the fleet appendable in lockstep."""
+    genesis = _genesis()
+    batches, _ = _batches(4, 40, 10)
+    acked, extra = batches[:3], batches[3]
+    store = shard_wal.ShardedDurableStore(tmp_path, genesis, n_shards=NS,
+                                          segment_records=256)
+    ref = _apply_all(genesis, acked)
+    for b in acked:
+        store.append(b)
+    t_acked = store.t
+
+    # crash mid-append_many: only shard 0 got the next group
+    routed = distributed.route_commands(extra, NS)
+    store.shards[0].append(jax.tree.map(lambda a: a[0], routed))
+    assert store.shards[0].t > t_acked
+
+    reopened = shard_wal.ShardedDurableStore(tmp_path)
+    state, h, t = reopened.recover()
+    assert t == t_acked
+    assert len(set(reopened.shard_ts())) == 1
+    assert h == hashing.hash_pytree(ref)
+
+    # the group was never acked upstream: the client re-submits it whole
+    t2 = reopened.append(extra)
+    ref2 = shard_wal.bulk_apply_sharded(ref, extra, NS)
+    _, h2 = reopened.restore_at(t2)
+    assert h2 == hashing.hash_pytree(ref2)
+
+
+def test_writer_target_t_exact_for_sharded_sink(tmp_path):
+    """target_t must predict the padded global cursor, not the raw command
+    count: a batch advances every shard by its heaviest shard's share."""
+    genesis = _genesis()
+    batches, _ = _batches(11, 24, 8)
+    store = shard_wal.ShardedDurableStore(tmp_path, genesis, n_shards=NS,
+                                          segment_records=256)
+    gw = wal.GroupCommitWriter(
+        store, wal.GroupCommitPolicy(max_batch=1 << 20, max_delay_s=3600))
+    predicted = [gw.submit(b) for b in batches]
+    assert gw.flush() == predicted[-1], \
+        "submit()'s returned cursor must be the one flush() lands on"
+    # and intermediate predictions were the true per-batch boundaries
+    replayed = shard_wal.ShardedDurableStore(tmp_path / "again", genesis,
+                                             n_shards=NS)
+    assert predicted == [replayed.append(b) for b in batches]
+
+
+def test_append_to_diverged_store_refused_before_any_write(tmp_path):
+    """Appending to an unreconciled post-crash store must be refused BEFORE
+    anything is fsynced — otherwise the same logical offset would durably
+    hold different batches on different shards."""
+    genesis = _genesis()
+    batches, _ = _batches(12, 20, 10)
+    store = shard_wal.ShardedDurableStore(tmp_path, genesis, n_shards=NS,
+                                          segment_records=256)
+    store.append(batches[0])
+    routed = distributed.route_commands(batches[1], NS)
+    store.shards[0].append(jax.tree.map(lambda a: a[0], routed))  # crash-ish
+    before = store.shard_ts()
+    with pytest.raises(RuntimeError, match="recover"):
+        store.append(batches[1])
+    assert store.shard_ts() == before, "refusal must not touch any WAL"
+
+
+def test_checkpointed_recover_uses_snapshots_and_merged_hash(tmp_path):
+    genesis = _genesis()
+    batches, _ = _batches(5, 30, 10)
+    store = shard_wal.ShardedDurableStore(tmp_path, genesis, n_shards=NS,
+                                          segment_records=256, chunk_size=256)
+    ref = genesis
+    for b in batches:
+        store.append(b)
+        ref = shard_wal.bulk_apply_sharded(ref, b, NS)
+    store.checkpoint(ref)
+    assert store.merged_records() == [int(np.asarray(ref.version)[0])]
+
+    reopened = shard_wal.ShardedDurableStore(tmp_path)
+    state, h, t = reopened.recover()
+    assert t == store.t and h == hashing.hash_pytree(ref)
+
+
+def test_merged_hash_tamper_detected(tmp_path):
+    genesis = _genesis()
+    batches, _ = _batches(6, 20, 10)
+    store = shard_wal.ShardedDurableStore(tmp_path, genesis, n_shards=NS,
+                                          segment_records=256)
+    ref = _apply_all(genesis, batches)
+    for b in batches:
+        store.append(b)
+    store.checkpoint(ref)
+    t = store.t
+    rec_path = store._merged_path(t)
+    rec = json.loads(rec_path.read_text())
+    rec["hash"] = f"{int(rec['hash'], 16) ^ 1:#018x}"
+    rec_path.write_text(json.dumps(rec))
+    with pytest.raises(ValueError, match="hash mismatch"):
+        store.restore_at(t)
+
+
+def test_checkpoint_refuses_diverged_cursors(tmp_path):
+    genesis = _genesis()
+    store = shard_wal.ShardedDurableStore(tmp_path, genesis, n_shards=NS)
+    bad = genesis
+    import dataclasses
+    bad = dataclasses.replace(
+        bad, version=jnp.asarray([0, 1, 0], bad.version.dtype))
+    with pytest.raises(ValueError, match="disagree"):
+        store.checkpoint(bad)
+
+
+# --------------------------------------------------------------------------- #
+# shared chunk store: cross-shard dedup + owner-side sweep
+# --------------------------------------------------------------------------- #
+
+
+def test_shared_chunkstore_dedups_and_retain_keeps_live_chunks(tmp_path):
+    genesis = _genesis()
+    batches, _ = _batches(7, 40, 10)
+    store = shard_wal.ShardedDurableStore(tmp_path, genesis, n_shards=NS,
+                                          segment_records=8, chunk_size=256)
+    ref = genesis
+    for b in batches:
+        store.append(b)
+        ref = shard_wal.bulk_apply_sharded(ref, b, NS)
+        store.checkpoint(ref)
+    # all shards share one physical chunk dir
+    assert (tmp_path / "chunks").is_dir()
+    assert not (tmp_path / "shard_0000" / "chunks").exists()
+
+    stats = store.retain(1)
+    assert stats["snapshots_dropped"] > 0
+    # post-sweep, every shard still restores and the merge still verifies
+    state, h = store.restore_at(store.t)
+    assert h == hashing.hash_pytree(ref)
+    # merged records outside the window were pruned with the snapshots
+    oldest = min(s.snapshots()[0] for s in store.shards)
+    assert all(t >= oldest for t in store.merged_records())
+
+
+def test_reopen_validates_shard_count(tmp_path):
+    genesis = _genesis()
+    shard_wal.ShardedDurableStore(tmp_path, genesis, n_shards=NS)
+    with pytest.raises(ValueError, match="shards"):
+        shard_wal.ShardedDurableStore(tmp_path, n_shards=NS + 1)
+
+
+# --------------------------------------------------------------------------- #
+# sharded exact search: layout-invariant retrieval
+# --------------------------------------------------------------------------- #
+
+
+def test_exact_search_sharded_matches_single_kernel():
+    """The merged sharded state and a single kernel holding the same live
+    (id → vector) content return bit-identical retrieval sets: scores and
+    (score, id) tie-breaks are slot-layout-invariant."""
+    rng = np.random.default_rng(1)
+    n = 24
+    vecs = boundary.normalize_embedding(
+        rng.normal(size=(n, D)).astype(np.float32))
+    ids = jnp.arange(n, dtype=jnp.int64)
+    log = commands.insert_batch(ids, vecs)
+
+    sharded = shard_wal.bulk_apply_sharded(_genesis(), log, NS)
+    flat = machine.bulk_apply(init_state(64, D), log)
+
+    q = boundary.admit_query(rng.normal(size=(5, D)).astype(np.float32))
+    ids_s, s_s = shard_wal.exact_search_sharded(sharded, NS, q, 6)
+    ids_f, s_f = search.exact_search(flat, q, 6)
+    assert (np.asarray(ids_s) == np.asarray(ids_f)).all()
+    assert (np.asarray(s_s) == np.asarray(s_f)).all()
