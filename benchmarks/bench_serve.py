@@ -1,0 +1,114 @@
+"""Serve-engine throughput: sharded vs single-host, hash-checked (DESIGN.md §7).
+
+One table, conformance-checked on every run (a QPS number for an engine
+that diverges from its single-host twin would be meaningless):
+
+  durable ingest (docs/sec through the full embed → boundary → group-commit
+  → bulk-apply path) and batched retrieval (queries/sec through the planner)
+  for ``ServeConfig(shards=1)`` vs ``ServeConfig(shards=N)`` — asserting,
+  every run, that both modes report the same ``memory_hash()`` (the
+  layout-invariant live-content hash) and the same ``retrieval_hash()`` on
+  the exact AND the beam-exhaustive HNSW route.
+
+Run directly (``python benchmarks/bench_serve.py [--smoke]``) or via
+``benchmarks.run``. ``--smoke`` shrinks the corpus so CI exercises the whole
+sharded serving path in seconds; CI fails if any hash pair diverges.
+"""
+from __future__ import annotations
+
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+import repro  # noqa: F401
+import jax
+from benchmarks.common import emit
+from repro.configs import get_reduced_config
+from repro.core import wal
+from repro.models import transformer as tf
+from repro.serve.engine import MemoryAugmentedEngine, ServeConfig
+
+ARCH = "mamba2_130m"
+SHARDS = 4
+
+
+def _engine(cfg, params, n_docs, shards, durable_dir):
+    return MemoryAugmentedEngine(cfg, params, ServeConfig(
+        capacity=max(2 * n_docs, 64) // shards * shards + shards * 8,
+        retrieve_k=4, max_new_tokens=4, s_cache=96, context_tokens=8,
+        # ef >= live count on every holder: the hnsw conformance check below
+        # runs in the beam-exhaustive regime (DESIGN.md §7)
+        ef=512, shards=shards, durable_dir=durable_dir,
+        group_commit=wal.GroupCommitPolicy(max_batch=1 << 20,
+                                           max_delay_s=3600)))
+
+
+def table(n_docs: int, batch: int, n_queries: int) -> None:
+    cfg = get_reduced_config(ARCH)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    docs = rng.integers(0, cfg.vocab_size, (n_docs + batch, 12),
+                        dtype=np.int32)
+    prompts = rng.integers(0, cfg.vocab_size, (n_queries, 8), dtype=np.int32)
+
+    results = {}
+    for shards in (1, SHARDS):
+        with tempfile.TemporaryDirectory() as tmp:
+            eng = _engine(cfg, params, n_docs, shards, tmp)
+            eng.insert_documents(docs[n_docs:])   # warmup: jit the paths
+            eng.flush()
+            eng.retrieve(prompts)
+
+            t0 = time.perf_counter()
+            for i in range(0, n_docs, batch):
+                eng.insert_documents(docs[i:i + batch])
+                eng.flush()
+            dt_ingest = time.perf_counter() - t0
+
+            iters = 5
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                ids, scores = eng.retrieve(prompts)
+            dt_read = time.perf_counter() - t0
+            timed_route = eng.last_plan.route
+
+            hashes = {"memory": eng.memory_hash()}
+            for route in ("exact", "hnsw"):
+                eng.sc.route = route
+                hashes[route] = eng.retrieval_hash(prompts)
+            results[shards] = hashes
+            eng.close()
+            emit(f"serve_ingest_shards{shards}", dt_ingest / n_docs * 1e6,
+                 f"docs_per_sec={n_docs / dt_ingest:.0f};"
+                 f"durable_t={eng.durable.t}")
+            emit(f"serve_retrieve_shards{shards}",
+                 dt_read / (iters * n_queries) * 1e6,
+                 f"queries_per_sec={iters * n_queries / dt_read:.0f};"
+                 f"plan={timed_route}")
+
+    for key in ("memory", "exact", "hnsw"):
+        if results[1][key] != results[SHARDS][key]:
+            raise RuntimeError(
+                f"sharded/single-host {key} hash diverged: "
+                f"{results[1][key]:#x} != {results[SHARDS][key]:#x}")
+    emit("serve_conformance", 0.0,
+         f"memory_hash_equal=True;retrieval_hash_equal=True;"
+         f"shards={SHARDS}_vs_1")
+
+
+def run(smoke: bool = False) -> None:
+    if smoke:
+        table(n_docs=24, batch=8, n_queries=4)
+    else:
+        table(n_docs=128, batch=16, n_queries=16)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    run(smoke="--smoke" in sys.argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV (stdout). Mapping to the paper:
   bench_latency     — §8.2          (retrieval latency, exact + HNSW + boundary)
   bench_wal         — DESIGN.md §6  (group commit vs fsync-per-command;
                                      sharded ingest + kill + recover)
+  bench_serve       — DESIGN.md §7  (sharded vs single-host serve engine,
+                                     memory/retrieval hashes cross-checked)
   bench_roofline    — EXPERIMENTS.md §Roofline (reads dry-run artifacts)
 """
 import sys
@@ -17,12 +19,12 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_contracts, bench_divergence, bench_ingest,
                             bench_latency, bench_recall, bench_roofline,
-                            bench_snapshot, bench_wal)
+                            bench_serve, bench_snapshot, bench_wal)
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_divergence, bench_contracts, bench_recall,
                 bench_snapshot, bench_latency, bench_ingest, bench_wal,
-                bench_roofline):
+                bench_serve, bench_roofline):
         try:
             mod.run()
         except Exception as e:  # noqa: BLE001

@@ -32,7 +32,7 @@ rng = np.random.default_rng(1)
 # through machine.bulk_apply (vectorized), hash-identical to scan-replay
 docs = rng.integers(0, cfg.vocab_size, (48, 48), dtype=np.int32)
 ids = engine.insert_documents(docs)
-h0 = engine.memory_hash()
+h0 = engine.state_hash()
 print(f"[ingest] {len(ids)} docs → memory hash {h0:#x} (bulk-apply)")
 
 # batched requests — the planner picks the route from static facts (48 live

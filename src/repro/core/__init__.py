@@ -38,9 +38,10 @@ from repro.core import (boundary, commands, contracts, distributed, durability,
                         shard_wal, snapshot, state, wal)
 from repro.core.contracts import (CONTRACTS, DEFAULT_CONTRACT, Q8_8, Q16_16,
                                   Q32_32, PrecisionContract, get_contract)
-from repro.core.durability import DurableStore, restore_at
+from repro.core.durability import DurableStore, SideTable, restore_at
+from repro.core.hashing import content_hash
 from repro.core.machine import apply_command, bulk_apply, replay
-from repro.core.query import plan_query, retrieval_hash
+from repro.core.query import plan_query, retrieval_hash, sharded_host_query
 from repro.core.shard_wal import ShardedDurableStore
 from repro.core.state import MemoryState, init_state
 from repro.core.wal import (CompactionPolicy, GroupCommitPolicy,
@@ -52,8 +53,9 @@ __all__ = [
     "shard_wal", "snapshot", "state", "wal",
     "CONTRACTS", "DEFAULT_CONTRACT", "Q8_8", "Q16_16", "Q32_32",
     "PrecisionContract", "get_contract", "MemoryState", "init_state",
-    "apply_command", "bulk_apply", "replay",
-    "DurableStore", "restore_at", "plan_query", "retrieval_hash",
+    "apply_command", "bulk_apply", "replay", "content_hash",
+    "DurableStore", "SideTable", "restore_at", "plan_query",
+    "retrieval_hash", "sharded_host_query",
     "ShardedDurableStore", "WriteAheadLog",
     "CompactionPolicy", "GroupCommitPolicy", "GroupCommitWriter",
 ]

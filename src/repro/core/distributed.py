@@ -186,6 +186,14 @@ def distributed_replay(mesh: Mesh, axis: str, state: MemoryState,
     return _replay(state, routed_log)
 
 
+def shard_live_counts(state: MemoryState, n_shards: int) -> np.ndarray:
+    """Per-shard live-row counts of a sharded-layout state, derived from the
+    ``valid`` mask (cross-checkable against the per-shard ``count`` scalars)
+    — the shard-balance diagnostic for the serve engine's sequential id
+    allocation, and a planner-facing host fact."""
+    return np.asarray(state.valid).reshape(n_shards, -1).sum(axis=1)
+
+
 def shard_slice(state: MemoryState, s: int, n_shards: int) -> MemoryState:
     """Shard ``s`` of a shard-major sharded-layout state as a plain
     single-kernel MemoryState (host-side view; inverse of ``merge_shards``)."""

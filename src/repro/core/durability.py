@@ -336,3 +336,96 @@ def restore_at(store: DurableStore, t: int, *, ef_construction: int = 32
     """Module-level alias: the state as of command ``t`` (see
     ``DurableStore.restore_at``)."""
     return store.restore_at(t, ef_construction=ef_construction)
+
+
+# --------------------------------------------------------------------------- #
+# durable side tables: serving caches that survive a crash (DESIGN.md §7)
+# --------------------------------------------------------------------------- #
+
+_SIDE_MAGIC = b"VSDT"
+_SIDE_FORMAT = 1
+
+
+class SideTable:
+    """Append-only durable ``key -> bytes`` table for serving-layer caches
+    (the engine's doc token prefixes). Deliberately NOT part of the
+    replayable state: nothing here is hashed into the memory, recovery of
+    the substrate never depends on it, and a lost suffix merely refills
+    lazily — but a restart no longer starts cold (the ROADMAP follow-up
+    this closes).
+
+    Format: a small fsynced header, then self-validating records
+    ``u64 key | u32 len | payload | u64 digest(key|len|payload)``
+    (``hashing.digest_bytes``). Later records for a key win, so an update
+    is just another append. On open, the file is scanned and truncated to
+    its longest valid record prefix — the WAL's torn-tail rule, applied to
+    a cache. ``put`` buffers through the OS; ``sync()`` makes the table
+    durable (the engine calls it at its flush/checkpoint barriers)."""
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = pathlib.Path(path)
+        self.entries: Dict[int, bytes] = {}
+        self._dirty = False
+        # put/sync race when a timer-flush thread drives sync (the engine's
+        # pre_flush hook) while the foreground thread is still putting: an
+        # unsynchronized dirty flag could be cleared for a record that was
+        # never fsynced, letting command durability outrun the cache's
+        self._mu = threading.RLock()
+        if self.path.exists():
+            self._load_and_truncate()
+        else:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            tmp = self.path.with_suffix(self.path.suffix + ".tmp")
+            with open(tmp, "wb") as f:  # tmp+fsync+rename: never a torn header
+                f.write(_SIDE_MAGIC + struct.pack("<I", _SIDE_FORMAT))
+                f.flush()
+                os.fsync(f.fileno())
+            tmp.rename(self.path)
+        self._f = open(self.path, "ab")
+
+    def _load_and_truncate(self) -> None:
+        data = self.path.read_bytes()
+        if data[:4] != _SIDE_MAGIC:
+            raise ValueError(f"{self.path.name}: not a side table")
+        (fmt,) = struct.unpack_from("<I", data, 4)
+        if fmt != _SIDE_FORMAT:
+            raise ValueError(f"{self.path.name}: unsupported format {fmt}")
+        off = 8
+        valid = off
+        while off + 12 <= len(data):
+            key, n = struct.unpack_from("<QI", data, off)
+            end = off + 12 + n + 8
+            if end > len(data):
+                break  # torn tail: short record
+            (stored,) = struct.unpack_from("<Q", data, off + 12 + n)
+            if stored != hashing.digest_bytes(data[off:off + 12 + n]):
+                break  # torn/corrupt record: keep the valid prefix
+            self.entries[key] = data[off + 12:off + 12 + n]
+            off = valid = end
+        if valid < len(data):
+            with open(self.path, "r+b") as f:
+                f.truncate(valid)
+                f.flush()
+                os.fsync(f.fileno())
+
+    def put(self, key: int, payload: bytes) -> None:
+        """Record (buffered — durable after the next ``sync()``)."""
+        body = struct.pack("<QI", key, len(payload)) + payload
+        with self._mu:
+            self._f.write(body + struct.pack("<Q", hashing.digest_bytes(body)))
+            self.entries[key] = payload
+            self._dirty = True
+
+    def sync(self) -> None:
+        """Make every ``put`` so far durable (no-op when clean)."""
+        with self._mu:
+            if not self._dirty:
+                return
+            self._f.flush()
+            os.fsync(self._f.fileno())
+            self._dirty = False
+
+    def close(self) -> None:
+        with self._mu:
+            self.sync()
+            self._f.close()

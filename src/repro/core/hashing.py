@@ -144,6 +144,30 @@ def digest_bytes(data: bytes) -> int:
     return _mix_fold_host(words) ^ _fnv1a_bytes(struct.pack("<Q", len(data)))
 
 
+def content_hash(state: Any) -> int:
+    """Layout-invariant 64-bit hash of a memory's *live content*.
+
+    Hashes the live rows sorted by external id — ``(ids, vectors, meta)``
+    triples — and nothing else, so the value is invariant to slot layout,
+    arena capacity, shard count and merge order: a flat single-kernel
+    state and the merged sharded-layout state built from the same command
+    log agree on it (the cross-layout conformance artifact, DESIGN.md §7).
+    It deliberately excludes what is layout-dependent by construction:
+    slot indices, the HNSW graph, ``links`` rows (slot-local adjacency),
+    free-list cursors and the padded ``version`` clock. ``hash_pytree``
+    remains the within-layout artifact durability verifies; this is the
+    across-layout one the serve engine's ``memory_hash()`` reports."""
+    ids = np.asarray(state.ids)
+    valid = np.asarray(state.valid)
+    live = np.flatnonzero(valid)
+    # ids are unique among live rows (machine invariant), so the sort is a
+    # total, deterministic order
+    order = live[np.argsort(ids[live], kind="stable")]
+    return hash_pytree((ids[order],
+                        np.asarray(state.vectors)[order],
+                        np.asarray(state.meta)[order]))
+
+
 def hash_pytree(tree: Any) -> int:
     """Deterministic 64-bit hash of a pytree of arrays, on host."""
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]

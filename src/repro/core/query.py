@@ -157,6 +157,30 @@ def sharded_query(mesh, axis: str, state: MemoryState, queries_raw: jax.Array,
         mesh, axis, state, queries_raw, k, ef=plan.ef, query_axis=query_axis)
 
 
+def sharded_host_query(state: MemoryState, n_shards: int,
+                       queries_raw: jax.Array, k: int, plan: QueryPlan, *,
+                       metric: str = search.METRIC_L2
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """The planned route fanned out over a *host-side* sharded-layout state
+    (no mesh): per-shard execution through the ``shard_wal`` twins, one
+    order-invariant merge. This is the serve engine's sharded read path.
+
+    Exact route: bit-identical to the single-kernel scan on the same live
+    content (the merge is permutation- and layout-invariant). HNSW route:
+    deterministic for a fixed shard count; bit-identical to the flat graph
+    whenever every per-shard beam is exhaustive (``plan.ef`` >= per-shard
+    live count) — the conformance regime DESIGN.md §7 pins.
+    """
+    from repro.core import shard_wal  # lazy: shard_wal imports us lazily
+
+    if plan.route == ROUTE_EXACT:
+        return shard_wal.exact_search_sharded(
+            state, n_shards, queries_raw, k, metric=metric,
+            use_kernel=plan.use_kernel)
+    return shard_wal.hnsw_search_sharded(state, n_shards, queries_raw, k,
+                                         ef=plan.ef)
+
+
 # --------------------------------------------------------------------------- #
 # retrieval-set hash: the read path's audit artifact
 # --------------------------------------------------------------------------- #

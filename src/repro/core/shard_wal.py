@@ -132,10 +132,14 @@ class ShardedDurableStore:
         counts = np.bincount(owners, minlength=self.n_shards)
         return max(int(counts.max()), 1)
 
-    def append(self, log: CommandLog) -> int:
+    def append(self, log: CommandLog, *,
+               routed: Optional[CommandLog] = None) -> int:
         """Route one global batch to the shards and durably append each
         share (one fsync per shard); returns the new global cursor. Every
-        shard advances by the batch's common padded length."""
+        shard advances by the batch's common padded length. A caller that
+        already routed the batch passes ``routed`` to skip re-routing."""
+        if routed is not None and len(log):
+            return self.append_many_routed([routed])
         return self.append_many([log])
 
     def append_many(self, logs: Sequence[CommandLog]) -> int:
@@ -149,6 +153,25 @@ class ShardedDurableStore:
         logs = [log for log in logs if len(log)]
         if not logs:
             return self.t
+        return self.append_many_routed(
+            [distributed.route_commands(log, self.n_shards) for log in logs])
+
+    def append_many_routed(self, routed_logs: Sequence[CommandLog]) -> int:
+        """``append_many`` minus the re-route: batches arrive as the
+        ``[n_shards, L]`` shares ``distributed.route_commands`` emits (the
+        serve engine routes once for audit + apply + durability). Same
+        refusal discipline, same per-shard fsync, same bytes. Callers must
+        route with this store's shard count and filter empty batches
+        themselves (routing pads an empty batch to one NOP, which would
+        advance the cursor)."""
+        routed_logs = list(routed_logs)
+        if not routed_logs:
+            return self.t
+        for r in routed_logs:
+            if r.opcode.shape[0] != self.n_shards:
+                raise ValueError(
+                    f"routed batch has {r.opcode.shape[0]} shares, store "
+                    f"has {self.n_shards} shards")
         # refuse BEFORE anything is fsynced: appending to an unreconciled
         # post-crash store would durably put different batches at the same
         # logical offset on different shards — run recover() first
@@ -156,12 +179,9 @@ class ShardedDurableStore:
             raise RuntimeError(
                 f"shard cursors diverged ({self.shard_ts()}): the store "
                 "needs recover() before it can accept new appends")
-        per_shard: List[List[CommandLog]] = [[] for _ in range(self.n_shards)]
-        for log in logs:
-            routed = distributed.route_commands(log, self.n_shards)
-            for s in range(self.n_shards):
-                per_shard[s].append(
-                    jax.tree.map(lambda a, s=s: a[s], routed))
+        per_shard: List[List[CommandLog]] = [
+            [jax.tree.map(lambda a, s=s: a[s], r) for r in routed_logs]
+            for s in range(self.n_shards)]
         ts = [self.shards[s].append_many(per_shard[s])
               for s in range(self.n_shards)]
         assert len(set(ts)) == 1, f"lockstep violated: {ts}"
@@ -265,6 +285,32 @@ class ShardedDurableStore:
         state, h = self.restore_at(t, ef_construction=ef_construction)
         return state, h, t
 
+    def rollback_to(self, t: int) -> None:
+        """Drop every durable artifact above global time ``t`` on every
+        shard (per-shard ``DurableStore.rollback_to``), then prune merged
+        records above ``t`` — the sharded twin of the single-store
+        rollback, used by the serve engine's time travel. A failure
+        partway through the shard loop leaves cursors diverged exactly
+        like a crash between per-shard flushes would; ``recover()``
+        reconciles it the same way (min cursor, ahead shards roll back)."""
+        if t > self.t:
+            raise ValueError(f"rollback_to({t}) is ahead of the globally "
+                             f"durable cursor {self.t}")
+        for shard in self.shards:
+            if shard.t > t:
+                shard.rollback_to(t)
+        for rec_t in self.merged_records():
+            if rec_t > t:
+                self._merged_path(rec_t).unlink()
+
+    def shard_logs(self, t0: int, t1: int) -> List[CommandLog]:
+        """Each shard's durable commands [t0, t1) — the per-shard audit
+        logs (routed, NOP-padded to lockstep). Replaying shard ``s``'s log
+        on its genesis slice re-derives its exact state: the sharded form
+        of the single-host replay audit. Raises ValueError when retention
+        dropped that history on any shard."""
+        return [s.wal.read_range(t0, t1) for s in self.shards]
+
     # ------------------------------------------------------------------ #
     # retention
     # ------------------------------------------------------------------ #
@@ -300,13 +346,24 @@ class ShardedDurableStore:
 # --------------------------------------------------------------------------- #
 
 
+def live_count(state: MemoryState) -> int:
+    """Total live rows of a MemoryState in either layout (flat scalar
+    ``count`` or sharded ``[n_shards]`` counts) — the planner fact the
+    serve engine feeds ``query.plan_query`` regardless of mode."""
+    return int(np.asarray(state.count).sum())
+
+
 def bulk_apply_sharded(state: MemoryState, log: CommandLog, n_shards: int,
-                       *, ef_construction: int = 32) -> MemoryState:
+                       *, ef_construction: int = 32,
+                       routed: Optional[CommandLog] = None) -> MemoryState:
     """Route a global batch and bulk-apply each shard's share to its slice
     of a sharded-layout state — the in-memory reference for what a
     ``ShardedDurableStore`` ingest makes durable: applying the same batches
-    here and recovering the store yield hash-identical merged states."""
-    routed = distributed.route_commands(log, n_shards)
+    here and recovering the store yield hash-identical merged states.
+    Callers that already routed the batch (the serve engine routes once for
+    audit + apply + append) pass ``routed`` to skip re-routing."""
+    if routed is None:
+        routed = distributed.route_commands(log, n_shards)
     parts = []
     for s in range(n_shards):
         local = distributed.shard_slice(state, s, n_shards)
@@ -338,3 +395,29 @@ def exact_search_sharded(state: MemoryState, n_shards: int,
     flat_scores = jnp.concatenate(score_parts, axis=-1)
     s_out, i_out = search.merge_candidates(flat_scores, flat_ids, k)
     return i_out, s_out
+
+
+def hnsw_search_sharded(state: MemoryState, n_shards: int,
+                        queries_raw: jax.Array, k: int, *, ef: int = 64
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """ANN over a host-side sharded-layout state: each shard runs the
+    vmapped deterministic beam search over its own graph, candidates
+    combine with the one order-invariant (score, id) merge — the mesh-free
+    twin of ``distributed.distributed_hnsw_search``. Deterministic for any
+    shard count; bit-identical to a flat graph's answer whenever every
+    beam is exhaustive over its slice (``ef`` >= per-shard live count),
+    which is the regime the conformance suite pins (DESIGN.md §7).
+    Returns (ids [nq, k], dists [nq, k])."""
+    from repro.core import query as query_lib  # lazy: query imports us lazily
+
+    ids_parts, dist_parts = [], []
+    for s in range(n_shards):
+        local = distributed.shard_slice(state, s, n_shards)
+        ids, dists, _ = query_lib.batched_hnsw_search(local, queries_raw, k,
+                                                      ef=ef)
+        ids_parts.append(ids)
+        dist_parts.append(dists)
+    flat_ids = jnp.concatenate(ids_parts, axis=-1)
+    flat_d = jnp.concatenate(dist_parts, axis=-1)
+    d_out, i_out = search.merge_candidates(flat_d, flat_ids, k)
+    return i_out, d_out

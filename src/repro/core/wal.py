@@ -47,6 +47,7 @@ import heapq
 import os
 import pathlib
 import struct
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -91,11 +92,16 @@ class GroupCommitPolicy:
 
     ``max_batch``: flush once this many commands are pending (the batched-
     fsync knob — one fsync then covers the whole group). ``max_delay_s``:
-    flush when the oldest pending command has waited this long; the deadline
-    is checked at ``submit()``/``flush()`` time (no timer thread), so pair
-    it with a sync-on-read barrier for a hard visibility bound."""
+    flush when the oldest pending command has waited this long. By default
+    the deadline is checked at ``submit()``/``flush()`` time only (no timer
+    thread), so pair it with a sync-on-read barrier for a hard visibility
+    bound. With ``timer_flush=True`` the writer runs a daemon thread that
+    flushes the pending group when the oldest command's deadline passes —
+    ``max_delay_s`` then holds as a wall-clock durability bound even when
+    no read or submit ever arrives (DESIGN.md §7)."""
     max_batch: int = 64
     max_delay_s: float = 0.010
+    timer_flush: bool = False
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -729,30 +735,51 @@ class GroupCommitWriter:
     cursor ``t`` (``WriteAheadLog``, ``durability.DurableStore``,
     ``shard_wal.ShardedDurableStore``). ``submit`` buffers a log and flushes
     when the policy's batch or delay bound is hit; ``flush`` forces the
-    pending group durable. Deadlines are only observed at ``submit``/
-    ``flush`` calls (no timer thread): a serving layer gets a hard bound by
-    calling ``flush()`` before any read that could observe pending commands
-    (the sync-on-read barrier, serve/engine.py).
+    pending group durable. By default deadlines are only observed at
+    ``submit``/``flush`` calls (no timer thread): a serving layer gets a
+    hard bound by calling ``flush()`` before any read that could observe
+    pending commands (the sync-on-read barrier, serve/engine.py). With
+    ``policy.timer_flush`` a daemon thread watches the oldest pending
+    command's deadline and flushes when it passes, so ``max_delay_s``
+    holds as a wall-clock bound with no read barrier required; submits,
+    foreground flushes and timer flushes serialize on one lock, so the
+    commit order is exactly the submit order either way.
 
     Crash contract: commands in a flushed group are durable (fsynced)
     before ``flush`` returns; commands still pending are not — they were
     never acked. A crash inside a flush leaves the longest valid record
     prefix of the group (torn-group truncation, wal.py module docs)."""
 
-    def __init__(self, sink, policy: GroupCommitPolicy = GroupCommitPolicy()):
+    def __init__(self, sink, policy: GroupCommitPolicy = GroupCommitPolicy(),
+                 *, pre_flush=None):
         self.sink = sink
         self.policy = policy
+        # pre_flush runs (under the writer lock) immediately before the sink
+        # commit of every flush — foreground, policy-driven or timer-driven.
+        # The serve engine syncs its doc side table here, so cache durability
+        # can never lag command durability whichever path triggered the fsync
+        self.pre_flush = pre_flush
         self._pending: List[CommandLog] = []
+        self._routed: List[Optional[CommandLog]] = []  # pre-routed shares
         self._advance: List[int] = []  # cursor advance each log will cause
         self._pending_n = 0
         self._oldest: Optional[float] = None
         self.groups = 0        # flushes that wrote something
         self.submitted = 0     # commands ever submitted
+        self.timer_flushes = 0  # flushes the deadline thread initiated
+        self._cv = threading.Condition(threading.RLock())
+        self._closed = False
+        self._timer: Optional[threading.Thread] = None
+        if policy.timer_flush:
+            self._timer = threading.Thread(target=self._timer_loop,
+                                           daemon=True)
+            self._timer.start()
 
     @property
     def pending(self) -> int:
         """Commands buffered but not yet durable."""
-        return self._pending_n
+        with self._cv:
+            return self._pending_n
 
     @property
     def target_t(self) -> int:
@@ -760,30 +787,42 @@ class GroupCommitWriter:
         Exact for every sink: sharded sinks advance by each batch's padded
         common length, not its raw command count, so the writer asks the
         sink (``planned_advance``) when it knows better than ``len``."""
-        return self.sink.t + sum(self._advance)
+        with self._cv:
+            return self.sink.t + sum(self._advance)
 
     def _sink_advance(self, log: CommandLog) -> int:
         fn = getattr(self.sink, "planned_advance", None)
         return fn(log) if fn is not None else len(log)
 
-    def submit(self, log: CommandLog) -> int:
+    def submit(self, log: CommandLog, *,
+               routed: Optional[CommandLog] = None) -> int:
         """Buffer a log for the next group commit; returns ``target_t``.
         The commands are NOT durable until the group flushes — the caller
         must not ack them upstream before ``flush()`` (or a policy-driven
-        flush) covers their offsets."""
-        if len(log):
-            self._pending.append(log)
-            self._advance.append(self._sink_advance(log))
-            self._pending_n += len(log)
-            self.submitted += len(log)
-            if self._oldest is None:
-                self._oldest = time.monotonic()
-        if (self._pending_n >= self.policy.max_batch
-                or (self._oldest is not None
-                    and time.monotonic() - self._oldest
-                    >= self.policy.max_delay_s)):
-            self.flush()
-        return self.target_t
+        flush) covers their offsets. A caller that already routed the log
+        for a sharded sink (the serve engine routes once for audit + apply)
+        passes the ``[n_shards, L]`` ``routed`` shares so neither the
+        advance prediction nor the sink re-routes."""
+        with self._cv:
+            if len(log):
+                self._pending.append(log)
+                self._routed.append(routed)
+                self._advance.append(
+                    # a routed batch's padded common share length IS its
+                    # global-cursor advance — no second shard_of_id pass
+                    int(routed.opcode.shape[1]) if routed is not None
+                    else self._sink_advance(log))
+                self._pending_n += len(log)
+                self.submitted += len(log)
+                if self._oldest is None:
+                    self._oldest = time.monotonic()
+                    self._cv.notify_all()  # the timer re-arms its deadline
+            if (self._pending_n >= self.policy.max_batch
+                    or (self._oldest is not None
+                        and time.monotonic() - self._oldest
+                        >= self.policy.max_delay_s)):
+                self._flush_locked()
+            return self.sink.t + sum(self._advance)
 
     def flush(self) -> int:
         """Make every pending command durable (one group commit); returns
@@ -791,39 +830,111 @@ class GroupCommitWriter:
         sink already made durable (it fsyncs per segment) is dropped from
         the buffer and the rest stays retryable — a retry can neither
         duplicate durable commands nor silently lose pending ones."""
+        with self._cv:
+            return self._flush_locked()
+
+    def _flush_locked(self) -> int:
+        if not self._pending:
+            # nothing buffered: make sure no stale deadline survives (a
+            # timer thread re-checking an expired _oldest must wait, not
+            # spin through no-op flushes)
+            self._oldest = None
         if self._pending:
+            if self.pre_flush is not None:
+                self.pre_flush()
             t0 = self.sink.t
+            append_routed = getattr(self.sink, "append_many_routed", None)
             try:
-                self.sink.append_many(self._pending)
+                if (append_routed is not None
+                        and all(r is not None for r in self._routed)):
+                    append_routed(self._routed)
+                else:
+                    self.sink.append_many(self._pending)
             except BaseException:
                 self._drop_landed(self.sink.t - t0)
                 raise
             self._pending = []
+            self._routed = []
             self._advance = []
             self._pending_n = 0
             self._oldest = None
             self.groups += 1
         return self.sink.t
 
+    def _timer_loop(self) -> None:
+        # Deadline watcher (policy.timer_flush): flush when the oldest
+        # pending command has waited max_delay_s. Runs under the same lock
+        # as submit/flush, so a timer flush can never interleave inside a
+        # submit or reorder the group relative to the submit order.
+        with self._cv:
+            while not self._closed:
+                if self._oldest is None:
+                    self._cv.wait()
+                    continue
+                delay = self._oldest + self.policy.max_delay_s \
+                    - time.monotonic()
+                if delay > 0:
+                    self._cv.wait(delay)
+                    continue
+                try:
+                    self.timer_flushes += 1
+                    self._flush_locked()
+                except BaseException:  # noqa: BLE001 — the group stays
+                    # pending (flush's retry contract); the next deadline
+                    # or foreground flush retries and surfaces the error
+                    self._cv.wait(self.policy.max_delay_s or 0.001)
+
+    def close(self) -> None:
+        """Flush any pending group and stop the deadline thread (no-op
+        without ``timer_flush``). The writer stays usable afterwards, just
+        without background flushes."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+            self._flush_locked()
+        if self._timer is not None:
+            self._timer.join(timeout=5)
+            self._timer = None
+
     def _drop_landed(self, landed: int) -> None:
-        """Remove the prefix a failed flush already made durable. The sink
-        cursor advances one-per-command on single-host sinks (NOP runs
-        count their length), so ``landed`` maps directly onto pending
-        commands; a sharded sink's global cursor never advances on a
-        partial flush (min over shards), so ``landed`` is 0 there and the
-        whole group stays queued for retry after ``recover()``."""
+        """Remove what a failed flush already made durable, in the SINK'S
+        cursor units. Single-host sinks advance one-per-command (NOP runs
+        count their length), so ``landed`` maps onto raw pending commands
+        and a mid-log remainder is sliced off for retry. Sinks with
+        ``planned_advance`` (sharded) advance in *padded batch* units:
+        whole batches whose advance landed are popped, and a batch the
+        failure cut mid-way is popped too — its durable prefix is already
+        on the shards (and the store refuses further appends until
+        ``recover()`` reconciles), so re-queueing any part of it could
+        only duplicate durable commands. Never-acked work may be dropped;
+        durable work must never repeat."""
+        batch_units = getattr(self.sink, "planned_advance", None) is not None
         while landed > 0 and self._pending:
             log = self._pending[0]
-            if len(log) <= landed:
+            if batch_units:
+                adv = self._advance[0]
+                self._pending_n -= len(log)
+                self._pending.pop(0)
+                self._routed.pop(0)
+                self._advance.pop(0)
+                landed = landed - adv if landed >= adv else 0
+            elif len(log) <= landed:
                 landed -= len(log)
                 self._pending_n -= len(log)
                 self._pending.pop(0)
+                self._routed.pop(0)
                 self._advance.pop(0)
             else:
                 self._pending[0] = log.slice(landed, len(log))
+                self._routed[0] = None  # a sliced log needs re-routing
                 self._advance[0] = self._sink_advance(self._pending[0])
                 self._pending_n -= landed
                 landed = 0
+        if not self._pending:
+            # nothing left to flush: clear the deadline too, or a timer
+            # thread would see an expired _oldest with an empty buffer and
+            # spin on no-op flushes forever
+            self._oldest = None
 
 
 # --------------------------------------------------------------------------- #

@@ -63,7 +63,7 @@ def main() -> None:
           f"({args.requests * args.max_new / dt:.1f} tok/s)")
 
     replay_hash = engine.replay_log_fresh()
-    live_hash = engine.memory_hash()
+    live_hash = engine.state_hash()
     assert replay_hash == live_hash, "replay diverged!"
     print(f"audit: replay(S0, log) hash {replay_hash:#x} == live state ✓")
 

@@ -18,10 +18,30 @@ Request lifecycle:
 Everything after the boundary is bit-deterministic: the same request log
 replayed on any host produces the same memory hash AND the same retrieval
 sets, which is the property the paper's §8.1 snapshot-transfer test checks.
+
+Two serving modes share this one class (DESIGN.md §7):
+
+* ``ServeConfig(shards=1)`` — the single-host engine: flat MemoryState,
+  ``DurableStore`` durability, planner-routed batched reads.
+* ``ServeConfig(shards=N)`` — the sharded engine: shard-major sharded-layout
+  MemoryState (mesh-free, ``distributed.init_sharded_host``), ingest routed
+  and NOP-padded into lockstep per-shard application
+  (``shard_wal.bulk_apply_sharded``), durability through a
+  ``ShardedDurableStore`` (per-shard WALs + snapshots under one global
+  cursor), reads fanned out per shard and merged with the one
+  order-invariant (score, id) combine (``query.sharded_host_query``).
+
+The cross-mode conformance contract (tests/test_conformance.py): both modes
+fed the same documents allocate the same ids, append the same command log,
+and report one ``memory_hash()`` (the layout-invariant live-content hash)
+and one ``retrieval_hash()`` — including after kill + ``recover()``.
+``state_hash()`` stays the within-layout ``hash_pytree`` artifact that the
+durable stores' snapshots and merged records verify.
 """
 from __future__ import annotations
 
 import dataclasses
+import pathlib
 import threading
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -29,10 +49,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import boundary, commands, machine, query, snapshot
+from repro.core import boundary, commands, distributed, machine, query, \
+    shard_wal, snapshot
 from repro.core import wal as wal_lib
 from repro.core.contracts import DEFAULT_CONTRACT, PrecisionContract
-from repro.core.durability import DurableStore
+from repro.core.durability import DurableStore, SideTable
+from repro.core.shard_wal import ShardedDurableStore
 from repro.core.state import MemoryState, init_state
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
@@ -46,6 +68,12 @@ class ServeConfig:
     s_cache: int = 512
     contract: PrecisionContract = DEFAULT_CONTRACT
     context_tokens: int = 32     # tokens of each retrieved doc to prepend
+    # serving topology (DESIGN.md §7): shards=1 is the single-host engine;
+    # shards=N runs the whole path — ingest, durability, retrieval — on a
+    # shard-major sharded-layout state with per-shard WALs. ``capacity`` is
+    # the TOTAL arena (split evenly across shards; a single shard filling up
+    # rejects its inserts exactly like a full flat arena would).
+    shards: int = 1
     # read-path planning (DESIGN.md §4): the planner picks exact-scan vs
     # HNSW per request from static facts; "auto" applies the planner rules,
     # "exact"/"hnsw" force a route
@@ -63,7 +91,8 @@ class ServeConfig:
     # high-QPS ingest (DESIGN.md §6): with a group-commit policy, ingested
     # batches buffer in a GroupCommitWriter and fsync once per group instead
     # of once per append; the read path flushes pending commands first (the
-    # sync-on-read barrier), so retrieval never observes un-durable state.
+    # sync-on-read barrier), so retrieval never observes un-durable state,
+    # and policy.timer_flush additionally bounds un-durability by wall clock.
     # A compaction policy schedules dead-ratio-driven WAL compaction.
     group_commit: Optional[wal_lib.GroupCommitPolicy] = None
     compaction: Optional[wal_lib.CompactionPolicy] = None
@@ -74,25 +103,61 @@ class MemoryAugmentedEngine:
         self.cfg = cfg
         self.params = params
         self.sc = serve_cfg
-        self.memory: MemoryState = init_state(
-            serve_cfg.capacity, cfg.d_model, contract=serve_cfg.contract
-        )
+        n = serve_cfg.shards
+        if n < 1:
+            raise ValueError(f"shards must be >= 1, got {n}")
+        if serve_cfg.capacity % n:
+            raise ValueError(
+                f"capacity {serve_cfg.capacity} must divide evenly across "
+                f"{n} shards")
+        self.n_shards = n
+        if n == 1:
+            self.memory: MemoryState = init_state(
+                serve_cfg.capacity, cfg.d_model, contract=serve_cfg.contract)
+        else:
+            self.memory = distributed.init_sharded_host(
+                n, serve_cfg.capacity // n, cfg.d_model,
+                contract=serve_cfg.contract)
+        # the audit trail: the global command log, plus — in sharded mode —
+        # its routed per-shard twin (what the per-shard WALs hold). After a
+        # sharded recover() only the per-shard logs are reconstructible
+        # (the global interleaving across shards is not durable by design).
         self.log = commands.empty_log(cfg.d_model, serve_cfg.contract)
+        self._shard_logs: List[commands.CommandLog] = [
+            commands.empty_log(cfg.d_model, serve_cfg.contract)
+            for _ in range(n)]
         self.docs: Dict[int, np.ndarray] = {}   # id -> token prefix
         self._next_id = 0
         self.last_plan: Optional[query.QueryPlan] = None
 
-        self.durable: Optional[DurableStore] = None
+        self.durable = None  # DurableStore | ShardedDurableStore | None
         self._group: Optional[wal_lib.GroupCommitWriter] = None
+        self._doc_table: Optional[SideTable] = None
         self._ckpt_thread: Optional[threading.Thread] = None
         self._ckpt_error: Optional[BaseException] = None
         self._last_ckpt_t = 0
         if serve_cfg.durable_dir is not None:
-            self.durable = DurableStore(serve_cfg.durable_dir, self.memory,
-                                        compaction=serve_cfg.compaction)
+            if n == 1:
+                self.durable = DurableStore(
+                    serve_cfg.durable_dir, self.memory,
+                    compaction=serve_cfg.compaction)
+            else:
+                self.durable = ShardedDurableStore(
+                    serve_cfg.durable_dir, self.memory, n_shards=n,
+                    compaction=serve_cfg.compaction)
+            # the doc cache's durable side table (DESIGN.md §7): token
+            # prefixes ride beside the WAL so recover() starts warm; the
+            # substrate never depends on it (it is a cache, not state).
+            # Its records are written — and under group commit, synced via
+            # the writer's pre_flush hook — BEFORE the commands they
+            # describe become durable, so a live id can never outrun its
+            # tokens (the rollback + id-reuse hazard)
+            self._doc_table = SideTable(
+                pathlib.Path(serve_cfg.durable_dir) / "docs.sdt")
             if serve_cfg.group_commit is not None:
                 self._group = wal_lib.GroupCommitWriter(
-                    self.durable, serve_cfg.group_commit)
+                    self.durable, serve_cfg.group_commit,
+                    pre_flush=self._doc_table.sync)
         elif (serve_cfg.group_commit is not None
               or serve_cfg.compaction is not None):
             # refuse the inconsistent config loudly: an operator who set a
@@ -122,6 +187,13 @@ class MemoryAugmentedEngine:
                                 None, angles)
         return jnp.mean(h.astype(jnp.float32), axis=1)  # [B, D]
 
+    def _cursor(self) -> int:
+        """The engine's applied-command cursor: flat ``version``, or the
+        common per-shard padded cursor in sharded mode (always equal at
+        the batch boundaries the engine operates at)."""
+        v = np.asarray(self.memory.version).reshape(-1)
+        return int(v[0])
+
     # ------------------------------------------------------------------ #
     # WRITE path
     # ------------------------------------------------------------------ #
@@ -130,9 +202,17 @@ class MemoryAugmentedEngine:
         """token_batches [N, L] int32 → ids. Batched through the boundary.
 
         The WRITE path goes through ``machine.bulk_apply`` — hash-identical
-        to scanning the log one command at a time (the audit check in
-        ``replay_log_fresh`` re-derives the same state via ``replay``), but
-        ingesting the whole batch in vectorized form."""
+        to scanning the log one command at a time — in flat mode, and
+        through ``shard_wal.bulk_apply_sharded`` (route once, apply each
+        shard's share to its slice) in sharded mode. Id allocation is
+        sequential in BOTH modes: the same documents produce the same
+        command log everywhere, which is what makes the two modes
+        conformance-comparable (DESIGN.md §7)."""
+        if len(token_batches) == 0:
+            # routing pads an empty batch to one NOP per shard, which would
+            # advance the sharded memory cursor while both durable paths
+            # (correctly) skip empty logs — refuse the desync up front
+            return []
         emb = self._embed_fn(self.params, jnp.asarray(token_batches))
         raw = boundary.normalize_embedding(emb, self.sc.contract)
         ids = np.arange(self._next_id, self._next_id + len(token_batches),
@@ -140,20 +220,45 @@ class MemoryAugmentedEngine:
         self._next_id += len(token_batches)
         batch_log = commands.insert_batch(jnp.asarray(ids), raw,
                                           self.sc.contract)
+        routed = None if self.n_shards == 1 else \
+            distributed.route_commands(batch_log, self.n_shards)
+
+        # doc cache first: its side-table records must be durable no later
+        # than the commands they describe, or a crash after a rollback-
+        # then-reinsert could recover a live id with stale tokens. Under
+        # group commit the writer's pre_flush hook syncs the table inside
+        # every flush (foreground, policy or timer), before the sink commit
+        for i, tid in enumerate(ids):
+            doc = np.asarray(token_batches[i])
+            self.docs[int(tid)] = doc
+            if self._doc_table is not None:
+                self._doc_table.put(
+                    int(tid), doc.astype("<i4", copy=False).tobytes())
+
         if self._group is not None:
             # group commit: the batch buffers toward one fsync per group —
             # it is NOT yet durable, so it also must not be readable; the
             # read path's flush() barrier restores WAL-first ordering at
             # the moment of first observation (DESIGN.md §6)
-            self._group.submit(batch_log)
+            self._group.submit(batch_log, routed=routed)
         elif self.durable is not None:
             # WAL-first: the commands are durable before their effects are
             # visible, so a crash can lose at most un-acked work
-            self.durable.append(batch_log)
+            if self._doc_table is not None:
+                self._doc_table.sync()
+            if self.n_shards == 1:
+                self.durable.append(batch_log)
+            else:
+                self.durable.append(batch_log, routed=routed)
         self.log = self.log.concat(batch_log)
-        self.memory = machine.bulk_apply(self.memory, batch_log)
-        for i, tid in enumerate(ids):
-            self.docs[int(tid)] = np.asarray(token_batches[i])
+        if self.n_shards == 1:
+            self.memory = machine.bulk_apply(self.memory, batch_log)
+        else:
+            for s in range(self.n_shards):
+                self._shard_logs[s] = self._shard_logs[s].concat(
+                    jax.tree.map(lambda a, s=s: a[s], routed))
+            self.memory = shard_wal.bulk_apply_sharded(
+                self.memory, batch_log, self.n_shards, routed=routed)
         self._maybe_checkpoint()
         return [int(i) for i in ids]
 
@@ -165,20 +270,27 @@ class MemoryAugmentedEngine:
                  ) -> Tuple[np.ndarray, np.ndarray]:
         """[B, L] prompts → (ids [B, k], scores [B, k]) — deterministic.
 
-        The whole batch runs under one jit on the route the query planner
-        picks from static facts (live count, k, ef) — bit-identical to the
-        per-query reference loop either way (DESIGN.md §4). The decision is
-        recorded on ``self.last_plan`` for audit."""
+        The whole batch runs on the route the query planner picks from
+        static facts (live count, k, ef). Flat mode executes the plan under
+        one jit; sharded mode fans it out per shard and merges with the
+        order-invariant integer combine — bit-identical to the flat answer
+        for the exact route, and for HNSW whenever the beam covers each
+        shard (DESIGN.md §7). The decision is recorded on ``self.last_plan``
+        for audit."""
         k = k or self.sc.retrieve_k
         self.flush()  # sync-on-read: nothing un-durable is observable
         emb = self._embed_fn(self.params, jnp.asarray(prompt_tokens))
         q_raw = boundary.admit_query(emb, self.sc.contract)
         plan = query.plan_query(
-            int(self.memory.count), k, self.sc.ef,
+            shard_wal.live_count(self.memory), k, self.sc.ef,
             use_kernel=self.sc.use_kernel,
             exact_threshold=self.sc.exact_threshold, route=self.sc.route)
         self.last_plan = plan
-        ids, scores = query.execute_plan(self.memory, q_raw, k, plan)
+        if self.n_shards == 1:
+            ids, scores = query.execute_plan(self.memory, q_raw, k, plan)
+        else:
+            ids, scores = query.sharded_host_query(
+                self.memory, self.n_shards, q_raw, k, plan)
         return np.asarray(ids), np.asarray(scores)
 
     def retrieval_hash(self, prompt_tokens: np.ndarray,
@@ -197,7 +309,7 @@ class MemoryAugmentedEngine:
         """Greedy decode a batch of prompts, optionally memory-augmented.
         Returns [B, max_new_tokens] int32."""
         B, L = prompt_tokens.shape
-        if augment and self.memory.count > 0:
+        if augment and shard_wal.live_count(self.memory) > 0:
             ids, _ = self.retrieve(prompt_tokens)
             ctx = np.zeros((B, self.sc.context_tokens), np.int32)
             for b in range(B):
@@ -222,7 +334,7 @@ class MemoryAugmentedEngine:
         return out
 
     # ------------------------------------------------------------------ #
-    # durability: background checkpoints + crash recovery (DESIGN.md §5)
+    # durability: background checkpoints + crash recovery (DESIGN.md §5, §7)
     # ------------------------------------------------------------------ #
 
     def flush(self) -> int:
@@ -230,11 +342,26 @@ class MemoryAugmentedEngine:
         durable WAL cursor (== memory cursor afterwards). The read path
         calls this before serving — the sync-on-read barrier that keeps
         retrieval from ever observing un-durable commands — and it is the
-        ack point for upstream callers under group commit."""
+        ack point for upstream callers under group commit. The doc side
+        table syncs here too, so its durability never lags the barrier."""
+        if self._doc_table is not None:
+            self._doc_table.sync()
         if self._group is not None:
             return self._group.flush()
-        return self.durable.t if self.durable is not None else \
-            int(self.memory.version)
+        return self.durable.t if self.durable is not None else self._cursor()
+
+    def close(self) -> None:
+        """Flush pending ingest, join background work and release durable
+        resources: the group-commit writer (and its timer thread, if
+        ``timer_flush`` was set) and the doc side table's file handle.
+        Long-lived processes that construct engines repeatedly must close
+        them — daemon threads and fds do not collect themselves."""
+        self.flush()
+        self.wait_durable()
+        if self._group is not None:
+            self._group.close()
+        if self._doc_table is not None:
+            self._doc_table.close()
 
     def wait_durable(self) -> None:
         """Join any in-flight background checkpoint; re-raise its error —
@@ -247,28 +374,29 @@ class MemoryAugmentedEngine:
             raise RuntimeError("background checkpoint failed") from err
 
     def checkpoint(self) -> Dict[str, int]:
-        """Synchronously cut an incremental v2 snapshot at the current
-        cursor; returns the snapshot stats (dirty chunks written, etc.)."""
+        """Synchronously cut an incremental snapshot at the current cursor
+        (per-shard v2 snapshots + the merged whole-state-hash record in
+        sharded mode); returns the snapshot stats."""
         if self.durable is None:
             raise RuntimeError("no durable_dir configured")
         self.flush()  # a snapshot may only cover durable commands
         self.wait_durable()
         stats = self.durable.checkpoint(
             jax.tree.map(np.asarray, self.memory))
-        self._last_ckpt_t = int(self.memory.version)
+        self._last_ckpt_t = self._cursor()
         if self.sc.retain_snapshots > 0:
             stats.update(self.durable.retain(self.sc.retain_snapshots))
         return stats
 
     def _maybe_checkpoint(self) -> None:
         if (self.durable is None or self.sc.checkpoint_every <= 0
-                or int(self.memory.version) - self._last_ckpt_t
+                or self._cursor() - self._last_ckpt_t
                 < self.sc.checkpoint_every):
             return
         self.flush()  # a snapshot may only cover durable commands
         self.wait_durable()  # one in flight at a time; surfaces past errors
         host_state = jax.tree.map(np.asarray, self.memory)
-        self._last_ckpt_t = int(host_state.version)
+        self._last_ckpt_t = self._cursor()
 
         def work():
             try:
@@ -281,44 +409,113 @@ class MemoryAugmentedEngine:
         self._ckpt_thread = threading.Thread(target=work, daemon=True)
         self._ckpt_thread.start()
 
+    def _reload_audit_logs(self, t: int) -> None:
+        """Rebuild the in-memory audit trail from the durable WAL(s) after
+        recover/rollback, if retention kept the full history."""
+        empty = commands.empty_log(self.cfg.d_model, self.sc.contract)
+        if self.n_shards == 1:
+            try:
+                self.log = self.durable.wal.read_range(0, t)
+            except ValueError:
+                self.log = empty
+        else:
+            # the global interleaving is not durable (per-shard WALs only);
+            # the per-shard logs are the reconstructible audit trail
+            self.log = empty
+            try:
+                self._shard_logs = self.durable.shard_logs(0, t)
+            except ValueError:
+                self._shard_logs = [empty for _ in range(self.n_shards)]
+
+    def _reload_serving_caches(self) -> None:
+        """Refresh next-id allocation and the doc cache from durable
+        artifacts: ids from the live rows of the recovered state (works in
+        both layouts), token prefixes from the side table — the recovered
+        engine generates with warm retrieved context immediately instead
+        of refilling lazily (DESIGN.md §7)."""
+        ids = np.asarray(self.memory.ids)
+        live = ids[np.asarray(self.memory.valid)]
+        self._next_id = int(live.max()) + 1 if live.size else 0
+        if self._doc_table is not None:
+            self.docs = {
+                int(key): np.frombuffer(payload, "<i4").astype(np.int32)
+                for key, payload in self._doc_table.entries.items()}
+
     def recover(self) -> Tuple[int, int]:
         """Rebuild memory from the durable store after a crash: nearest
-        snapshot + WAL tail, bit-identical to replaying the durable prefix.
-        Returns (t, hash). Retrieval serves immediately; ``docs`` token
-        prefixes are serving-cache only and refill as documents re-insert
-        (the deterministic substrate never depended on them)."""
+        snapshot(s) + WAL tail(s), bit-identical to replaying the durable
+        prefix; in sharded mode the shards reconcile to one global cursor
+        first (min over shards, ahead shards roll back — DESIGN.md §6).
+        Returns (t, state hash). Retrieval serves immediately, and the doc
+        cache reloads from its durable side table so generation is warm."""
         if self.durable is None:
             raise RuntimeError("no durable_dir configured")
         self.flush()  # a live engine recovering: don't drop acked-to-us work
         self.wait_durable()
         state, h, t = self.durable.recover()
         self.memory = state
-        self._last_ckpt_t = int(state.version)
-        try:  # audit trail, if retention kept the full history
-            self.log = self.durable.wal.read_range(0, t)
-        except ValueError:
-            self.log = commands.empty_log(self.cfg.d_model, self.sc.contract)
-        ids = np.asarray(state.ids)
-        live = ids[np.asarray(state.valid)]
-        self._next_id = int(live.max()) + 1 if live.size else 0
+        self._last_ckpt_t = t
+        self._reload_audit_logs(t)
+        self._reload_serving_caches()
+        return t, h
+
+    def rollback_to(self, t: int) -> Tuple[int, int]:
+        """Roll the durable history AND the serving state back to logical
+        time ``t``: snapshots/WAL records above ``t`` are dropped (on every
+        shard in sharded mode, with merged records pruned too) and memory
+        is restored at ``t``. Returns (t, state hash)."""
+        if self.durable is None:
+            raise RuntimeError("no durable_dir configured")
+        self.flush()
+        self.wait_durable()
+        self.durable.rollback_to(t)
+        state, h = self.durable.restore_at(t)
+        self.memory = state
+        self._last_ckpt_t = t
+        self._reload_audit_logs(t)
+        self._reload_serving_caches()
         return t, h
 
     # ------------------------------------------------------------------ #
-    # audit / replay (paper §8.1, §9)
+    # audit / replay (paper §8.1, §9; DESIGN.md §7)
     # ------------------------------------------------------------------ #
 
     def memory_hash(self) -> int:
+        """The layout-invariant live-content hash (DESIGN.md §7): flat and
+        sharded engines fed the same command log report the same value —
+        the cross-mode conformance artifact."""
+        from repro.core import hashing
+        return hashing.content_hash(self.memory)
+
+    def state_hash(self) -> int:
+        """``hash_pytree`` of the native-layout state — the within-layout
+        artifact snapshots, merged records and replay audits verify."""
         from repro.core import hashing
         return hashing.hash_pytree(self.memory)
 
     def snapshot_bytes(self) -> bytes:
+        if self.n_shards != 1:
+            raise ValueError(
+                "sharded engines snapshot through checkpoint() (per-shard "
+                "v2 snapshots + merged hash record), not one flat blob")
         return snapshot.snapshot_bytes(self.memory)
 
     def replay_log_fresh(self) -> int:
-        """Re-apply the full command log to S_0; returns the hash — must
-        equal memory_hash() (the paper's replayability guarantee)."""
+        """Re-apply the audit trail to S_0 with the one-command-at-a-time
+        reference ``machine.replay``; returns the native-layout hash — must
+        equal ``state_hash()`` (the paper's replayability guarantee). In
+        sharded mode each shard's (routed, padded) log replays on its
+        genesis slice and the merge is hashed — the sharded form of the
+        same audit."""
         from repro.core import hashing
-        fresh = init_state(self.sc.capacity, self.cfg.d_model,
-                           contract=self.sc.contract)
-        fresh = machine.replay(fresh, self.log)
-        return hashing.hash_pytree(fresh)
+        if self.n_shards == 1:
+            fresh = init_state(self.sc.capacity, self.cfg.d_model,
+                               contract=self.sc.contract)
+            return hashing.hash_pytree(machine.replay(fresh, self.log))
+        genesis = distributed.init_sharded_host(
+            self.n_shards, self.sc.capacity // self.n_shards,
+            self.cfg.d_model, contract=self.sc.contract)
+        parts = [machine.replay(
+            distributed.shard_slice(genesis, s, self.n_shards),
+            self._shard_logs[s]) for s in range(self.n_shards)]
+        return hashing.hash_pytree(distributed.merge_shards(parts))

@@ -1,0 +1,385 @@
+"""Cross-layer determinism conformance suite (DESIGN.md §7).
+
+One randomized six-opcode command log; every stack in the system digests
+it; the suite demands one answer:
+
+* **within a layout — one ``hash_pytree``.** Host ``machine.replay``,
+  ``machine.bulk_apply``, a group-committed ``DurableStore`` +
+  ``restore_at``, and (per shard count) in-memory
+  ``shard_wal.bulk_apply_sharded`` vs a group-committed
+  ``ShardedDurableStore`` restore must be bit-identical states.
+* **across layouts — one ``hashing.content_hash``.** The flat state and
+  the merged sharded-layout states at 1/2/4 shards hold the same live
+  (id, vector, meta) content, whatever slots, graphs and padding each
+  layout chose — including after a mid-log kill + ``recover()`` against
+  the flat replay of the same durable prefix.
+* **across everything — one ``query.retrieval_hash``.** Exact fan-out at
+  every shard count equals the single-kernel scan on the full six-opcode
+  logs; the HNSW route joins on insert-only logs in the beam-exhaustive
+  regime (ef >= live count AND every live node graph-reachable — deletes
+  may tombstone an entry point and legally strand a beam, in any layout;
+  DESIGN.md §7 pins the regime).
+* **both engine modes.** ``ServeConfig(shards=1)`` and
+  ``ServeConfig(shards=N)`` fed the same documents report one
+  ``memory_hash()`` and one ``retrieval_hash()`` on both routes —
+  including after a crash + ``recover()``, and including a SIGKILLed
+  subprocess mid-grouped-ingest (the kill-at-random-point property test).
+"""
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import textwrap
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _pbt import given, settings
+from _pbt import strategies as st
+
+import repro  # noqa: F401
+from repro.configs import get_reduced_config
+from repro.core import (boundary, commands, distributed, durability, hashing,
+                        machine, query, search, shard_wal, wal)
+from repro.core.state import init_state
+from repro.models import transformer as tf
+from repro.serve.engine import MemoryAugmentedEngine, ServeConfig
+from test_bulk_apply import _random_log
+
+D = 8
+CAP_PER_SHARD = 16   # >= ID_SPACE: no per-shard arena rejection anywhere
+ID_SPACE = 12
+SHARD_COUNTS = (1, 2, 4)
+K = 5
+EF = 64              # >= any live count here: every HNSW beam is exhaustive
+
+ARCH = "mamba2_130m"
+
+
+def _batches(log, step):
+    return [log.slice(i, min(i + step, len(log)))
+            for i in range(0, len(log), step)]
+
+
+def _queries(seed, b=4):
+    rng = np.random.default_rng(seed)
+    return boundary.admit_query(rng.normal(size=(b, D)).astype(np.float32))
+
+
+def _grouped_ingest(store, batches):
+    gw = wal.GroupCommitWriter(store, wal.GroupCommitPolicy(
+        max_batch=1 << 20, max_delay_s=3600))
+    for b in batches:
+        gw.submit(b)
+    gw.flush()
+
+
+# --------------------------------------------------------------------------- #
+# the conformance matrix on randomized logs
+# --------------------------------------------------------------------------- #
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_one_answer_across_every_stack(seed):
+    log = _random_log(seed, 36, id_space=ID_SPACE)
+    batches = _batches(log, 9)
+    q = _queries(seed)
+
+    # -- flat stacks: one hash_pytree ----------------------------------- #
+    genesis = init_state(2 * CAP_PER_SHARD, D)
+    s_flat = machine.replay(genesis, log)
+    h_flat = hashing.hash_pytree(s_flat)
+    assert hashing.hash_pytree(machine.bulk_apply(genesis, log)) == h_flat, \
+        "bulk_apply diverged from replay"
+    with tempfile.TemporaryDirectory() as tmp:
+        store = durability.DurableStore(tmp, genesis)
+        _grouped_ingest(store, batches)
+        _, h_store = store.restore_at(store.t)
+        assert h_store == h_flat, "DurableStore.restore_at diverged"
+
+    ch = hashing.content_hash(s_flat)
+    ids_ref, s_ref = search.exact_search(s_flat, q, K)
+    rh = query.retrieval_hash(ids_ref, s_ref)
+
+    # the HNSW conformance regime (DESIGN.md §7) needs every live node
+    # graph-reachable: an insert-only twin log drives that route (a delete
+    # may tombstone an entry point and legally strand a beam in any layout)
+    rng = np.random.default_rng(seed)
+    ins_vecs = boundary.normalize_embedding(
+        rng.normal(size=(18, D)).astype(np.float32))
+    ins_ids = rng.permutation(ID_SPACE * 3)[:18].astype(np.int64)
+    ins_log = commands.insert_batch(jnp.asarray(ins_ids), ins_vecs)
+    s_ins = machine.replay(init_state(4 * CAP_PER_SHARD, D), ins_log)
+    ids_ie, s_ie = search.exact_search(s_ins, q, K)
+    rh_ins = query.retrieval_hash(ids_ie, s_ie)
+    plan_h = query.plan_query(18, K, EF, route="hnsw")
+    ids_ih, s_ih = query.execute_plan(s_ins, q, K, plan_h)
+    assert query.retrieval_hash(ids_ih, s_ih) == rh_ins, "flat hnsw != exact"
+
+    # -- sharded stacks at 1/2/4 shards --------------------------------- #
+    for ns in SHARD_COUNTS:
+        sh_genesis = distributed.init_sharded_host(ns, CAP_PER_SHARD, D)
+        ref = sh_genesis
+        for b in batches:
+            ref = shard_wal.bulk_apply_sharded(ref, b, ns)
+        assert hashing.content_hash(ref) == ch, \
+            f"sharded live content diverged at n_shards={ns}"
+
+        with tempfile.TemporaryDirectory() as tmp:
+            store = shard_wal.ShardedDurableStore(tmp, sh_genesis,
+                                                  n_shards=ns)
+            _grouped_ingest(store, batches)
+            state, h = store.restore_at(store.t)
+            assert h == hashing.hash_pytree(ref), \
+                f"store restore != in-memory sharded apply (n_shards={ns})"
+            assert hashing.content_hash(state) == ch
+
+            i2, s2 = shard_wal.exact_search_sharded(state, ns, q, K)
+            assert query.retrieval_hash(i2, s2) == rh, \
+                f"sharded exact retrieval diverged (n_shards={ns})"
+
+            # cap 32 per shard: even all-on-one-shard routing cannot reject
+            sh_ins = shard_wal.bulk_apply_sharded(
+                distributed.init_sharded_host(ns, 32, D), ins_log, ns)
+            assert hashing.content_hash(sh_ins) == hashing.content_hash(s_ins)
+            i3, s3 = query.sharded_host_query(sh_ins, ns, q, K, plan_h)
+            assert query.retrieval_hash(i3, s3) == rh_ins, \
+                f"sharded hnsw retrieval diverged (n_shards={ns})"
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=4, deadline=None)
+def test_kill_mid_log_recovers_to_the_flat_prefix(seed):
+    """Mid-log kill: the acked batches are durable, a later batch lands on
+    only a prefix of shards plus torn garbage. recover() must reconcile to
+    the acked cursor and agree — content hash AND retrieval hash — with
+    the flat replay of exactly that command prefix."""
+    log = _random_log(seed + (1 << 32) // 2, 40, id_space=ID_SPACE)
+    batches = _batches(log, 10)
+    acked, partial = batches[:3], batches[3]
+    n_acked = 30
+    ns = 2
+    q = _queries(seed + 1)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        store = shard_wal.ShardedDurableStore(
+            tmp, distributed.init_sharded_host(ns, CAP_PER_SHARD, D),
+            n_shards=ns)
+        _grouped_ingest(store, acked)
+        t_acked = store.t
+        # the kill: shard 0 got its share of the next group, shard 1 got a
+        # torn record suffix nobody was ever acked for
+        routed = distributed.route_commands(partial, ns)
+        store.shards[0].append(jax.tree.map(lambda a: a[0], routed))
+        seg = sorted((store.shards[1].dir / "wal").glob("*.wal"))[-1]
+        with open(seg, "ab") as f:
+            f.write(b"\xbe\xeftorn mid-log\xde\xad")
+
+        reopened = shard_wal.ShardedDurableStore(tmp)
+        state, h, t = reopened.recover()
+        assert t == t_acked, "recovery must land on the acked prefix"
+
+        flat_ref = machine.replay(init_state(2 * CAP_PER_SHARD, D),
+                                  log.slice(0, n_acked))
+        assert hashing.content_hash(state) == hashing.content_hash(flat_ref)
+        i_r, s_r = shard_wal.exact_search_sharded(state, ns, q, K)
+        i_f, s_f = search.exact_search(flat_ref, q, K)
+        assert (query.retrieval_hash(i_r, s_r)
+                == query.retrieval_hash(i_f, s_f))
+
+
+# --------------------------------------------------------------------------- #
+# both engine modes: one memory_hash, one retrieval_hash — also after a kill
+# --------------------------------------------------------------------------- #
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_reduced_config(ARCH)
+    return cfg, tf.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def test_engine_modes_conform_including_kill_recover(model, tmp_path):
+    cfg, params = model
+    rng = np.random.default_rng(0)
+    docs = rng.integers(0, cfg.vocab_size, (14, 12), dtype=np.int32)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 8), dtype=np.int32)
+
+    def sc(shards, d):
+        return ServeConfig(
+            capacity=64, retrieve_k=3, max_new_tokens=4, s_cache=96,
+            context_tokens=8, shards=shards, durable_dir=str(d),
+            group_commit=wal.GroupCommitPolicy(max_batch=1 << 20,
+                                               max_delay_s=3600))
+
+    engines = {
+        1: MemoryAugmentedEngine(cfg, params, sc(1, tmp_path / "flat")),
+        2: MemoryAugmentedEngine(cfg, params, sc(2, tmp_path / "shard")),
+    }
+    for eng in engines.values():
+        eng.insert_documents(docs[:8])
+        eng.flush()                     # acked prefix
+        eng.insert_documents(docs[8:])  # pending — dies with the process
+
+    # live engines agree on both routes before the kill
+    for route in ("exact", "hnsw"):
+        hashes = set()
+        for eng in engines.values():
+            eng.sc.route = route
+            hashes.add(eng.retrieval_hash(prompts))
+        assert len(hashes) == 1, f"live engines diverged on route {route}"
+    # NOTE: the read barrier above flushed the second batch too — both
+    # stores are at the full log now; kill/recover below is exercised by
+    # fresh un-flushed engines
+    killed = {
+        1: MemoryAugmentedEngine(cfg, params, sc(1, tmp_path / "flat2")),
+        2: MemoryAugmentedEngine(cfg, params, sc(2, tmp_path / "shard2")),
+    }
+    for eng in killed.values():
+        eng.insert_documents(docs[:8])
+        eng.flush()
+        eng.insert_documents(docs[8:])  # never flushed, never acked
+
+    recovered = {
+        1: MemoryAugmentedEngine(cfg, params, sc(1, tmp_path / "flat2")),
+        2: MemoryAugmentedEngine(cfg, params, sc(2, tmp_path / "shard2")),
+    }
+    for eng in recovered.values():
+        eng.recover()
+    assert (recovered[1].memory_hash() == recovered[2].memory_hash()
+            == hashing.content_hash(
+                machine.replay(init_state(64, cfg.d_model),
+                               killed[1].log.slice(0, 8)))), \
+        "recovered engines must hold exactly the acked 8-doc prefix"
+    for route in ("exact", "hnsw"):
+        hashes = set()
+        for eng in recovered.values():
+            eng.sc.route = route
+            hashes.add(eng.retrieval_hash(prompts))
+        assert len(hashes) == 1, f"recovered engines diverged on {route}"
+    for eng in recovered.values():
+        assert eng.state_hash() == eng.replay_log_fresh()
+
+
+# --------------------------------------------------------------------------- #
+# kill-at-random-point: SIGKILL a subprocess mid-grouped-ingest
+# --------------------------------------------------------------------------- #
+
+_KILL_CHILD = textwrap.dedent("""
+    import sys
+    import numpy as np, jax
+    import repro
+    from repro.configs import get_reduced_config
+    from repro.core import wal
+    from repro.models import transformer as tf
+    from repro.serve.engine import MemoryAugmentedEngine, ServeConfig
+
+    durable_dir, seed = sys.argv[1], int(sys.argv[2])
+    cfg = get_reduced_config("mamba2_130m")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    eng = MemoryAugmentedEngine(cfg, params, ServeConfig(
+        capacity=64, retrieve_k=3, max_new_tokens=4, s_cache=96,
+        context_tokens=8, shards=2, durable_dir=durable_dir,
+        group_commit=wal.GroupCommitPolicy(max_batch=1 << 20,
+                                           max_delay_s=3600)))
+    rng = np.random.default_rng(seed)
+    docs = rng.integers(0, cfg.vocab_size, (24, 12), dtype=np.int32)
+    for i in range(0, 24, 4):
+        eng.insert_documents(docs[i:i + 4])
+        t = eng.flush()
+        print(f"ACKED {t}", flush=True)
+    print("DONE", flush=True)
+""")
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_sigkill_during_grouped_sharded_ingest(model, tmp_path, seed):
+    """SIGKILL the sharded serve engine at a random point of grouped
+    ingest. The recovered engine must (a) never have lost acked work,
+    (b) hold exactly the durable command prefix — state hash AND retrieval
+    hashes bit-identical to applying that same prefix in memory."""
+    cfg, params = model
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    ddir = str(tmp_path / "d")
+    proc = subprocess.Popen(
+        [sys.executable, "-c", _KILL_CHILD, ddir, str(seed)],
+        stdout=subprocess.PIPE, text=True, env=env)
+    rng = np.random.default_rng(1000 + seed)
+    kill_after = int(rng.integers(1, 6))
+    acked = []
+    try:
+        for line in proc.stdout:
+            if line.startswith("ACKED"):
+                acked.append(int(line.split()[1]))
+                if len(acked) >= kill_after:
+                    break
+            elif line.startswith("DONE"):
+                break
+        time.sleep(float(rng.uniform(0.0, 0.05)))
+    finally:
+        proc.send_signal(signal.SIGKILL)
+        proc.wait(timeout=60)
+    assert acked, "child never acked a batch"
+
+    sc = ServeConfig(
+        capacity=64, retrieve_k=3, max_new_tokens=4, s_cache=96,
+        context_tokens=8, shards=2, durable_dir=ddir,
+        group_commit=wal.GroupCommitPolicy(max_batch=1 << 20,
+                                           max_delay_s=3600))
+    eng = MemoryAugmentedEngine(cfg, params, sc)
+    t, _ = eng.recover()
+    assert t >= max(acked), "acked (flushed) ingest must never be lost"
+
+    # reference: the identical command prefix applied in memory — whole
+    # batches up to the recovered cursor, then each shard's share of the
+    # straddling batch cut at its durable record boundary
+    rng_d = np.random.default_rng(seed)
+    docs = rng_d.integers(0, cfg.vocab_size, (24, 12), dtype=np.int32)
+    scratch = MemoryAugmentedEngine(cfg, params, ServeConfig(
+        capacity=64, retrieve_k=3, max_new_tokens=4, s_cache=96,
+        context_tokens=8, shards=2))
+    state, cursor = scratch.memory, 0
+    for i in range(0, 24, 4):
+        emb = scratch._embed_fn(params, jnp.asarray(docs[i:i + 4]))
+        raw = boundary.normalize_embedding(emb, sc.contract)
+        blog = commands.insert_batch(
+            jnp.arange(i, i + 4, dtype=jnp.int64), raw, sc.contract)
+        routed = distributed.route_commands(blog, 2)
+        owners = np.asarray(distributed.shard_of_id(
+            jnp.asarray(np.asarray(blog.arg0)), 2))
+        adv = max(int(np.bincount(owners, minlength=2).max()), 1)
+        if cursor + adv <= t:
+            state = shard_wal.bulk_apply_sharded(state, blog, 2,
+                                                 routed=routed)
+            cursor += adv
+        else:
+            part = t - cursor
+            parts = []
+            for s in range(2):
+                local = distributed.shard_slice(state, s, 2)
+                local_log = jax.tree.map(
+                    lambda a, s=s: a[s], routed).slice(0, part)
+                parts.append(machine.bulk_apply(local, local_log))
+            state = distributed.merge_shards(parts)
+            cursor = t
+        if cursor == t:
+            break
+    assert cursor == t, f"recovered t={t} not reachable from the batches"
+    assert eng.state_hash() == hashing.hash_pytree(state), \
+        "recovered state != in-memory apply of the durable prefix"
+
+    prompts = np.random.default_rng(5).integers(
+        0, cfg.vocab_size, (2, 8), dtype=np.int32)
+    emb = scratch._embed_fn(params, jnp.asarray(prompts))
+    q_raw = boundary.admit_query(emb, sc.contract)
+    ids_ref, s_ref = shard_wal.exact_search_sharded(state, 2, q_raw, 3)
+    eng.sc.route = "exact"
+    assert (eng.retrieval_hash(prompts, 3)
+            == query.retrieval_hash(ids_ref, s_ref)), \
+        "recovered retrieval diverged from the uninterrupted reference"

@@ -662,3 +662,62 @@ def test_golden_cross_version_restore():
     for la, lb in zip(jax.tree_util.tree_leaves(s1),
                       jax.tree_util.tree_leaves(s2)):
         assert (np.asarray(la) == np.asarray(lb)).all()
+
+
+# --------------------------------------------------------------------------- #
+# SideTable: the durable serving-cache primitive (DESIGN.md §7)
+# --------------------------------------------------------------------------- #
+
+
+def test_side_table_roundtrip_later_wins_and_torn_tail(tmp_path):
+    from repro.core.durability import SideTable
+    path = tmp_path / "t.sdt"
+    t = SideTable(path)
+    t.put(1, b"one")
+    t.put(2, b"two")
+    t.put(1, b"uno")      # later record for a key wins
+    t.sync()
+    t.close()
+    back = SideTable(path)
+    assert back.entries == {1: b"uno", 2: b"two"}
+    back.close()
+    with open(path, "ab") as f:
+        f.write(b"\xde\xadtorn record prefix")   # crash mid-append
+    torn = SideTable(path)                        # truncates the torn tail
+    assert torn.entries == {1: b"uno", 2: b"two"}
+    torn.put(3, b"three")                         # and appends cleanly after
+    torn.close()
+    again = SideTable(path)
+    assert again.entries == {1: b"uno", 2: b"two", 3: b"three"}
+    again.close()
+
+
+def test_side_table_put_sync_race_with_background_syncer(tmp_path):
+    """put/sync serialize on the table lock: a background syncer (the
+    group-commit timer's pre_flush) racing foreground puts must never mark
+    an unfsynced record clean — after the final sync, every put is on disk."""
+    import threading as _threading
+    from repro.core.durability import SideTable
+    path = tmp_path / "r.sdt"
+    t = SideTable(path)
+    stop = _threading.Event()
+
+    def syncer():
+        while not stop.is_set():
+            t.sync()
+
+    th = _threading.Thread(target=syncer)
+    th.start()
+    try:
+        for i in range(500):
+            t.put(i, f"payload-{i}".encode())
+    finally:
+        stop.set()
+        th.join()
+    t.sync()
+    back = SideTable(path)  # reads exactly what is durable on disk
+    assert len(back.entries) == 500, \
+        "a put raced the syncer and was marked clean before reaching disk"
+    assert back.entries[499] == b"payload-499"
+    back.close()
+    t.close()

@@ -394,3 +394,125 @@ def test_compact_min_dead_ratio_skips_without_rewrite(tmp_path):
     assert stats2["bytes_after"] < stats["bytes_before"]
     h = hashing.hash_pytree(machine.bulk_apply(genesis, w.read_range(0, 50)))
     assert h == hashing.hash_pytree(machine.replay(genesis, log))
+
+
+# --------------------------------------------------------------------------- #
+# timer-thread flush: max_delay_s as a wall-clock bound (DESIGN.md §7)
+# --------------------------------------------------------------------------- #
+
+
+def test_timer_flush_holds_deadline_without_reads(tmp_path):
+    """With timer_flush, max_delay_s must hold with NO read barrier and NO
+    further submits: the deadline thread makes the pending group durable."""
+    w = wal.WriteAheadLog(tmp_path, D, segment_records=1024)
+    gw = wal.GroupCommitWriter(w, wal.GroupCommitPolicy(
+        max_batch=1 << 20, max_delay_s=0.02, timer_flush=True))
+    log = _random_log(30, 6, id_space=4)
+    gw.submit(log)
+    deadline = time.monotonic() + 5.0
+    while gw.pending and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert gw.pending == 0 and w.t == 6, \
+        "the timer thread must flush without any read or submit"
+    assert gw.timer_flushes >= 1
+    genesis = init_state(16, D)
+    assert (hashing.hash_pytree(machine.replay(genesis, w.read_range(0, 6)))
+            == hashing.hash_pytree(machine.replay(genesis, log)))
+    gw.close()
+
+
+def test_timer_flush_preserves_submit_order(tmp_path):
+    """Deadline-ordering regression: timer flushes racing foreground
+    submits must never reorder, duplicate or drop commands — the WAL holds
+    exactly the submit-order log."""
+    w = wal.WriteAheadLog(tmp_path, D, segment_records=16)
+    gw = wal.GroupCommitWriter(w, wal.GroupCommitPolicy(
+        max_batch=1 << 20, max_delay_s=0.002, timer_flush=True))
+    log = _random_log(31, 40, id_space=8)
+    for i in range(40):
+        gw.submit(log.slice(i, i + 1))
+        if i % 7 == 0:
+            time.sleep(0.004)  # let deadline flushes land mid-stream
+    gw.close()  # stops the timer and flushes the tail
+    assert w.t == 40 and gw.pending == 0
+    genesis = init_state(32, D)
+    assert (hashing.hash_pytree(machine.replay(genesis, w.read_range(0, 40)))
+            == hashing.hash_pytree(machine.replay(genesis, log))), \
+        "timer flushes reordered or lost commands"
+
+
+def test_timer_flush_close_is_idempotent_and_final(tmp_path):
+    w = wal.WriteAheadLog(tmp_path, D, segment_records=1024)
+    gw = wal.GroupCommitWriter(w, wal.GroupCommitPolicy(
+        max_batch=1 << 20, max_delay_s=3600, timer_flush=True))
+    log = _random_log(32, 4, id_space=4)
+    gw.submit(log)
+    gw.close()   # flushes the pending group even though the deadline is far
+    assert w.t == 4 and gw.pending == 0
+    gw.close()   # idempotent
+    assert w.t == 4
+
+
+def test_failed_flush_that_landed_everything_clears_the_deadline(tmp_path):
+    """A sink failure AFTER the whole group landed (e.g. a post-append
+    compaction error) empties the buffer via _drop_landed; the deadline
+    must clear with it, or a timer_flush thread would see an expired
+    deadline with nothing to flush and busy-spin forever."""
+    w = wal.WriteAheadLog(tmp_path, D, segment_records=1024)
+    gw = wal.GroupCommitWriter(
+        w, wal.GroupCommitPolicy(max_batch=1 << 20, max_delay_s=3600))
+    log = _random_log(33, 8, id_space=4)
+    gw.submit(log)
+
+    real = w.append_many
+
+    def land_then_raise(logs):
+        real(logs)
+        raise OSError("post-append failure (compaction)")
+
+    w.append_many = land_then_raise
+    with pytest.raises(OSError):
+        gw.flush()
+    assert gw.pending == 0 and w.t == 8, "the group itself landed"
+    assert gw._oldest is None, "an emptied buffer must clear its deadline"
+
+
+def test_sharded_partial_flush_drops_whole_landed_batches(tmp_path):
+    """A sharded sink advances in padded-batch units, not raw commands: a
+    flush that lands batch 1 on every shard then fails must pop exactly
+    batch 1 from the buffer — slicing raw commands off the front (the
+    single-host rule) would re-append a durable prefix and corrupt replay."""
+    import jax.numpy as jnp
+    from repro.core import boundary, commands, distributed, shard_wal
+    rng = np.random.default_rng(40)
+    n, ns = 16, 3
+    vecs = boundary.normalize_embedding(
+        rng.normal(size=(n, D)).astype(np.float32))
+    log = commands.insert_batch(jnp.arange(n, dtype=jnp.int64), vecs)
+    b1, b2 = log.slice(0, 8), log.slice(8, 16)
+    genesis = distributed.init_sharded_host(ns, 16, D)
+    store = shard_wal.ShardedDurableStore(tmp_path, genesis, n_shards=ns)
+    gw = wal.GroupCommitWriter(
+        store, wal.GroupCommitPolicy(max_batch=1 << 20, max_delay_s=3600))
+    gw.submit(b1)
+    gw.submit(b2)
+
+    real = store.append_many_routed
+
+    def first_batch_only(routed_logs):
+        real(routed_logs[:1])  # batch 1 lands on every shard, then "disk full"
+        raise OSError("disk full")
+
+    store.append_many_routed = first_batch_only
+    with pytest.raises(OSError):
+        gw.flush()
+    assert store.t > 0, "batch 1 landed"
+    assert gw.pending == 8, "only batch 2 may stay queued for retry"
+    store.append_many_routed = real
+    gw.flush()
+
+    ref = shard_wal.bulk_apply_sharded(
+        shard_wal.bulk_apply_sharded(genesis, b1, ns), b2, ns)
+    _, h = store.restore_at(store.t)
+    assert h == hashing.hash_pytree(ref), \
+        "retry after a partial sharded flush duplicated durable commands"

@@ -24,7 +24,7 @@ def engine():
 
 def test_ingest_and_hash(engine):
     assert int(engine.memory.count) == 24
-    assert engine.memory_hash() == engine.replay_log_fresh()
+    assert engine.state_hash() == engine.replay_log_fresh()
 
 
 def test_retrieval_deterministic(engine):
@@ -49,7 +49,7 @@ def test_snapshot_transferable(engine):
     from repro.core import snapshot
     blob = engine.snapshot_bytes()
     restored, h = snapshot.restore_bytes(blob)
-    assert h == engine.memory_hash()
+    assert h == engine.state_hash()
 
 
 def test_engine_crash_recovery(engine, tmp_path):
@@ -65,7 +65,7 @@ def test_engine_crash_recovery(engine, tmp_path):
     eng.insert_documents(docs[:12])
     eng.insert_documents(docs[12:])  # crosses checkpoint_every=16
     eng.wait_durable()
-    h_before = eng.memory_hash()
+    h_before = eng.state_hash()
     prompts = rng.integers(0, engine.cfg.vocab_size, (2, 8), dtype=np.int32)
     rh_before = eng.retrieval_hash(prompts)
     assert eng.durable.snapshots()[0] == 0  # genesis snapshot exists
@@ -76,7 +76,7 @@ def test_engine_crash_recovery(engine, tmp_path):
     t, h = eng2.recover()
     assert t == 20 and h == h_before
     assert eng2.retrieval_hash(prompts) == rh_before
-    assert eng2.memory_hash() == eng2.replay_log_fresh()  # audit still holds
+    assert eng2.state_hash() == eng2.replay_log_fresh()  # audit still holds
     # recovered engines keep ingesting with fresh, non-colliding ids
     new_ids = eng2.insert_documents(docs[:2])
     assert min(new_ids) == 20
@@ -118,4 +118,209 @@ def test_engine_group_commit_sync_on_read(engine, tmp_path):
     t, _ = eng2.recover()
     assert t == 8, "only the flushed (read-observed) prefix is durable"
     assert eng2.retrieval_hash(prompts) == rh
-    assert eng2.memory_hash() == eng2.replay_log_fresh()
+    assert eng2.state_hash() == eng2.replay_log_fresh()
+
+
+# --------------------------------------------------------------------------- #
+# sharded serve engine (DESIGN.md §7)
+# --------------------------------------------------------------------------- #
+
+
+def test_sharded_engine_matches_flat_bit_for_bit(engine):
+    """ServeConfig(shards=N) on the same documents reports the same
+    memory_hash() and the same retrieval sets as the single-host engine —
+    exact route and (beam-exhaustive) HNSW route alike."""
+    rng = np.random.default_rng(7)
+    docs = rng.integers(0, engine.cfg.vocab_size, (20, 16), dtype=np.int32)
+    prompts = rng.integers(0, engine.cfg.vocab_size, (3, 8), dtype=np.int32)
+
+    def mk(shards):
+        return MemoryAugmentedEngine(engine.cfg, engine.params, ServeConfig(
+            capacity=128, retrieve_k=3, max_new_tokens=4, s_cache=96,
+            context_tokens=8, shards=shards))
+
+    flat, sharded = mk(1), mk(4)
+    for eng in (flat, sharded):
+        eng.insert_documents(docs[:12])
+        eng.insert_documents(docs[12:])
+    assert sharded.n_shards == 4
+    assert flat.memory_hash() == sharded.memory_hash()
+
+    for route in ("exact", "hnsw"):  # ef=64 >= live: beams are exhaustive
+        flat.sc.route = sharded.sc.route = route
+        fi, fs = flat.retrieve(prompts)
+        si, ss = sharded.retrieve(prompts)
+        assert sharded.last_plan.route == route
+        assert (fi == si).all() and (fs == ss).all(), route
+    flat.sc.route = sharded.sc.route = "auto"
+
+    # generation conditions on the same retrieved context in both modes
+    assert (flat.generate(prompts) == sharded.generate(prompts)).all()
+
+    # native-layout audit: sharded replay re-derives the sharded state
+    assert sharded.replay_log_fresh() == sharded.state_hash()
+    assert flat.replay_log_fresh() == flat.state_hash()
+
+
+def test_sharded_engine_durable_crash_recovery(engine, tmp_path):
+    """The sharded serving path end to end: group-committed ingest into a
+    ShardedDurableStore, checkpoint, kill, recover — state hash, retrieval
+    hashes and the doc cache all come back; rollback_to time-travels."""
+    from repro.core import wal
+    rng = np.random.default_rng(9)
+    sc = ServeConfig(capacity=128, retrieve_k=3, max_new_tokens=4, s_cache=96,
+                     context_tokens=8, shards=2,
+                     durable_dir=str(tmp_path / "d"),
+                     group_commit=wal.GroupCommitPolicy(max_batch=1 << 20,
+                                                        max_delay_s=3600))
+    eng = MemoryAugmentedEngine(engine.cfg, engine.params, sc)
+    docs = rng.integers(0, engine.cfg.vocab_size, (18, 16), dtype=np.int32)
+    prompts = rng.integers(0, engine.cfg.vocab_size, (2, 8), dtype=np.int32)
+
+    eng.insert_documents(docs[:10])
+    rh_mid = eng.retrieval_hash(prompts)     # sync-on-read flushes group
+    t_mid = eng.durable.t
+    eng.checkpoint()
+    assert eng.durable.merged_records() == [t_mid]
+
+    eng.insert_documents(docs[10:])
+    rh_full = eng.retrieval_hash(prompts)
+    t_full = eng.durable.t
+    h_full = eng.state_hash()
+    assert t_full > t_mid
+
+    # crash: a brand-new engine over the same directory, then recover
+    eng2 = MemoryAugmentedEngine(engine.cfg, engine.params, sc)
+    t, h = eng2.recover()
+    assert (t, h) == (t_full, h_full)
+    assert eng2.retrieval_hash(prompts) == rh_full
+    assert eng2.memory_hash() == eng.memory_hash()
+    assert eng2.state_hash() == eng2.replay_log_fresh()
+    new_ids = eng2.insert_documents(docs[:2])
+    assert min(new_ids) == 18  # fresh, non-colliding ids after recovery
+
+    # time travel: roll the recovered engine back to the checkpoint cursor
+    eng3 = MemoryAugmentedEngine(engine.cfg, engine.params, sc)
+    eng3.recover()
+    t3, _ = eng3.rollback_to(t_mid)
+    assert t3 == t_mid and eng3.durable.t == t_mid
+    assert eng3.retrieval_hash(prompts) == rh_mid
+    assert eng3.state_hash() == eng3.replay_log_fresh()
+
+
+def test_sharded_engine_rejects_indivisible_capacity(engine):
+    with pytest.raises(ValueError, match="divide"):
+        MemoryAugmentedEngine(engine.cfg, engine.params,
+                              ServeConfig(capacity=100, shards=3))
+
+
+def test_doc_cache_recovers_from_side_table(engine, tmp_path):
+    """Recover-then-generate: the recovered engine's doc cache (token
+    prefixes) reloads from the durable side table, so generation conditions
+    on the same retrieved context as before the crash — no lazy refill."""
+    rng = np.random.default_rng(11)
+    sc = ServeConfig(capacity=128, retrieve_k=3, max_new_tokens=4, s_cache=96,
+                     context_tokens=8, durable_dir=str(tmp_path / "d"))
+    eng = MemoryAugmentedEngine(engine.cfg, engine.params, sc)
+    docs = rng.integers(0, engine.cfg.vocab_size, (10, 16), dtype=np.int32)
+    eng.insert_documents(docs)
+    prompts = rng.integers(0, engine.cfg.vocab_size, (2, 8), dtype=np.int32)
+    out_a = eng.generate(prompts, augment=True)
+
+    eng2 = MemoryAugmentedEngine(engine.cfg, engine.params, sc)
+    t, _ = eng2.recover()
+    assert t == 10
+    assert sorted(eng2.docs) == sorted(eng.docs)
+    for k in eng.docs:
+        assert (eng2.docs[k] == eng.docs[k]).all()
+    out_b = eng2.generate(prompts, augment=True)
+    assert (out_a == out_b).all(), \
+        "recovered generation must condition on the same doc prefixes"
+
+
+def test_flat_engine_rollback_to_time_travels(engine, tmp_path):
+    """rollback_to(t) on the single-host engine: durable history above t is
+    dropped, memory restores at t, retrievals and id allocation rewind."""
+    rng = np.random.default_rng(13)
+    sc = ServeConfig(capacity=128, retrieve_k=3, max_new_tokens=4, s_cache=96,
+                     context_tokens=8, durable_dir=str(tmp_path / "d"))
+    eng = MemoryAugmentedEngine(engine.cfg, engine.params, sc)
+    docs = rng.integers(0, engine.cfg.vocab_size, (12, 16), dtype=np.int32)
+    prompts = rng.integers(0, engine.cfg.vocab_size, (2, 8), dtype=np.int32)
+    eng.insert_documents(docs[:6])
+    rh6, h6 = eng.retrieval_hash(prompts), eng.state_hash()
+    eng.checkpoint()
+    eng.insert_documents(docs[6:])
+    assert eng.durable.t == 12
+    t, h = eng.rollback_to(6)
+    assert (t, h) == (6, h6)
+    assert eng.retrieval_hash(prompts) == rh6
+    assert eng.replay_log_fresh() == eng.state_hash()
+    assert min(eng.insert_documents(docs[:2])) == 6, \
+        "id allocation must rewind with the rolled-back state"
+
+
+def test_doc_side_table_never_lags_reused_ids(engine, tmp_path):
+    """Rollback then reinsert reuses ids. A crash right after the insert —
+    no read barrier, no flush — must still recover the NEW tokens for the
+    reused id: side-table records are durable before their commands, so a
+    live id can never outrun its token prefix."""
+    rng = np.random.default_rng(17)
+    sc = ServeConfig(capacity=128, retrieve_k=3, max_new_tokens=4, s_cache=96,
+                     context_tokens=8, durable_dir=str(tmp_path / "d"))
+    eng = MemoryAugmentedEngine(engine.cfg, engine.params, sc)
+    docs_a = rng.integers(0, engine.cfg.vocab_size, (6, 16), dtype=np.int32)
+    doc_b = rng.integers(0, engine.cfg.vocab_size, (1, 16), dtype=np.int32)
+    eng.insert_documents(docs_a)
+    eng.rollback_to(3)                         # ids 3..5 rolled away
+    assert eng.insert_documents(doc_b) == [3]  # id 3 reused, new content
+    # crash with NO flush: a recovered engine must see the new tokens
+    eng2 = MemoryAugmentedEngine(engine.cfg, engine.params, sc)
+    t, _ = eng2.recover()
+    assert t == 4
+    assert (eng2.docs[3] == doc_b[0]).all(), \
+        "recovered doc cache served stale pre-rollback tokens"
+
+
+def test_group_commit_policy_flush_syncs_doc_table(engine, tmp_path):
+    """A policy-driven flush inside submit() (max_batch reached) must sync
+    the doc side table through the writer's pre_flush hook — command
+    durability may never outrun the cache's."""
+    from repro.core import wal
+    from repro.core.durability import SideTable
+    rng = np.random.default_rng(19)
+    sc = ServeConfig(capacity=128, retrieve_k=3, max_new_tokens=4, s_cache=96,
+                     context_tokens=8, durable_dir=str(tmp_path / "d"),
+                     group_commit=wal.GroupCommitPolicy(max_batch=4,
+                                                        max_delay_s=3600))
+    eng = MemoryAugmentedEngine(engine.cfg, engine.params, sc)
+    docs = rng.integers(0, engine.cfg.vocab_size, (4, 16), dtype=np.int32)
+    eng.insert_documents(docs)      # max_batch hit: flushes inside submit
+    assert eng.durable.t == 4
+    table = SideTable(tmp_path / "d" / "docs.sdt")  # reads what is on disk
+    try:
+        assert sorted(table.entries) == [0, 1, 2, 3], \
+            "doc records must be durable once their commands are"
+    finally:
+        table.close()
+    eng.close()
+
+
+def test_empty_ingest_batch_is_a_true_noop_in_both_modes(engine, tmp_path):
+    """An empty batch must not advance any cursor: in sharded mode routing
+    would pad it to one NOP per shard (advancing memory but not the
+    durable store, which skips empty logs) — the engine refuses up front."""
+    from repro.core import wal
+    for shards, d in ((1, "f"), (2, "s")):
+        sc = ServeConfig(capacity=128, retrieve_k=3, max_new_tokens=4,
+                         s_cache=96, context_tokens=8, shards=shards,
+                         durable_dir=str(tmp_path / d),
+                         group_commit=wal.GroupCommitPolicy(
+                             max_batch=1 << 20, max_delay_s=3600))
+        eng = MemoryAugmentedEngine(engine.cfg, engine.params, sc)
+        h0 = eng.state_hash()
+        assert eng.insert_documents(
+            np.empty((0, 8), np.int32)) == []
+        assert eng.state_hash() == h0 and eng.durable.t == 0
+        assert eng._cursor() == 0 and eng._next_id == 0
+        eng.close()

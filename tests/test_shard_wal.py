@@ -314,3 +314,110 @@ def test_exact_search_sharded_matches_single_kernel():
     ids_f, s_f = search.exact_search(flat, q, 6)
     assert (np.asarray(ids_s) == np.asarray(ids_f)).all()
     assert (np.asarray(s_s) == np.asarray(s_f)).all()
+
+
+# --------------------------------------------------------------------------- #
+# mesh-free sharded HNSW + engine-facing facts + sharded rollback
+# --------------------------------------------------------------------------- #
+
+
+def test_hnsw_search_sharded_exhaustive_beams_match_exact():
+    """In the beam-exhaustive regime (ef >= per-shard live count) the
+    per-shard HNSW fan-out must reproduce the exact sharded answer — and
+    hence the flat single-kernel answer — bit for bit."""
+    rng = np.random.default_rng(3)
+    n = 30
+    vecs = boundary.normalize_embedding(
+        rng.normal(size=(n, D)).astype(np.float32))
+    log = commands.insert_batch(jnp.arange(n, dtype=jnp.int64), vecs)
+    sharded = shard_wal.bulk_apply_sharded(_genesis(), log, NS)
+    flat = machine.bulk_apply(init_state(64, D), log)
+
+    q = boundary.admit_query(rng.normal(size=(5, D)).astype(np.float32))
+    ids_h, d_h = shard_wal.hnsw_search_sharded(sharded, NS, q, 6, ef=64)
+    ids_e, s_e = shard_wal.exact_search_sharded(sharded, NS, q, 6)
+    ids_f, s_f = search.exact_search(flat, q, 6)
+    assert (np.asarray(ids_h) == np.asarray(ids_e)).all()
+    assert (np.asarray(d_h) == np.asarray(s_e)).all()
+    assert (np.asarray(ids_h) == np.asarray(ids_f)).all()
+    assert (np.asarray(d_h) == np.asarray(s_f)).all()
+    # the planner-facing fan-out wrapper takes the same route
+    plan = query.plan_query(int(np.asarray(sharded.count).sum()), 6, 64,
+                            route="hnsw")
+    ids_p, d_p = query.sharded_host_query(sharded, NS, q, 6, plan)
+    assert (np.asarray(ids_p) == np.asarray(ids_h)).all()
+    assert (np.asarray(d_p) == np.asarray(d_h)).all()
+
+
+def test_live_count_and_shard_live_counts_facts():
+    rng = np.random.default_rng(4)
+    n = 20
+    vecs = boundary.normalize_embedding(
+        rng.normal(size=(n, D)).astype(np.float32))
+    log = commands.insert_batch(jnp.arange(n, dtype=jnp.int64), vecs)
+    for i in (0, 5):
+        log = log.concat(commands.delete_cmd(i, D))
+    sharded = shard_wal.bulk_apply_sharded(_genesis(), log, NS)
+    flat = machine.bulk_apply(init_state(64, D), log)
+    assert shard_wal.live_count(flat) == shard_wal.live_count(sharded) == 18
+    per = distributed.shard_live_counts(sharded, NS)
+    assert per.sum() == 18
+    assert (per == np.asarray(sharded.count)).all()
+
+
+def test_sharded_rollback_to_drops_history_and_merged_records(tmp_path):
+    genesis = _genesis()
+    batches, _ = _batches(15, 30, 10)
+    store = shard_wal.ShardedDurableStore(tmp_path, genesis, n_shards=NS,
+                                          segment_records=256)
+    ref = genesis
+    cursors, refs = [], {}
+    for b in batches:
+        t = store.append(b)
+        ref = shard_wal.bulk_apply_sharded(ref, b, NS)
+        store.checkpoint(ref)
+        cursors.append(t)
+        refs[t] = ref
+    t_mid = cursors[0]
+    store.rollback_to(t_mid)
+    assert store.t == t_mid
+    assert len(set(store.shard_ts())) == 1, "rollback must keep lockstep"
+    assert all(t <= t_mid for t in store.merged_records())
+    _, h = store.restore_at(t_mid)
+    assert h == hashing.hash_pytree(refs[t_mid])
+    # the store keeps accepting appends at the rolled-back cursor
+    t2 = store.append(batches[1])
+    ref2 = shard_wal.bulk_apply_sharded(refs[t_mid], batches[1], NS)
+    _, h2 = store.restore_at(t2)
+    assert h2 == hashing.hash_pytree(ref2)
+    with pytest.raises(ValueError, match="ahead"):
+        store.rollback_to(store.t + 100)
+
+
+def test_pre_routed_submit_path_is_bit_identical(tmp_path):
+    """The serve engine's route-once path (submit(routed=) →
+    append_many_routed) must write byte-identical per-shard WALs to the
+    route-inside-the-store path — routing exactly once is an optimization,
+    never a semantic."""
+    genesis = _genesis()
+    batches, _ = _batches(16, 40, 8)
+    a = shard_wal.ShardedDurableStore(tmp_path / "a", genesis, n_shards=NS,
+                                      segment_records=256)
+    for b in batches:
+        a.append(b)
+    b_store = shard_wal.ShardedDurableStore(tmp_path / "b", genesis,
+                                            n_shards=NS, segment_records=256)
+    gw = wal.GroupCommitWriter(
+        b_store, wal.GroupCommitPolicy(max_batch=1 << 20, max_delay_s=3600))
+    predicted = [gw.submit(b, routed=distributed.route_commands(b, NS))
+                 for b in batches]
+    assert gw.flush() == a.t == predicted[-1]
+    for s in range(NS):
+        segs_a = sorted((tmp_path / "a" / f"shard_{s:04d}" / "wal").glob("*.wal"))
+        segs_b = sorted((tmp_path / "b" / f"shard_{s:04d}" / "wal").glob("*.wal"))
+        assert len(segs_a) == len(segs_b)
+        for pa, pb in zip(segs_a, segs_b):
+            assert pa.read_bytes() == pb.read_bytes()
+    with pytest.raises(ValueError, match="shares"):
+        b_store.append_many_routed(
+            [distributed.route_commands(batches[0], NS + 1)])

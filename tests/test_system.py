@@ -35,7 +35,8 @@ def test_two_servers_converge():
     b.insert_documents(docs)
 
     # identical state (machine A == machine B, paper §8.1)
-    assert a.memory_hash() == b.memory_hash()
+    assert a.state_hash() == b.state_hash()
+    assert a.memory_hash() == b.memory_hash()  # the layout-invariant twin
 
     # identical retrieval + generation
     ids_a, s_a = a.retrieve(prompts)
@@ -48,10 +49,10 @@ def test_two_servers_converge():
     # snapshot transfer: B loads A's snapshot and serves identically
     blob = a.snapshot_bytes()
     restored, h = snapshot.restore_bytes(blob)
-    assert h == b.memory_hash()
+    assert h == b.state_hash()
 
     # audit: replaying A's log from S0 reproduces A
-    assert a.replay_log_fresh() == a.memory_hash()
+    assert a.replay_log_fresh() == a.state_hash()
 
 
 def test_commands_survive_delete_and_reinsert_cycle():
@@ -67,4 +68,4 @@ def test_commands_survive_delete_and_reinsert_cycle():
     eng.log = eng.log.concat(dlog)
     eng.memory = machine.replay(eng.memory, dlog)
     assert int(eng.memory.count) == 4
-    assert eng.replay_log_fresh() == eng.memory_hash()
+    assert eng.replay_log_fresh() == eng.state_hash()
