@@ -1,0 +1,157 @@
+"""Log-shipping replication cost: ingest with replicas + catch-up lag
+(DESIGN.md §8).
+
+Two hash-checked tables (a replication number whose replica does not hold
+the primary's exact state would be meaningless):
+
+  1. durable primary ingest (commands/sec through the wire codec) with
+     0/1/2 attached replicas syncing after every group — what verified
+     log shipping costs the write path;
+  2. cold-replica catch-up: a fresh replica tails the full log, and the
+     per-command lag is reported; its final ``state_hash()`` must equal
+     the primary's and its ``retrieval_hash()`` the primary-side read's.
+
+Everything runs through the real wire protocol (``LocalTransport`` is the
+full encode/decode round trip), so the measured numbers include codec +
+digest cost. Run directly (``python benchmarks/bench_replication.py
+[--smoke]``) or via ``benchmarks.run``. ``--smoke`` shrinks the log so CI
+exercises the whole path in seconds.
+"""
+from __future__ import annotations
+
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+import repro  # noqa: F401
+import jax.numpy as jnp
+from benchmarks.common import emit
+from repro.core import boundary, commands, query
+from repro.core.shard_wal import live_count
+from repro.net.client import LocalTransport, RemoteShardClient
+from repro.net.replica import ReplicaStore
+from repro.net.server import ShardHost
+
+DIM = 32
+K = 10
+
+
+def _insert_batches(n: int, step: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    vecs = boundary.normalize_embedding(
+        rng.normal(size=(n, DIM)).astype(np.float32))
+    log = commands.insert_batch(jnp.arange(n, dtype=jnp.int64), vecs)
+    return [log.slice(i, min(i + step, n)) for i in range(0, n, step)]
+
+
+def _queries(nq: int = 8, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    return boundary.admit_query(
+        rng.normal(size=(nq, DIM)).astype(np.float32))
+
+
+def _primary_retrieval_hash(host, q) -> int:
+    plan = query.plan_query(live_count(host.state), K, 64)
+    ids, scores = query.execute_plan(host.state, q, K, plan)
+    return query.retrieval_hash(ids, scores)
+
+
+def table_ingest(n: int, step: int) -> None:
+    """Primary ingest throughput with 0/1/2 verify-then-ack replicas."""
+    from repro.core.state import init_state
+    batches = _insert_batches(n, step)
+    q = _queries()
+    # warmup: compile the apply/append path once so the 0-replica row is
+    # not charged for JIT tracing the later rows reuse
+    with tempfile.TemporaryDirectory() as tmp:
+        w_host = ShardHost(f"{tmp}/warm",
+                           init_state(2 * n, DIM, hnsw_levels=1,
+                                      hnsw_degree=2))
+        RemoteShardClient(LocalTransport(w_host)).append(batches[0])
+    baseline_hash = None
+    for n_replicas in (0, 1, 2):
+        with tempfile.TemporaryDirectory() as tmp:
+            host = ShardHost(f"{tmp}/primary",
+                             init_state(2 * n, DIM, hnsw_levels=1,
+                                        hnsw_degree=2),
+                             segment_records=max(n, 1024))
+            writer = RemoteShardClient(LocalTransport(host))
+            replicas = [
+                ReplicaStore(RemoteShardClient(LocalTransport(host)),
+                             init_state(2 * n, DIM, hnsw_levels=1,
+                                        hnsw_degree=2),
+                             replica_id=r)
+                for r in range(n_replicas)]
+            t0 = time.perf_counter()
+            for b in batches:
+                writer.append(b)
+                for rep in replicas:
+                    rep.sync()
+            dt = time.perf_counter() - t0
+
+            rh = _primary_retrieval_hash(host, q)
+            if baseline_hash is None:
+                baseline_hash = rh
+            hashes_ok = rh == baseline_hash and all(
+                rep.state_hash() == host.state_hash()
+                and rep.t == host.store.t
+                and rep.retrieval_hash(q, K) == rh
+                for rep in replicas)
+            emit(f"replicated_ingest_{n_replicas}replicas", dt / n * 1e6,
+                 f"commands_per_sec={n / dt:.0f};t={host.store.t};"
+                 f"hashes_equal={hashes_ok}")
+            if not hashes_ok:
+                raise RuntimeError(
+                    f"replica diverged from primary at {n_replicas} "
+                    "replicas — verified log shipping is broken")
+
+
+def table_catch_up(n: int, step: int) -> None:
+    """Cold-replica catch-up lag over the full durable log."""
+    from repro.core.state import init_state
+    batches = _insert_batches(n, step, seed=3)
+    q = _queries(seed=4)
+    with tempfile.TemporaryDirectory() as tmp:
+        host = ShardHost(f"{tmp}/primary",
+                         init_state(2 * n, DIM, hnsw_levels=1,
+                                    hnsw_degree=2),
+                         segment_records=max(n, 1024))
+        writer = RemoteShardClient(LocalTransport(host))
+        for b in batches:
+            writer.append(b)
+
+        rep = ReplicaStore(RemoteShardClient(LocalTransport(host)),
+                           init_state(2 * n, DIM, hnsw_levels=1,
+                                      hnsw_degree=2),
+                           replica_id=9)
+        t0 = time.perf_counter()
+        t = rep.catch_up(max_commands=step)
+        dt = time.perf_counter() - t0
+
+        rh_primary = _primary_retrieval_hash(host, q)
+        state_ok = (t == host.store.t
+                    and rep.state_hash() == host.state_hash())
+        read_ok = rep.retrieval_hash(q, K) == rh_primary
+        emit("replica_catch_up", dt / n * 1e6,
+             f"commands={n};seconds={dt:.3f};state_hash_equal={state_ok};"
+             f"retrieval_hash_equal={read_ok}")
+        if not (state_ok and read_ok):
+            raise RuntimeError(
+                "caught-up replica diverged from the primary "
+                f"(t={t} vs {host.store.t})")
+
+
+def run(*, smoke: bool = False) -> None:
+    if smoke:
+        table_ingest(n=96, step=16)
+        table_catch_up(n=96, step=16)
+    else:
+        table_ingest(n=512, step=32)
+        table_catch_up(n=512, step=32)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(smoke="--smoke" in sys.argv[1:])

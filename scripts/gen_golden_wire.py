@@ -1,0 +1,42 @@
+"""Regenerate the golden wire-protocol fixtures in tests/fixtures/golden_wire/.
+
+Run ONLY when the wire format is deliberately bumped:
+  PYTHONPATH=src python scripts/gen_golden_wire.py
+
+One frame per message type, byte-frozen. The exemplar messages live in
+tests/test_protocol.py (``_golden_messages``) — the same list the test
+asserts against — so the generator and the test can never disagree about
+what the goldens contain (mirrors gen_golden_snapshots.py importing
+``_golden_state`` from test_durability).
+"""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "tests"))
+
+import repro  # noqa: F401
+from repro.net import protocol as p
+from test_protocol import _golden_messages
+
+FIXTURES = (pathlib.Path(__file__).resolve().parents[1]
+            / "tests" / "fixtures" / "golden_wire")
+
+
+def main() -> None:
+    FIXTURES.mkdir(parents=True, exist_ok=True)
+    frames = {}
+    for name, msg, rid in _golden_messages():
+        frame = p.encode_frame(msg, rid)
+        (FIXTURES / f"{name}.bin").write_bytes(frame)
+        frames[name] = {"msg_type": msg.TYPE, "request_id": rid,
+                        "bytes": len(frame)}
+    (FIXTURES / "golden_wire.json").write_text(json.dumps(
+        {"wire_format": p.WIRE_FORMAT, "frames": frames}, indent=2,
+        sort_keys=True) + "\n")
+    print(f"froze {len(frames)} wire frames "
+          f"(format {p.WIRE_FORMAT}) into {FIXTURES}")
+
+
+if __name__ == "__main__":
+    main()

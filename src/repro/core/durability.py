@@ -323,7 +323,10 @@ class DurableStore:
                         chunks_dropped += 1
             return {"snapshots_dropped": len(dropped),
                     "wal_segments_dropped": segs_dropped,
-                    "chunks_dropped": chunks_dropped}
+                    "chunks_dropped": chunks_dropped,
+                    # lets a coordinator prune merged records for remote
+                    # shards without listing their snapshot directories
+                    "oldest_snapshot": kept[0] if kept else 0}
 
     def compact_wal(self, genesis: MemoryState) -> Dict[str, int]:
         """Fold dead commands in the WAL (wal.compact_log contract)."""

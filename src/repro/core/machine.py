@@ -11,7 +11,11 @@ advance logical time, so a log replays identically even past rejections):
 * INSERT(id, vec): upsert. Existing id → overwrite row in place (graph edges
   and HNSW links for that slot are rebuilt from the new vector lazily via the
   next index touch; vector content is what distance math reads). New id →
-  lowest free slot; HNSW incremental insert runs for new rows.
+  lowest free slot, claimed *clean*: the row's meta words and user links are
+  reset, so a fresh id never inherits a tombstoned predecessor's metadata —
+  slot-reuse order is layout-dependent, and leaked meta would break the
+  cross-layout ``content_hash`` contract (DESIGN.md §7). HNSW incremental
+  insert runs for new rows.
 * DELETE(id): clear valid bit (tombstone). Slot becomes reusable; HNSW keeps
   the tombstoned node as a traversal waypoint (classic soft-delete) but it
   can never be returned (search masks on ``valid``).
@@ -65,9 +69,16 @@ def _op_insert(state: MemoryState, rec: CommandLog, ef_construction: int) -> Mem
         valid = state.valid.at[slot].set(True)
         count = state.count + jnp.where(has_existing, 0, 1).astype(jnp.int32)
         cursor = jnp.maximum(state.cursor, slot + 1)
+        # a fresh id claims a CLEAN row: meta/links left by a tombstoned
+        # predecessor must not leak (slot reuse is layout-dependent; leaked
+        # meta breaks the cross-layout content_hash). Upserts keep theirs.
+        meta = state.meta.at[slot].set(
+            jnp.where(has_existing, state.meta[slot], 0))
+        links = state.links.at[slot].set(
+            jnp.where(has_existing, state.links[slot], -1))
         new_state = dataclasses.replace(
             state, vectors=vectors, ids=ids, valid=valid,
-            count=count, cursor=cursor,
+            count=count, cursor=cursor, meta=meta, links=links,
         )
         # fresh rows enter the HNSW graph; overwrites keep their links
         return jax.lax.cond(
@@ -254,12 +265,21 @@ def _apply_insert_segment(state: MemoryState, log: CommandLog,
         log.arg0, mode="drop", indices_are_sorted=True)
     valid = state.valid.at[slots].set(
         True, mode="drop", indices_are_sorted=True)
+    # every id in a clean run is fresh: claimed rows start with zero meta
+    # and no user links (see _op_insert — tombstone leftovers must not leak)
+    meta = state.meta.at[slots].set(
+        jnp.zeros((m, state.meta.shape[1]), state.meta.dtype),
+        mode="drop", indices_are_sorted=True)
+    links = state.links.at[slots].set(
+        jnp.full((m, state.links.shape[1]), -1, state.links.dtype),
+        mode="drop", indices_are_sorted=True)
     count = state.count + jnp.sum(accepted).astype(jnp.int32)
     cursor = jnp.maximum(
         state.cursor, jnp.max(jnp.where(accepted, slots + 1, 0)))
     state = dataclasses.replace(
         state, vectors=vectors, ids=ids, valid=valid, count=count,
-        cursor=cursor, version=state.version + n_real,
+        cursor=cursor, meta=meta, links=links,
+        version=state.version + n_real,
     )
 
     # graph construction stays ordered over the fresh rows only; rejected and

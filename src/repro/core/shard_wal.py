@@ -68,11 +68,26 @@ class ShardedDurableStore:
                  n_shards: Optional[int] = None,
                  chunk_size: int = snapshot.DEFAULT_CHUNK_SIZE,
                  segment_records: int = 1024,
-                 compaction: Optional[wal.CompactionPolicy] = None):
+                 compaction: Optional[wal.CompactionPolicy] = None,
+                 backends: Optional[Sequence] = None):
+        """``backends`` makes the store transport-pluggable: instead of
+        creating local per-shard ``DurableStore``s, the coordinator drives
+        the given shard handles — anything with the ``DurableStore``
+        surface (``append_many`` / ``checkpoint`` / ``restore_at`` /
+        ``recover`` / ``rollback_to`` / ``retain`` / ``t`` /
+        ``wal.read_range``), in practice ``net.RemoteShardClient``s over
+        subprocess shard hosts. The directory then holds only the
+        coordinator's own artifacts (store.json, merged-hash records);
+        each backend owns its chunks and sweeps them itself."""
         self.dir = pathlib.Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         meta_path = self.dir / "store.json"
 
+        if backends is not None:
+            if n_shards is not None and n_shards != len(backends):
+                raise ValueError(
+                    f"{len(backends)} backends given, n_shards={n_shards}")
+            n_shards = len(backends)
         if meta_path.exists():
             meta = json.loads(meta_path.read_text())
             if n_shards is not None and n_shards != meta["n_shards"]:
@@ -80,7 +95,7 @@ class ShardedDurableStore:
                     f"store has {meta['n_shards']} shards, {n_shards} given")
             n_shards = meta["n_shards"]
         else:
-            if genesis is None or n_shards is None:
+            if n_shards is None or (genesis is None and backends is None):
                 raise ValueError(
                     f"{self.dir} is not a ShardedDurableStore and no "
                     "(genesis, n_shards) was given to create one")
@@ -92,18 +107,22 @@ class ShardedDurableStore:
             tmp.rename(meta_path)
 
         self.n_shards = n_shards
-        self.chunks = snapshot.ChunkStore(self.dir / "chunks")
         self._merged_dir = self.dir / "merged"
         self._merged_dir.mkdir(exist_ok=True)
-        self.shards: List[DurableStore] = [
-            DurableStore(
-                self.dir / f"shard_{s:04d}",
-                distributed.shard_slice(genesis, s, n_shards)
-                if genesis is not None else None,
-                chunk_size=chunk_size, segment_records=segment_records,
-                compaction=compaction, chunks=self.chunks)
-            for s in range(n_shards)
-        ]
+        if backends is not None:
+            self.chunks = None  # each backend owns (and sweeps) its chunks
+            self.shards = list(backends)
+        else:
+            self.chunks = snapshot.ChunkStore(self.dir / "chunks")
+            self.shards: List[DurableStore] = [
+                DurableStore(
+                    self.dir / f"shard_{s:04d}",
+                    distributed.shard_slice(genesis, s, n_shards)
+                    if genesis is not None else None,
+                    chunk_size=chunk_size, segment_records=segment_records,
+                    compaction=compaction, chunks=self.chunks)
+                for s in range(n_shards)
+            ]
 
     # ------------------------------------------------------------------ #
     # the global command stream
@@ -262,7 +281,16 @@ class ShardedDurableStore:
         ahead — the crash hit between per-shard group flushes — roll back
         their unacked suffix so the fleet rejoins lockstep. Returns
         (merged state, hash, t); the hash is verified against the merged
-        record when one exists at the reconciled cursor."""
+        record when one exists at the reconciled cursor.
+
+        Reconciliation is transport-agnostic: it drives only the backend
+        surface (``recover`` / ``t`` / ``rollback_to``), and the wire
+        client maps server refusals into the same exception families the
+        local error envelopes catch (``net.RemoteError`` is a ValueError,
+        ``net.TransportError`` an OSError — both in ``_RESTORE_ERRORS``).
+        A remote shard reporting a stale cursor therefore rolls the ahead
+        shards back exactly as a local one does (the regression
+        tests/test_replication.py pins)."""
         ts = []
         for s, shard in enumerate(self.shards):
             try:
@@ -322,19 +350,25 @@ class ShardedDurableStore:
         the new window are pruned with the snapshots they described."""
         stats = {"snapshots_dropped": 0, "wal_segments_dropped": 0,
                  "chunks_dropped": 0}
+        oldest_parts = []
         for shard in self.shards:
             sh = shard.retain(keep)
             stats["snapshots_dropped"] += sh["snapshots_dropped"]
             stats["wal_segments_dropped"] += sh["wal_segments_dropped"]
-        referenced = set()
-        for shard in self.shards:
-            referenced |= shard.referenced_chunk_keys()
-        for key in self.chunks.keys():
-            if key not in referenced:
-                self.chunks.delete(key)
-                stats["chunks_dropped"] += 1
-        oldest = min((s.snapshots()[0] for s in self.shards
-                      if s.snapshots()), default=0)
+            oldest_parts.append(sh["oldest_snapshot"])
+            if self.chunks is None:
+                # remote backends own their chunks and already swept them;
+                # their per-shard counts roll up instead of a local sweep
+                stats["chunks_dropped"] += sh.get("chunks_dropped", 0)
+        if self.chunks is not None:
+            referenced = set()
+            for shard in self.shards:
+                referenced |= shard.referenced_chunk_keys()
+            for key in self.chunks.keys():
+                if key not in referenced:
+                    self.chunks.delete(key)
+                    stats["chunks_dropped"] += 1
+        oldest = min(oldest_parts, default=0)
         for t in self.merged_records():
             if t < oldest:
                 self._merged_path(t).unlink()

@@ -518,6 +518,21 @@ class WriteAheadLog:
             vec=jnp.asarray(cat["vec"], self.contract.storage_dtype),
         )
 
+    def tail(self, t0: int, max_commands: int = 0
+             ) -> Tuple[CommandLog, int]:
+        """Stream the durable tail from ``t0``: the commands
+        [t0, t_end) with ``t_end = min(t, t0 + max_commands)``
+        (``max_commands=0`` means everything durable). Returns
+        (log, t_end). This is the log-shipping read a replica paginates
+        catch-up with (net/replica.py): bounding ``max_commands`` bounds
+        both the shipped frame and the per-step replay, and the strict
+        ``read_range`` chain verification applies to every shipped byte."""
+        if not 0 <= t0 <= self.t:
+            raise ValueError(f"tail from t={t0} outside WAL [0, {self.t}]")
+        t_end = self.t if max_commands <= 0 \
+            else min(self.t, t0 + max_commands)
+        return self.read_range(t0, t_end), t_end
+
     # ------------------------------------------------------------------ #
     def drop_below(self, t: int) -> int:
         """Delete whole segments entirely below ``t`` (retention). Returns

@@ -6,10 +6,24 @@
 Boots a model, ingests documents through the Valori boundary, serves batched
 retrieval-augmented generation, and proves the audit-trail property: replaying
 the command log reproduces the memory hash bit-for-bit.
+
+Topology flags (DESIGN.md §7, §8):
+
+  --shards N           sharded-layout engine in one process
+  --spawn-shards N     spawn N shard-server subprocesses
+                       (``python -m repro.net.server``) and serve through
+                       them over the wire protocol — the networked engine
+  --hosts a:p,b:p      attach to already-running shard servers instead
+  --durable-dir DIR    durable store / coordinator metadata directory
+                       (required for --hosts; defaulted for --spawn-shards)
 """
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
+import sys
+import tempfile
 import time
 
 import jax
@@ -19,6 +33,26 @@ import repro  # noqa: F401
 from repro.configs import get_config, get_reduced_config
 from repro.models import transformer as tf
 from repro.serve.engine import MemoryAugmentedEngine, ServeConfig
+
+
+def _spawn_shard_servers(n: int, capacity: int, dim: int, workdir: str):
+    """Start n shard-server subprocesses on ephemeral ports; returns
+    (procs, ["127.0.0.1:<port>", ...]) once every server printed its
+    LISTENING line (i.e. is accepting connections)."""
+    procs, hosts = [], []
+    for s in range(n):
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.net.server",
+             "--dir", os.path.join(workdir, f"shard_{s}"),
+             "--capacity", str(capacity // n), "--dim", str(dim),
+             "--port", "0"],
+            stdout=subprocess.PIPE, text=True, env=dict(os.environ))
+        line = proc.stdout.readline().strip()
+        if not line.startswith("LISTENING "):
+            raise RuntimeError(f"shard server {s} failed to start: {line!r}")
+        hosts.append(f"127.0.0.1:{int(line.split()[1])}")
+        procs.append(proc)
+    return procs, hosts
 
 
 def main() -> None:
@@ -31,41 +65,74 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--spawn-shards", type=int, default=0,
+                    help="spawn N shard-server subprocesses and serve "
+                         "through the wire protocol")
+    ap.add_argument("--hosts", default=None,
+                    help="comma-separated host:port shard servers "
+                         "(needs --durable-dir)")
+    ap.add_argument("--durable-dir", default=None)
     args = ap.parse_args()
 
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
     if cfg.external_embeddings:
         raise SystemExit(f"{cfg.name} takes stub embeddings; pick a token arch")
 
-    rng = np.random.default_rng(args.seed)
-    params = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
-    engine = MemoryAugmentedEngine(cfg, params, ServeConfig(
-        capacity=max(args.docs * 2, 256), max_new_tokens=args.max_new,
-        s_cache=args.doc_len + args.prompt_len + args.max_new + 32,
-        context_tokens=min(32, args.doc_len)))
+    hosts = args.hosts.split(",") if args.hosts else None
+    n = args.spawn_shards or (len(hosts) if hosts else max(args.shards, 1))
+    capacity = max(args.docs * 2, 256)
+    capacity += (-capacity) % n  # divide evenly across shards
+    durable_dir = args.durable_dir
 
-    docs = rng.integers(0, cfg.vocab_size, (args.docs, args.doc_len),
-                        dtype=np.int32)
-    t0 = time.time()
-    ids = engine.insert_documents(docs)
-    print(f"ingested {len(ids)} docs in {time.time() - t0:.2f}s; "
-          f"memory hash {engine.memory_hash():#x}")
+    procs = []
+    if args.spawn_shards:
+        workdir = tempfile.mkdtemp(prefix="valori-net-")
+        procs, hosts = _spawn_shard_servers(args.spawn_shards, capacity,
+                                            cfg.d_model, workdir)
+        if durable_dir is None:
+            durable_dir = os.path.join(workdir, "coord")
+        print(f"spawned {len(procs)} shard servers: {', '.join(hosts)}")
 
-    prompts = rng.integers(0, cfg.vocab_size, (args.requests, args.prompt_len),
-                           dtype=np.int32)
-    nn_ids, scores = engine.retrieve(prompts)
-    print("retrieved neighbors:", nn_ids[:, 0].tolist())
+    try:
+        rng = np.random.default_rng(args.seed)
+        params = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
+        engine = MemoryAugmentedEngine(cfg, params, ServeConfig(
+            capacity=capacity, max_new_tokens=args.max_new,
+            s_cache=args.doc_len + args.prompt_len + args.max_new + 32,
+            context_tokens=min(32, args.doc_len),
+            shards=args.shards if hosts is None else 1,
+            hosts=hosts, durable_dir=durable_dir))
 
-    t0 = time.time()
-    out = engine.generate(prompts)
-    dt = time.time() - t0
-    print(f"generated {args.requests}x{args.max_new} tokens in {dt:.2f}s "
-          f"({args.requests * args.max_new / dt:.1f} tok/s)")
+        docs = rng.integers(0, cfg.vocab_size, (args.docs, args.doc_len),
+                            dtype=np.int32)
+        t0 = time.time()
+        ids = engine.insert_documents(docs)
+        print(f"ingested {len(ids)} docs in {time.time() - t0:.2f}s; "
+              f"memory hash {engine.memory_hash():#x}")
 
-    replay_hash = engine.replay_log_fresh()
-    live_hash = engine.state_hash()
-    assert replay_hash == live_hash, "replay diverged!"
-    print(f"audit: replay(S0, log) hash {replay_hash:#x} == live state ✓")
+        prompts = rng.integers(0, cfg.vocab_size,
+                               (args.requests, args.prompt_len),
+                               dtype=np.int32)
+        nn_ids, scores = engine.retrieve(prompts)
+        print("retrieved neighbors:", nn_ids[:, 0].tolist())
+
+        t0 = time.time()
+        out = engine.generate(prompts)
+        dt = time.time() - t0
+        print(f"generated {args.requests}x{args.max_new} tokens in {dt:.2f}s "
+              f"({args.requests * args.max_new / dt:.1f} tok/s)")
+
+        replay_hash = engine.replay_log_fresh()
+        live_hash = engine.state_hash()
+        assert replay_hash == live_hash, "replay diverged!"
+        print(f"audit: replay(S0, log) hash {replay_hash:#x} == live state ✓")
+        engine.close()
+    finally:
+        for proc in procs:
+            proc.terminate()
+        for proc in procs:
+            proc.wait(timeout=10)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,38 @@
+"""Networked shard serving + log-shipping replication (DESIGN.md §8).
+
+The deterministic substrate's network story: a small length-prefixed wire
+protocol whose every frame carries a digest (``protocol``), a per-process
+shard host wrapping one ``DurableStore`` plus its applied state
+(``server``), a client implementing the same interface
+``ShardedDurableStore`` drives locally (``client``), and a WAL-tailing
+read replica whose every acked cursor is a verified ``state_hash`` match
+against the primary (``replica``). Determinism is what makes the network
+boundary *checkable*: a remote shard or replica is correct iff one 64-bit
+hash agrees — the same one-line contract the local conformance suite pins.
+
+Exports resolve lazily so ``python -m repro.net.server`` (the shard-host
+entry point) does not import the package's own submodule twice.
+"""
+_EXPORTS = {
+    "ProtocolError": "repro.net.protocol",
+    "RemoteError": "repro.net.protocol",
+    "TransportError": "repro.net.protocol",
+    "LocalTransport": "repro.net.client",
+    "RemoteShardClient": "repro.net.client",
+    "SocketTransport": "repro.net.client",
+    "remote_sharded_query": "repro.net.client",
+    "ReplicaDivergence": "repro.net.replica",
+    "ReplicaStore": "repro.net.replica",
+    "ShardHost": "repro.net.server",
+    "ShardServer": "repro.net.server",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    module = _EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module 'repro.net' has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(module), name)

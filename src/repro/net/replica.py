@@ -1,0 +1,176 @@
+"""Log-shipping read replica with verify-then-ack (DESIGN.md §8).
+
+A ``ReplicaStore`` follows one primary shard host by tailing its durable
+command log through the wire protocol and replaying it locally — the
+paper's core move (the log IS the memory) applied to read scaling. The
+safety discipline is *verify, commit, ack*, in that order:
+
+  1. TAIL ships the commands [cursor, t_end) together with the primary's
+     ``hash_pytree`` at ``t_end``;
+  2. the replica applies them to a **candidate** state and compares its
+     own hash — a mismatch raises ``ReplicaDivergence`` and commits
+     nothing (the replica's served state never silently diverges);
+  3. only a verified candidate is committed (and, for a durable replica,
+     appended to the replica's own WAL first), and only a committed
+     cursor is acked back — so the primary's view of a replica's cursor
+     is always a *proven* bit-identical state, and the primary re-checks
+     the hash on ack anyway (both ends verify; neither trusts).
+
+Deliveries may be dropped, duplicated, delayed or reordered by the
+transport: TAIL is a pure read (re-asking is harmless), the local append
+happens once per verified advance, and the ack is idempotent — so the
+replica converges to the primary's exact state under any at-least-once
+schedule, which is precisely what tests/test_replication.py's
+fault-injection suite drives."""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core import hashing, machine, query as query_lib
+from repro.core.durability import DurableStore
+from repro.core.shard_wal import live_count
+from repro.core.state import MemoryState
+from repro.net import protocol as p
+
+
+class ReplicaDivergence(ValueError):
+    """The replica replayed the primary's own log and got a different
+    state hash — replication is wrong (or the shipped log / advertised
+    hash was tampered with), and serving must not continue from here."""
+
+
+class ReplicaStore:
+    """A read replica of one primary shard host.
+
+    ``primary`` is anything with the client replication surface —
+    ``tail(from_t, max_commands=...) -> (log, t_end, hash)`` and
+    ``replica_ack(replica_id, t, hash) -> t`` (a ``RemoteShardClient``
+    over any transport). With a ``directory`` the replica keeps its own
+    ``DurableStore`` (genesis required on first boot) and survives a kill:
+    restart recovery rebuilds the state from the local WAL and catch-up
+    resumes from the durable cursor. Without one, it is a pure in-memory
+    follower."""
+
+    def __init__(self, primary, genesis: Optional[MemoryState] = None, *,
+                 directory: Optional[str | os.PathLike] = None,
+                 replica_id: int = 0, ef_construction: int = 32):
+        self.primary = primary
+        self.replica_id = replica_id
+        self.ef_construction = ef_construction
+        self.store: Optional[DurableStore] = None
+        if directory is not None:
+            self.store = DurableStore(directory, genesis)
+            self.state, self._hash, self.t = self.store.recover(
+                ef_construction=ef_construction)
+        else:
+            if genesis is None:
+                raise ValueError("an in-memory replica needs a genesis "
+                                 "state (or give it a directory)")
+            if int(genesis.version) != 0:
+                raise ValueError("replica genesis must be at t=0")
+            self.state = genesis
+            self._hash = hashing.hash_pytree(genesis)
+            self.t = 0
+
+    # ------------------------------------------------------------------ #
+    # following the primary
+    # ------------------------------------------------------------------ #
+
+    def sync(self, *, max_commands: int = 0) -> int:
+        """One catch-up step: tail from the replica's cursor, verify, then
+        commit + ack. Returns the new cursor (unchanged when the primary
+        has nothing new). Raises ``ReplicaDivergence`` on a hash mismatch
+        — nothing is committed in that case — and lets transport faults
+        (``TransportError`` / ``ProtocolError``) propagate: the step is
+        idempotent, so the caller just runs it again."""
+        log, t_end, advertised = self.primary.tail(
+            self.t, max_commands=max_commands)
+        if t_end == self.t:
+            # nothing new; still re-verify our own position against the
+            # primary (a free divergence tripwire on idle syncs)
+            if advertised != self._hash:
+                raise ReplicaDivergence(
+                    f"replica at t={self.t} has hash {self._hash:#x}, "
+                    f"primary advertises {advertised:#x}")
+            self._ack()
+            return self.t
+        if len(log) != t_end - self.t:
+            raise p.ProtocolError(
+                f"tail shipped {len(log)} commands for "
+                f"[{self.t}, {t_end})")
+        candidate = machine.bulk_apply(
+            self.state, log, ef_construction=self.ef_construction)
+        h = hashing.hash_pytree(candidate)
+        if h != advertised:
+            raise ReplicaDivergence(
+                f"replaying [{self.t}, {t_end}) produced {h:#x}, primary "
+                f"advertises {advertised:#x}; refusing the cursor")
+        # verified: make it durable first (a crash between append and the
+        # state commit is repaired by recover() — the WAL is authoritative)
+        if self.store is not None:
+            self.store.append(log)
+        self.state = candidate
+        self._hash = h
+        self.t = t_end
+        self._ack()
+        return self.t
+
+    def _ack(self) -> None:
+        self.primary.replica_ack(self.replica_id, self.t, self._hash)
+
+    def catch_up(self, *, max_commands: int = 0, max_rounds: int = 64
+                 ) -> int:
+        """Run ``sync`` until the replica reaches the primary's cursor,
+        riding through transport faults (lost/reordered messages) but
+        never through divergence. Returns the final cursor."""
+        for _ in range(max_rounds):
+            t_before = self.t
+            try:
+                self.sync(max_commands=max_commands)
+            except (p.TransportError, p.ProtocolError):
+                continue  # the step is idempotent: just ask again
+            if self.t == t_before:
+                return self.t  # a fault-free round with no progress: caught up
+        return self.t
+
+    def checkpoint(self) -> None:
+        """Snapshot the replica's own verified state (durable replicas
+        only) — bounds restart catch-up to the WAL tail past the newest
+        snapshot."""
+        if self.store is None:
+            raise ValueError("in-memory replica has nothing to checkpoint")
+        self.store.checkpoint(self.state)
+
+    # ------------------------------------------------------------------ #
+    # serving reads
+    # ------------------------------------------------------------------ #
+
+    def state_hash(self) -> int:
+        """Hash of the replica's verified applied state — equal to the
+        primary's at the same cursor, by construction (that equality is
+        the ack precondition)."""
+        return self._hash
+
+    def retrieve(self, queries_raw, k: int, *, ef: int = 64,
+                 use_kernel: bool = False, route: str = "auto"
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """Planned read on the replica's state: same planner, same routes,
+        same bits as the primary at the same cursor — the read-scaling
+        path. Returns host (ids [nq, k], scores [nq, k])."""
+        plan = query_lib.plan_query(live_count(self.state), k, ef,
+                                    use_kernel=use_kernel, route=route)
+        ids, scores = query_lib.execute_plan(self.state, queries_raw, k,
+                                             plan)
+        return np.asarray(ids), np.asarray(scores)
+
+    def retrieval_hash(self, queries_raw, k: int, **kw) -> int:
+        ids, scores = self.retrieve(queries_raw, k, **kw)
+        return query_lib.retrieval_hash(ids, scores)
+
+    def close(self) -> None:
+        close = getattr(self.primary, "close", None)
+        if close is not None:
+            close()

@@ -30,6 +30,12 @@ Two serving modes share this one class (DESIGN.md §7):
   ``ShardedDurableStore`` (per-shard WALs + snapshots under one global
   cursor), reads fanned out per shard and merged with the one
   order-invariant (score, id) combine (``query.sharded_host_query``).
+* ``ServeConfig(shards=N, hosts=[...])`` — the networked engine
+  (DESIGN.md §8): the same sharded-layout machinery, but durability and
+  retrieval fan out to per-process shard hosts over the deterministic wire
+  protocol (``net/``); the engine's local sharded state stays as the audit
+  twin, so every remote append, checkpoint and answer is checkable against
+  it by hash.
 
 The cross-mode conformance contract (tests/test_conformance.py): both modes
 fed the same documents allocate the same ids, append the same command log,
@@ -74,6 +80,15 @@ class ServeConfig:
     # the TOTAL arena (split evenly across shards; a single shard filling up
     # rejects its inserts exactly like a full flat arena would).
     shards: int = 1
+    # networked topology (DESIGN.md §8): "host:port" shard servers
+    # (``python -m repro.net.server``), one per shard. Ingest routing,
+    # grouped append, planned retrieval fan-in, checkpoint, recover and
+    # rollback then run over the wire through ``net.RemoteShardClient``s,
+    # while the engine keeps its local sharded-layout state as the audit
+    # twin — every remote answer is checkable against it by hash. Requires
+    # ``durable_dir`` (the coordinator's own metadata directory); when
+    # ``shards`` is left at 1 it is inferred as ``len(hosts)``.
+    hosts: Optional[List[str]] = None
     # read-path planning (DESIGN.md §4): the planner picks exact-scan vs
     # HNSW per request from static facts; "auto" applies the planner rules,
     # "exact"/"hnsw" force a route
@@ -106,12 +121,25 @@ class MemoryAugmentedEngine:
         n = serve_cfg.shards
         if n < 1:
             raise ValueError(f"shards must be >= 1, got {n}")
+        if serve_cfg.hosts is not None:
+            if n == 1:
+                n = len(serve_cfg.hosts)
+            elif n != len(serve_cfg.hosts):
+                raise ValueError(
+                    f"shards={n} but {len(serve_cfg.hosts)} hosts given")
+            if serve_cfg.durable_dir is None:
+                raise ValueError(
+                    "networked serving (hosts=[...]) needs durable_dir: the "
+                    "coordinator keeps its merged-hash records there")
         if serve_cfg.capacity % n:
             raise ValueError(
                 f"capacity {serve_cfg.capacity} must divide evenly across "
                 f"{n} shards")
         self.n_shards = n
-        if n == 1:
+        # the layout switch: networked serving uses the sharded-layout
+        # machinery even at one shard (its durable twin is a fleet of one)
+        self._layout_sharded = (n > 1) or (serve_cfg.hosts is not None)
+        if not self._layout_sharded:
             self.memory: MemoryState = init_state(
                 serve_cfg.capacity, cfg.d_model, contract=serve_cfg.contract)
         else:
@@ -133,11 +161,25 @@ class MemoryAugmentedEngine:
         self.durable = None  # DurableStore | ShardedDurableStore | None
         self._group: Optional[wal_lib.GroupCommitWriter] = None
         self._doc_table: Optional[SideTable] = None
+        self._clients = None  # net.RemoteShardClient fleet (hosts mode)
         self._ckpt_thread: Optional[threading.Thread] = None
         self._ckpt_error: Optional[BaseException] = None
         self._last_ckpt_t = 0
         if serve_cfg.durable_dir is not None:
-            if n == 1:
+            if serve_cfg.hosts is not None:
+                # one RemoteShardClient per shard host; the sharded store
+                # drives them through the exact surface local shards expose
+                from repro.net.client import (RemoteShardClient,
+                                              SocketTransport)
+                self._clients = [
+                    RemoteShardClient(
+                        SocketTransport(h.rsplit(":", 1)[0],
+                                        int(h.rsplit(":", 1)[1])),
+                        contract=serve_cfg.contract)
+                    for h in serve_cfg.hosts]
+                self.durable = ShardedDurableStore(
+                    serve_cfg.durable_dir, backends=self._clients)
+            elif not self._layout_sharded:
                 self.durable = DurableStore(
                     serve_cfg.durable_dir, self.memory,
                     compaction=serve_cfg.compaction)
@@ -220,7 +262,7 @@ class MemoryAugmentedEngine:
         self._next_id += len(token_batches)
         batch_log = commands.insert_batch(jnp.asarray(ids), raw,
                                           self.sc.contract)
-        routed = None if self.n_shards == 1 else \
+        routed = None if not self._layout_sharded else \
             distributed.route_commands(batch_log, self.n_shards)
 
         # doc cache first: its side-table records must be durable no later
@@ -246,12 +288,12 @@ class MemoryAugmentedEngine:
             # visible, so a crash can lose at most un-acked work
             if self._doc_table is not None:
                 self._doc_table.sync()
-            if self.n_shards == 1:
+            if not self._layout_sharded:
                 self.durable.append(batch_log)
             else:
                 self.durable.append(batch_log, routed=routed)
         self.log = self.log.concat(batch_log)
-        if self.n_shards == 1:
+        if not self._layout_sharded:
             self.memory = machine.bulk_apply(self.memory, batch_log)
         else:
             for s in range(self.n_shards):
@@ -286,7 +328,14 @@ class MemoryAugmentedEngine:
             use_kernel=self.sc.use_kernel,
             exact_threshold=self.sc.exact_threshold, route=self.sc.route)
         self.last_plan = plan
-        if self.n_shards == 1:
+        if self._clients is not None:
+            # the networked read: every shard host executes the same plan
+            # on its applied state, candidates merge with the one
+            # order-invariant combine — bit-identical to the local sharded
+            # read on the same content (the conformance suite pins it)
+            from repro.net.client import remote_sharded_query
+            ids, scores = remote_sharded_query(self._clients, q_raw, k, plan)
+        elif not self._layout_sharded:
             ids, scores = query.execute_plan(self.memory, q_raw, k, plan)
         else:
             ids, scores = query.sharded_host_query(
@@ -362,6 +411,9 @@ class MemoryAugmentedEngine:
             self._group.close()
         if self._doc_table is not None:
             self._doc_table.close()
+        if self._clients is not None:
+            for c in self._clients:
+                c.close()
 
     def wait_durable(self) -> None:
         """Join any in-flight background checkpoint; re-raise its error —
@@ -397,6 +449,14 @@ class MemoryAugmentedEngine:
         self.wait_durable()  # one in flight at a time; surfaces past errors
         host_state = jax.tree.map(np.asarray, self.memory)
         self._last_ckpt_t = self._cursor()
+        if self._clients is not None:
+            # synchronous over the wire: the shard host proves the cursor +
+            # hash against its applied state at request time, so a
+            # background thread would race the next append's cursor advance
+            self.durable.checkpoint(host_state)
+            if self.sc.retain_snapshots > 0:
+                self.durable.retain(self.sc.retain_snapshots)
+            return
 
         def work():
             try:
@@ -413,7 +473,7 @@ class MemoryAugmentedEngine:
         """Rebuild the in-memory audit trail from the durable WAL(s) after
         recover/rollback, if retention kept the full history."""
         empty = commands.empty_log(self.cfg.d_model, self.sc.contract)
-        if self.n_shards == 1:
+        if not self._layout_sharded:
             try:
                 self.log = self.durable.wal.read_range(0, t)
             except ValueError:
@@ -494,7 +554,7 @@ class MemoryAugmentedEngine:
         return hashing.hash_pytree(self.memory)
 
     def snapshot_bytes(self) -> bytes:
-        if self.n_shards != 1:
+        if self._layout_sharded:
             raise ValueError(
                 "sharded engines snapshot through checkpoint() (per-shard "
                 "v2 snapshots + merged hash record), not one flat blob")
@@ -508,7 +568,7 @@ class MemoryAugmentedEngine:
         genesis slice and the merge is hashed — the sharded form of the
         same audit."""
         from repro.core import hashing
-        if self.n_shards == 1:
+        if not self._layout_sharded:
             fresh = init_state(self.sc.capacity, self.cfg.d_model,
                                contract=self.sc.contract)
             return hashing.hash_pytree(machine.replay(fresh, self.log))

@@ -24,6 +24,13 @@ it; the suite demands one answer:
   ``memory_hash()`` and one ``retrieval_hash()`` on both routes —
   including after a crash + ``recover()``, and including a SIGKILLed
   subprocess mid-grouped-ingest (the kill-at-random-point property test).
+* **across the wire.** The same grouped six-opcode ingest through real
+  ``python -m repro.net.server`` subprocesses (a ``ShardedDurableStore``
+  on ``RemoteShardClient`` backends) lands in the SAME three assertions:
+  one ``hash_pytree`` against the in-process sharded store, one
+  ``content_hash`` against the flat replay, one ``retrieval_hash`` from
+  ``remote_sharded_query`` — including after one shard-server process is
+  SIGKILLed mid-grouped-ingest and ``recover()`` reconciles over the wire.
 """
 import os
 import signal
@@ -383,3 +390,133 @@ def test_sigkill_during_grouped_sharded_ingest(model, tmp_path, seed):
     assert (eng.retrieval_hash(prompts, 3)
             == query.retrieval_hash(ids_ref, s_ref)), \
         "recovered retrieval diverged from the uninterrupted reference"
+
+
+# --------------------------------------------------------------------------- #
+# across the wire: subprocess shard servers join the equivalence class
+# --------------------------------------------------------------------------- #
+
+
+def _spawn_shard_server(directory, *, capacity=None):
+    """One ``python -m repro.net.server`` subprocess on an ephemeral port;
+    returns (proc, port) once the LISTENING line confirms it accepts."""
+    argv = [sys.executable, "-m", "repro.net.server",
+            "--dir", str(directory), "--port", "0"]
+    if capacity is not None:
+        argv += ["--capacity", str(capacity), "--dim", str(D)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.Popen(argv, stdout=subprocess.PIPE, text=True, env=env)
+    line = proc.stdout.readline().strip()
+    assert line.startswith("LISTENING "), f"server failed to start: {line!r}"
+    port = int(line.split()[1])
+    assert proc.stdout.readline().startswith("CURSOR ")
+    return proc, port
+
+
+def _net_store(tmp, ns, *, fresh=True):
+    """(procs, clients, store): a ShardedDurableStore over ``ns`` real
+    shard-server subprocesses reached through SocketTransport."""
+    from repro.net.client import RemoteShardClient, SocketTransport
+    procs, clients = [], []
+    for s in range(ns):
+        proc, port = _spawn_shard_server(
+            tmp / f"srv_{s}", capacity=CAP_PER_SHARD if fresh else None)
+        procs.append(proc)
+        clients.append(RemoteShardClient(SocketTransport("127.0.0.1", port)))
+    store = shard_wal.ShardedDurableStore(tmp / "coord", backends=clients)
+    return procs, clients, store
+
+
+@pytest.mark.parametrize("seed", (11, 29))
+def test_networked_store_joins_the_equivalence_class(tmp_path, seed):
+    """Randomized six-opcode grouped ingest through subprocess shard
+    servers: one hash_pytree vs the in-process sharded store, one
+    content_hash vs the flat replay, one retrieval_hash from the wire
+    fan-in — the conformance assertions, unchanged, over TCP."""
+    from repro.net.client import remote_sharded_query
+    ns = 2
+    log = _random_log(seed, 24, id_space=ID_SPACE)
+    batches = _batches(log, 6)
+    q = _queries(seed)
+
+    sh_genesis = distributed.init_sharded_host(ns, CAP_PER_SHARD, D)
+    local = shard_wal.ShardedDurableStore(tmp_path / "local", sh_genesis,
+                                          n_shards=ns)
+    _grouped_ingest(local, batches)
+    state_l, h_l = local.restore_at(local.t)
+
+    procs, clients, net = _net_store(tmp_path, ns)
+    try:
+        _grouped_ingest(net, batches)
+        assert net.t == local.t, "wire ingest fell out of lockstep"
+        state_n, h_n = net.restore_at(net.t)
+        assert h_n == h_l, "networked merged state != in-process store"
+
+        flat = machine.replay(init_state(ns * CAP_PER_SHARD, D), log)
+        assert hashing.content_hash(state_n) == hashing.content_hash(flat)
+
+        plan = query.plan_query(shard_wal.live_count(state_l), K, EF)
+        i_n, s_n = remote_sharded_query(clients, q, K, plan)
+        i_l, s_l = shard_wal.exact_search_sharded(state_l, ns, q, K)
+        i_f, s_f = search.exact_search(flat, q, K)
+        assert (query.retrieval_hash(i_n, s_n)
+                == query.retrieval_hash(i_l, s_l)
+                == query.retrieval_hash(i_f, s_f)), \
+            "wire retrieval diverged from the equivalence class"
+    finally:
+        for proc in procs:
+            proc.kill()
+            proc.wait(timeout=30)
+
+
+def test_sigkill_one_shard_server_mid_grouped_ingest(tmp_path):
+    """SIGKILL one shard-server process between per-shard group flushes:
+    the surviving shard committed its share, the dead one never got its
+    own. A restarted server + ``recover()`` must reconcile over the wire
+    to the acked prefix (ahead shard rolls back), hash-identical to the
+    in-process twin — then ingest resumes in lockstep."""
+    from repro.net.client import RemoteShardClient, SocketTransport
+    ns = 2
+    log = _random_log(7, 30, id_space=ID_SPACE)
+    batches = _batches(log, 6)
+    acked, straggler, rest = batches[:3], batches[3], batches[4]
+
+    sh_genesis = distributed.init_sharded_host(ns, CAP_PER_SHARD, D)
+    local = shard_wal.ShardedDurableStore(tmp_path / "local", sh_genesis,
+                                          n_shards=ns)
+    _grouped_ingest(local, acked)
+    t_acked = local.t
+
+    procs, clients, net = _net_store(tmp_path, ns)
+    try:
+        _grouped_ingest(net, acked)
+        assert net.t == t_acked
+
+        # the kill: server 1 dies; the next group lands on shard 0 only
+        procs[1].kill()
+        procs[1].wait(timeout=30)
+        with pytest.raises(OSError):  # net.TransportError subclasses it
+            net.append(straggler)
+        assert net.shards[0].t > t_acked, \
+            "shard 0 must hold its share of the torn group"
+
+        # restart the dead server on its surviving directory and rejoin
+        proc1b, port1b = _spawn_shard_server(tmp_path / "srv_1")
+        procs.append(proc1b)
+        net.shards[1] = RemoteShardClient(
+            SocketTransport("127.0.0.1", port1b))
+        state, h, t = net.recover()
+        assert t == t_acked, "recovery must land on the acked prefix"
+        assert net.shard_ts() == [t_acked, t_acked]
+        assert h == local.restore_at(t_acked)[1], \
+            "wire reconciliation diverged from the in-process twin"
+
+        # ingest resumes: both stores append the same next batch and agree
+        assert net.append(rest) == local.append(rest)
+        assert net.restore_at(net.t)[1] == local.restore_at(local.t)[1]
+    finally:
+        for proc in procs:
+            proc.kill()
+            proc.wait(timeout=30)

@@ -1,0 +1,278 @@
+"""Wire-protocol conformance: byte-frozen goldens + torn-frame properties.
+
+Every message type in repro.net.protocol is pinned three ways:
+
+  1. round trip — encode_frame(decode_frame(x)) is the identity on messages;
+  2. golden fixtures — the exact frame bytes are frozen in
+     tests/fixtures/golden_wire/ (regenerate deliberately with
+     ``PYTHONPATH=src python scripts/gen_golden_wire.py`` when WIRE_FORMAT
+     is bumped), so encoding can never drift silently;
+  3. corruption properties — every truncation point and every bit flip of
+     a valid frame decodes to ProtocolError, never to a different message.
+
+The exemplar list (``_golden_messages``) is imported by the generator
+script, mirroring how scripts/gen_golden_snapshots.py imports
+``_golden_state`` from test_durability — one source of truth for what the
+goldens contain.
+"""
+import json
+import pathlib
+
+import pytest
+
+from _pbt import given, settings
+from _pbt import strategies as st
+
+import repro  # noqa: F401
+from repro.core import commands
+from repro.net import protocol as p
+
+FIXTURES = pathlib.Path(__file__).resolve().parent / "fixtures" / "golden_wire"
+
+
+def _golden_log_bytes() -> bytes:
+    """A tiny deterministic command log blob (integer-only commands — no
+    float boundary — so the bytes are platform-invariant)."""
+    log = commands.link_cmd(3, 7, dim=4)
+    log = log.concat(commands.unlink_cmd(3, 7, dim=4))
+    log = log.concat(commands.set_meta_cmd(3, 1, 42, dim=4))
+    log = log.concat(commands.delete_cmd(7, dim=4))
+    return commands.log_to_bytes(log)
+
+
+def _golden_messages():
+    """One deterministic exemplar per wire message type: (name, msg, rid).
+
+    Field values are chosen to exercise non-default content (so a field
+    accidentally dropped from FIELDS changes the bytes) while staying
+    platform-invariant. The generator script freezes these frames into
+    tests/fixtures/golden_wire/.
+    """
+    blob = _golden_log_bytes()
+    ids = (0).to_bytes(8, "little") + (5).to_bytes(8, "little")
+    scores = (123).to_bytes(8, "little") + (-4 % (1 << 64)).to_bytes(8, "little")
+    return [
+        ("hello", p.Hello(), 1),
+        ("hello_ack",
+         p.HelloAck(dim=4, itemsize=4, contract="Q16.16", t=9,
+                    state_hash=0x1122334455667788), 1),
+        ("cursor", p.Cursor(), 2),
+        ("cursor_ack", p.CursorAck(t=13), 2),
+        ("append", p.Append(base_t=13, logs=(blob, blob)), 3),
+        ("append_ack", p.AppendAck(t=21), 3),
+        ("query",
+         p.Query(k=5, ef=64, route="exact", use_kernel=False, nq=2, dim=4,
+                 itemsize=4, data=bytes(range(32))), 4),
+        ("query_ack", p.QueryAck(nq=1, k=2, ids=ids, scores=scores), 4),
+        ("checkpoint", p.Checkpoint(t=21, expect_hash=0xDEADBEEFCAFEF00D), 5),
+        ("checkpoint_ack", p.CheckpointAck(t=21, bytes_written=4096), 5),
+        ("restore_at", p.RestoreAt(t=8), 6),
+        ("state_ack",
+         p.StateAck(t=8, state_hash=0x0123456789ABCDEF,
+                    blob=b"\x00v1-snapshot-stand-in\xff"), 6),
+        ("recover", p.Recover(), 7),
+        ("rollback", p.Rollback(t=5), 8),
+        ("rollback_ack", p.RollbackAck(t=5), 8),
+        ("tail", p.Tail(from_t=5, max_commands=128), 9),
+        ("tail_ack",
+         p.TailAck(from_t=5, t_end=9, state_hash=0xFEEDFACE01020304,
+                   log=blob), 9),
+        ("replica_ack",
+         p.ReplicaCursorAck(replica_id=7, t=9,
+                            state_hash=0xFEEDFACE01020304), 10),
+        ("replica_ack_ack", p.ReplicaCursorAckAck(t=9), 10),
+        ("state_hash", p.StateHashReq(), 11),
+        ("state_hash_ack",
+         p.StateHashAck(t=9, state_hash=0xFEEDFACE01020304), 11),
+        ("read_range", p.ReadRange(t0=2, t1=9), 12),
+        ("log_ack", p.LogAck(log=blob), 12),
+        ("retain", p.Retain(keep=2), 13),
+        ("retain_ack",
+         p.RetainAck(snapshots_dropped=3, wal_segments_dropped=2,
+                     chunks_dropped=11, oldest_snapshot=16), 13),
+        ("error",
+         p.ErrorMsg(kind="ValueError", message="cursor 99 ahead of WAL"),
+         14),
+    ]
+
+
+# --------------------------------------------------------------------------- #
+# round trip + golden coverage
+# --------------------------------------------------------------------------- #
+
+
+def test_round_trip_every_message_type():
+    for name, msg, rid in _golden_messages():
+        frame = p.encode_frame(msg, rid)
+        decoded, rid2, end = p.decode_frame(frame)
+        assert decoded == msg, name
+        assert rid2 == rid, name
+        assert end == len(frame), name
+        assert p.frame_length(frame[:p.HEADER_BYTES]) == len(frame), name
+
+
+def test_goldens_cover_every_message_type():
+    covered = {msg.TYPE for _, msg, _ in _golden_messages()}
+    assert covered == set(p.MESSAGE_TYPES), (
+        "every wire message type must have a golden exemplar")
+    names = [name for name, _, _ in _golden_messages()]
+    assert len(names) == len(set(names)) == len(p.MESSAGE_TYPES)
+
+
+def test_golden_fixture_bytes_frozen():
+    """The on-disk frames decode AND match today's encoder byte-for-byte.
+
+    A mismatch means the wire format drifted without a WIRE_FORMAT bump —
+    regenerate with scripts/gen_golden_wire.py only on a deliberate format
+    change.
+    """
+    index = json.loads((FIXTURES / "golden_wire.json").read_text())
+    assert index["wire_format"] == p.WIRE_FORMAT
+    exemplars = {name: (msg, rid) for name, msg, rid in _golden_messages()}
+    assert set(index["frames"]) == set(exemplars)
+    for name, meta in index["frames"].items():
+        frozen = (FIXTURES / f"{name}.bin").read_bytes()
+        msg, rid = exemplars[name]
+        assert p.encode_frame(msg, rid) == frozen, name
+        assert len(frozen) == meta["bytes"], name
+        decoded, rid2, _ = p.decode_frame(frozen)
+        assert decoded == msg and rid2 == rid, name
+        assert meta["msg_type"] == msg.TYPE, name
+
+
+def test_concatenated_frames_decode_in_sequence():
+    msgs = _golden_messages()
+    stream = b"".join(p.encode_frame(m, rid) for _, m, rid in msgs)
+    off = 0
+    for name, msg, rid in msgs:
+        decoded, rid2, off = p.decode_frame(stream, off)
+        assert decoded == msg and rid2 == rid, name
+    assert off == len(stream)
+
+
+# --------------------------------------------------------------------------- #
+# corruption: torn, truncated, bit-flipped — always ProtocolError
+# --------------------------------------------------------------------------- #
+
+
+def test_every_truncation_point_is_rejected():
+    """decode_frame(frame[:cut]) raises for EVERY proper prefix — a torn
+    frame can never decode as a shorter valid message."""
+    for name, msg, rid in _golden_messages():
+        frame = p.encode_frame(msg, rid)
+        for cut in range(len(frame)):
+            with pytest.raises(p.ProtocolError):
+                p.decode_frame(frame[:cut])
+
+
+@settings(max_examples=60)
+@given(st.integers(0, len(p.MESSAGE_TYPES) - 1), st.integers(0, 10 ** 9))
+def test_single_bit_flip_is_rejected(which, pos_seed):
+    _, msg, rid = _golden_messages()[which]
+    frame = bytearray(p.encode_frame(msg, rid))
+    bit = pos_seed % (len(frame) * 8)
+    frame[bit // 8] ^= 1 << (bit % 8)
+    with pytest.raises(p.ProtocolError):
+        p.decode_frame(bytes(frame))
+
+
+@settings(max_examples=40)
+@given(st.integers(0, len(p.MESSAGE_TYPES) - 1), st.integers(1, 64))
+def test_appended_garbage_does_not_confuse_offsets(which, extra):
+    """Trailing bytes after a frame are simply not consumed: next_offset
+    points exactly past the frame, and garbage alone fails to decode."""
+    _, msg, rid = _golden_messages()[which]
+    frame = p.encode_frame(msg, rid)
+    data = frame + bytes((extra * 37 + i) % 251 for i in range(extra))
+    decoded, rid2, end = p.decode_frame(data)
+    assert decoded == msg and rid2 == rid and end == len(frame)
+    with pytest.raises(p.ProtocolError):
+        p.decode_frame(data, end)
+
+
+def test_trailing_garbage_inside_payload_rejected():
+    """A payload longer than its message's canonical encoding is garbage,
+    even when the frame digest is recomputed to match."""
+    payload = p.CursorAck(t=5).encode_payload() + b"\x00"
+    import struct
+
+    from repro.core import hashing
+    head = (p.MAGIC + struct.pack("<II", p.WIRE_FORMAT, p.CURSOR_ACK)
+            + struct.pack("<QI", 1, len(payload)))
+    body = head + payload
+    frame = body + struct.pack("<Q", hashing.digest_bytes(body))
+    with pytest.raises(p.ProtocolError, match="trailing garbage"):
+        p.decode_frame(frame)
+
+
+def test_unknown_message_type_rejected():
+    import struct
+
+    from repro.core import hashing
+    head = (p.MAGIC + struct.pack("<II", p.WIRE_FORMAT, 200)
+            + struct.pack("<QI", 1, 0))
+    frame = head + struct.pack("<Q", hashing.digest_bytes(head))
+    with pytest.raises(p.ProtocolError, match="unknown message type"):
+        p.decode_frame(frame)
+
+
+def test_bad_magic_and_format_rejected():
+    frame = bytearray(p.encode_frame(p.Cursor(), 1))
+    bad_magic = b"XXXX" + bytes(frame[4:])
+    with pytest.raises(p.ProtocolError, match="magic"):
+        p.frame_length(bad_magic[:p.HEADER_BYTES])
+    bad_fmt = bytes(frame[:4]) + (99).to_bytes(4, "little") + bytes(frame[8:])
+    with pytest.raises(p.ProtocolError, match="wire format"):
+        p.frame_length(bad_fmt[:p.HEADER_BYTES])
+    with pytest.raises(p.ProtocolError, match="short frame header"):
+        p.frame_length(b"VWIR")
+
+
+def test_invalid_utf8_string_rejected():
+    frame = bytearray(p.encode_frame(p.ErrorMsg(kind="E", message="x"), 1))
+    # kind's single utf8 byte sits right after its u32 length prefix
+    idx = p.HEADER_BYTES + 4
+    assert frame[idx:idx + 1] == b"E"
+    frame[idx] = 0xFF
+    import struct
+
+    from repro.core import hashing
+    body = bytes(frame[:-p.DIGEST_BYTES])
+    frame = body + struct.pack("<Q", hashing.digest_bytes(body))
+    with pytest.raises(p.ProtocolError, match="utf8"):
+        p.decode_frame(frame)
+
+
+# --------------------------------------------------------------------------- #
+# error surfacing
+# --------------------------------------------------------------------------- #
+
+
+def test_expect_turns_error_frame_into_remote_error():
+    err = p.ErrorMsg(kind="KeyError", message="no snapshot at 7")
+    with pytest.raises(p.RemoteError) as ei:
+        p.expect(err, p.CursorAck)
+    assert ei.value.kind == "KeyError"
+    assert "no snapshot at 7" in str(ei.value)
+    assert isinstance(ei.value, ValueError)  # coordinator fallback contract
+
+
+def test_expect_rejects_wrong_ack_type():
+    with pytest.raises(p.ProtocolError, match="expected AppendAck"):
+        p.expect(p.CursorAck(t=1), p.AppendAck)
+
+
+def test_transport_error_is_oserror():
+    # the coordinator's _RESTORE_ERRORS envelope catches OSError/ValueError;
+    # both wire exceptions must land inside it for transport-agnosticism.
+    assert issubclass(p.TransportError, OSError)
+    assert issubclass(p.RemoteError, ValueError)
+    assert issubclass(p.ProtocolError, ValueError)
+
+
+def test_error_round_trips_exact_kind():
+    frame = p.encode_frame(p.ErrorMsg(kind="RuntimeError", message="m"), 9)
+    decoded, _, _ = p.decode_frame(frame)
+    with pytest.raises(p.RemoteError) as ei:
+        p.raise_if_error(decoded)
+    assert ei.value.kind == "RuntimeError"

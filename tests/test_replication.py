@@ -1,0 +1,490 @@
+"""Fault-injection replication suite (DESIGN.md §8).
+
+The property under test: a log-shipping replica either *refuses* a cursor
+or *converges to the primary's exact state hash* — never a third thing.
+Faulty transports drop, duplicate, delay, reorder and corrupt messages
+between a ``ReplicaStore`` and its primary ``ShardHost``; tampering
+transports rewrite the shipped log or the advertised hash. Under every
+schedule the acked cursor implies a proven bit-identical state
+(``ReplicaDivergence`` otherwise), the primary applies a retried APPEND
+exactly once, a SIGKILLed durable replica restarts from its own WAL and
+catches up, and the coordinator's ``recover()`` reconciles a stale remote
+shard exactly as it would a local one.
+"""
+import dataclasses
+import os
+import pathlib
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+from _pbt import given, settings
+from _pbt import strategies as st
+
+import repro  # noqa: F401
+from repro.core import boundary, distributed, hashing, query as query_lib
+from repro.core import shard_wal
+from repro.core.commands import log_to_bytes
+from repro.core.state import init_state
+from repro.net import protocol as p
+from repro.net.client import LocalTransport, RemoteShardClient
+from repro.net.replica import ReplicaDivergence, ReplicaStore
+from repro.net.server import ShardHost, ShardServer
+from test_bulk_apply import _random_log
+
+D = 8
+CAP = 32
+ID_SPACE = 12
+K = 5
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+
+
+def _genesis():
+    return init_state(CAP, D)
+
+
+def _primary(directory, *, batches=3, seed=0):
+    """A shard host with a few random mixed-opcode batches ingested through
+    a clean wire client (the writer path)."""
+    host = ShardHost(directory, _genesis())
+    writer = RemoteShardClient(LocalTransport(host))
+    for i in range(batches):
+        writer.append(_random_log(seed * 1000 + i, 5, ID_SPACE))
+    return host, writer
+
+
+def _queries(seed=0, nq=4):
+    rng = np.random.default_rng(seed)
+    return boundary.admit_query(rng.normal(size=(nq, D)).astype(np.float32))
+
+
+# --------------------------------------------------------------------------- #
+# fault-injection transports
+# --------------------------------------------------------------------------- #
+
+
+class FaultyTransport:
+    """An at-least-once adversary around a real transport: deterministically
+    (seeded) drops requests, drops responses *after* the server executed
+    them, duplicates deliveries, delays/reorders responses across requests,
+    and flips bits. Counts each injected fault so tests can assert the
+    schedule actually exercised them."""
+
+    def __init__(self, inner, seed, *, drop_req=0.0, drop_resp=0.0,
+                 duplicate=0.0, reorder=0.0, corrupt=0.0):
+        self.inner = inner
+        self.rng = np.random.default_rng(seed)
+        self.drop_req = drop_req
+        self.drop_resp = drop_resp
+        self.duplicate = duplicate
+        self.reorder = reorder
+        self.corrupt = corrupt
+        self.stash = []  # delayed responses, delivered out of order later
+        self.faults = {"drop_req": 0, "drop_resp": 0, "duplicate": 0,
+                       "reorder": 0, "corrupt": 0}
+
+    def request(self, data: bytes) -> bytes:
+        r = self.rng.random
+        if r() < self.drop_req:
+            self.faults["drop_req"] += 1
+            raise p.TransportError("injected: request dropped")
+        if r() < self.duplicate:
+            # delivered twice; the first response is discarded in transit
+            self.faults["duplicate"] += 1
+            self.inner.request(data)
+        resp = self.inner.request(data)
+        if r() < self.drop_resp:
+            self.faults["drop_resp"] += 1
+            raise p.TransportError(
+                "injected: response dropped (request DID execute)")
+        if r() < self.reorder:
+            self.faults["reorder"] += 1
+            self.stash.append(resp)
+            if len(self.stash) > 1:
+                return self.stash.pop(0)  # an older response resurfaces
+            raise p.TransportError("injected: response delayed")
+        if r() < self.corrupt:
+            self.faults["corrupt"] += 1
+            out = bytearray(resp)
+            bit = int(self.rng.integers(0, len(out) * 8))
+            out[bit // 8] ^= 1 << (bit % 8)
+            return bytes(out)
+        return resp
+
+    def close(self) -> None:
+        self.inner.close()
+
+
+class _TamperTransport:
+    """Rewrites TailAck frames in flight with a caller-supplied function —
+    the man-in-the-middle the digest can't catch (it re-signs the frame),
+    so the *content*-level checks must."""
+
+    def __init__(self, inner, rewrite):
+        self.inner = inner
+        self.rewrite = rewrite
+
+    def request(self, data: bytes) -> bytes:
+        resp = self.inner.request(data)
+        msg, rid, _ = p.decode_frame(resp)
+        if isinstance(msg, p.TailAck) and msg.t_end > msg.from_t:
+            return p.encode_frame(self.rewrite(msg), rid)
+        return resp
+
+    def close(self) -> None:
+        self.inner.close()
+
+
+def _replica_over(host, transport_factory, **kw):
+    """A ReplicaStore whose wire to ``host`` goes through
+    ``transport_factory(LocalTransport(host))`` — the handshake runs clean
+    so construction never depends on the fault schedule."""
+    client = RemoteShardClient(LocalTransport(host))
+    client.transport = transport_factory(LocalTransport(host))
+    return ReplicaStore(client, _genesis(), **kw)
+
+
+# --------------------------------------------------------------------------- #
+# convergence under lossy schedules
+# --------------------------------------------------------------------------- #
+
+
+@settings(max_examples=5)
+@given(st.integers(0, 10 ** 6))
+def test_replica_converges_under_lossy_transport(seed):
+    """Drop/duplicate/delay/reorder/corrupt at aggressive rates: the
+    replica still converges to the primary's exact state hash, the primary
+    records the proven cursor, and replica reads are bit-identical."""
+    with tempfile.TemporaryDirectory() as td:
+        host, _ = _primary(pathlib.Path(td) / "primary", batches=3,
+                           seed=seed)
+        faulty = {}
+
+        def factory(inner):
+            faulty["t"] = FaultyTransport(
+                inner, seed + 1, drop_req=0.15, drop_resp=0.15,
+                duplicate=0.15, reorder=0.15, corrupt=0.10)
+            return faulty["t"]
+
+        rep = _replica_over(host, factory, replica_id=3)
+        t = rep.catch_up(max_commands=2, max_rounds=400)
+
+        assert t == host.store.t
+        assert rep.state_hash() == host.state_hash()
+        assert host.replica_cursors[3] == t  # the ack round-tripped
+        q = _queries(seed)
+        plan = query_lib.plan_query(shard_wal.live_count(host.state), K, 64)
+        ids, scores = query_lib.execute_plan(host.state, q, K, plan)
+        assert rep.retrieval_hash(q, K) == query_lib.retrieval_hash(
+            ids, scores)
+        assert sum(faulty["t"].faults.values()) > 0, \
+            "the schedule injected no faults — the test proved nothing"
+
+
+def test_replica_interleaved_with_ingest_under_faults():
+    """Catch-up between ingest bursts: every converged checkpoint along the
+    way is hash-identical, under a lossy schedule throughout."""
+    with tempfile.TemporaryDirectory() as td:
+        host = ShardHost(pathlib.Path(td) / "primary", _genesis())
+        writer = RemoteShardClient(LocalTransport(host))
+        rep = _replica_over(
+            host,
+            lambda inner: FaultyTransport(inner, 42, drop_req=0.2,
+                                          drop_resp=0.2, duplicate=0.2),
+            replica_id=9)
+        for i in range(4):
+            writer.append(_random_log(7 * i + 1, 4, ID_SPACE))
+            t = rep.catch_up(max_commands=3, max_rounds=200)
+            assert t == host.store.t
+            assert rep.state_hash() == host.state_hash()
+        assert host.replica_cursors[9] == host.store.t
+
+
+# --------------------------------------------------------------------------- #
+# refusal: tampered logs / hashes never become served state
+# --------------------------------------------------------------------------- #
+
+
+def test_tampered_hash_is_refused_and_nothing_commits():
+    with tempfile.TemporaryDirectory() as td:
+        host, _ = _primary(pathlib.Path(td) / "primary")
+        rep = _replica_over(
+            host,
+            lambda inner: _TamperTransport(
+                inner,
+                lambda m: dataclasses.replace(
+                    m, state_hash=m.state_hash ^ 1)),
+            replica_id=1)
+        h0, t0 = rep.state_hash(), rep.t
+        with pytest.raises(ReplicaDivergence):
+            rep.sync()
+        # refused means refused: no cursor advance, no state change, no ack
+        assert (rep.t, rep.state_hash()) == (t0, h0)
+        assert host.replica_cursors == {}
+
+
+def test_truncated_shipped_log_is_a_protocol_error():
+    """A tail whose log is shorter than its claimed [from_t, t_end) range
+    is rejected before any replay — torn shipping can't half-apply."""
+    with tempfile.TemporaryDirectory() as td:
+        host, _ = _primary(pathlib.Path(td) / "primary")
+
+        def chop(m):
+            from repro.core.commands import log_from_bytes
+            log = log_from_bytes(m.log, host.contract)
+            return dataclasses.replace(
+                m, log=log_to_bytes(log.slice(0, len(log) - 1)))
+
+        rep = _replica_over(
+            host, lambda inner: _TamperTransport(inner, chop), replica_id=2)
+        with pytest.raises(p.ProtocolError):
+            rep.sync()
+        assert rep.t == 0 and host.replica_cursors == {}
+
+
+def test_idle_sync_reverifies_position():
+    """The no-news tail still compares hashes — a replica that silently
+    diverged (bit rot, buggy local mutation) is caught on its next idle
+    sync, not at the next write."""
+    with tempfile.TemporaryDirectory() as td:
+        host, _ = _primary(pathlib.Path(td) / "primary")
+        rep = _replica_over(host, lambda inner: inner, replica_id=5)
+        rep.catch_up()
+        assert rep.state_hash() == host.state_hash()
+        rep._hash ^= 1  # simulated silent corruption of the served state
+        with pytest.raises(ReplicaDivergence):
+            rep.sync()
+
+
+def test_primary_refuses_divergent_replica_ack():
+    """Verification is two-ended: even a replica that *claims* a cursor
+    with the wrong hash is refused by the primary's own check."""
+    with tempfile.TemporaryDirectory() as td:
+        host, _ = _primary(pathlib.Path(td) / "primary")
+        t = host.store.t
+        good = host.state_hash()
+        resp = host.handle(p.ReplicaCursorAck(replica_id=4, t=t,
+                                              state_hash=good ^ 1))
+        assert isinstance(resp, p.ErrorMsg) and resp.kind == "ValueError"
+        assert host.replica_cursors == {}
+        resp = host.handle(p.ReplicaCursorAck(replica_id=4, t=t,
+                                              state_hash=good))
+        assert isinstance(resp, p.ReplicaCursorAckAck)
+        assert host.replica_cursors == {4: t}
+
+
+# --------------------------------------------------------------------------- #
+# exactly-once ingest over an at-least-once transport
+# --------------------------------------------------------------------------- #
+
+
+def test_duplicate_append_redelivery_is_reacked_not_reapplied():
+    with tempfile.TemporaryDirectory() as td:
+        host = ShardHost(pathlib.Path(td) / "s", _genesis())
+        blob = log_to_bytes(_random_log(3, 5, ID_SPACE))
+        ack = host.handle(p.Append(base_t=0, logs=(blob,)))
+        assert isinstance(ack, p.AppendAck)
+        t, h = ack.t, host.state_hash()
+        # byte-identical redelivery (the ack was lost): re-ack, no re-apply
+        ack2 = host.handle(p.Append(base_t=0, logs=(blob,)))
+        assert isinstance(ack2, p.AppendAck) and ack2.t == t
+        assert host.store.t == t and host.state_hash() == h
+        # a DIFFERENT group at the same stale base is not a duplicate
+        blob2 = log_to_bytes(_random_log(4, 5, ID_SPACE))
+        err = host.handle(p.Append(base_t=0, logs=(blob2,)))
+        assert isinstance(err, p.ErrorMsg) and err.kind == "ValueError"
+        assert host.store.t == t and host.state_hash() == h
+
+
+def test_append_retry_after_lost_ack_applies_exactly_once():
+    class DropFirstAppendAck:
+        def __init__(self, inner):
+            self.inner = inner
+            self.dropped = False
+
+        def request(self, data):
+            msg, _, _ = p.decode_frame(data)
+            resp = self.inner.request(data)
+            if isinstance(msg, p.Append) and not self.dropped:
+                self.dropped = True  # the server DID commit; the ack died
+                raise p.TransportError("injected: append ack lost")
+            return resp
+
+        def close(self):
+            self.inner.close()
+
+    with tempfile.TemporaryDirectory() as td:
+        host = ShardHost(pathlib.Path(td) / "s", _genesis())
+        client = RemoteShardClient(LocalTransport(host))
+        client.transport = DropFirstAppendAck(LocalTransport(host))
+        log = _random_log(11, 6, ID_SPACE)
+        with pytest.raises(p.TransportError):
+            client.append(log)
+        t = client.append(log)  # stale base_t -> duplicate path -> re-ack
+        assert t == client.t == host.store.t == len(log)
+        # reference: the same log applied once
+        ref = ShardHost(pathlib.Path(td) / "ref", _genesis())
+        ref.handle(p.Append(base_t=0, logs=(log_to_bytes(log),)))
+        assert host.state_hash() == ref.state_hash()
+
+
+# --------------------------------------------------------------------------- #
+# durable replica: simulated crash + real SIGKILL
+# --------------------------------------------------------------------------- #
+
+
+@settings(max_examples=4)
+@given(st.integers(0, 10 ** 6), st.integers(1, 6))
+def test_crashed_durable_replica_resumes_from_its_wal(seed, cut):
+    """Property: drop a durable replica mid-catch-up (no close, no
+    flush — the object just dies), reopen the directory, and the restarted
+    replica resumes from its durable cursor and converges."""
+    with tempfile.TemporaryDirectory() as td:
+        host, _ = _primary(pathlib.Path(td) / "primary", batches=3,
+                           seed=seed)
+        rdir = pathlib.Path(td) / "replica"
+        rep = ReplicaStore(RemoteShardClient(LocalTransport(host)),
+                           _genesis(), directory=rdir, replica_id=6)
+        for _ in range(cut):
+            rep.sync(max_commands=2)
+        t_crash = rep.t
+        del rep  # SIGKILL stand-in: nothing is closed or flushed
+
+        rep2 = ReplicaStore(RemoteShardClient(LocalTransport(host)),
+                            directory=rdir, replica_id=6)
+        assert rep2.t == t_crash, "durable cursor survived the crash"
+        assert rep2.catch_up() == host.store.t
+        assert rep2.state_hash() == host.state_hash()
+
+
+_REPLICA_FOLLOW = """\
+import pathlib
+import sys
+import time
+
+import repro  # noqa: F401
+from repro.core.state import init_state
+from repro.net.client import RemoteShardClient, SocketTransport
+from repro.net.replica import ReplicaStore
+
+port, rdir, rounds = int(sys.argv[1]), pathlib.Path(sys.argv[2]), int(sys.argv[3])
+genesis = None
+if not (rdir / "store.json").exists():
+    genesis = init_state({cap}, {dim})
+rep = ReplicaStore(RemoteShardClient(SocketTransport("127.0.0.1", port)),
+                   genesis, directory=rdir, replica_id=7)
+if rounds:
+    for _ in range(rounds):
+        print("ACKED", rep.sync(max_commands=2), flush=True)
+    time.sleep(600)  # hold the cursor until the parent SIGKILLs us
+else:
+    t = rep.catch_up()
+    print("DONE", t, hex(rep.state_hash()), flush=True)
+"""
+
+
+def test_sigkilled_replica_restarts_and_catches_up(tmp_path):
+    """The real thing: a durable replica subprocess follows a TCP primary,
+    is SIGKILLed mid-stream, the primary keeps ingesting, and the
+    restarted process converges to the primary's exact hash."""
+    host, writer = _primary(tmp_path / "primary", batches=4, seed=77)
+    server = ShardServer(host).start()
+    script = tmp_path / "replica_follow.py"
+    script.write_text(_REPLICA_FOLLOW.format(cap=CAP, dim=D))
+    env = dict(os.environ, PYTHONPATH=str(SRC))
+    argv = [sys.executable, str(script), str(server.port),
+            str(tmp_path / "replica")]
+    try:
+        proc = subprocess.Popen(argv + ["2"], stdout=subprocess.PIPE,
+                                text=True, env=env)
+        try:
+            acked = [proc.stdout.readline().split() for _ in range(2)]
+        finally:
+            proc.kill()  # SIGKILL — no atexit, no flush, no close
+            proc.wait(timeout=30)
+        assert [w[0] for w in acked] == ["ACKED", "ACKED"]
+        t_acked = int(acked[-1][1])
+        assert 0 < t_acked < host.store.t
+        assert host.replica_cursors[7] == t_acked
+
+        # the primary moves on while the replica is dead
+        writer.append(_random_log(99, 5, ID_SPACE))
+
+        done = subprocess.run(argv + ["0"], stdout=subprocess.PIPE,
+                              text=True, env=env, timeout=300, check=True)
+        word, t_s, h_s = done.stdout.strip().splitlines()[-1].split()
+        assert word == "DONE"
+        assert int(t_s) == host.store.t
+        assert int(h_s, 16) == host.state_hash()
+        assert host.replica_cursors[7] == host.store.t
+    finally:
+        server.close()
+
+
+# --------------------------------------------------------------------------- #
+# coordinator recovery over the wire (the transport-agnostic regression)
+# --------------------------------------------------------------------------- #
+
+
+def test_recover_rolls_back_ahead_shards_when_remote_reports_stale_cursor(
+        tmp_path):
+    """A remote shard that lost its recent commits (stale durable cursor)
+    must make ``recover()`` roll the *ahead* shards back to the global
+    minimum — the same min-cursor reconciliation as local shards, driven
+    entirely through the wire client. Regression for the recovery path
+    crashing on remote error types instead of reconciling."""
+    n = 2
+    genesis = distributed.init_sharded_host(n, CAP, D)
+    hosts = [ShardHost(tmp_path / f"host_{s}",
+                       distributed.shard_slice(genesis, s, n))
+             for s in range(n)]
+    clients = [RemoteShardClient(LocalTransport(h)) for h in hosts]
+    remote = shard_wal.ShardedDurableStore(tmp_path / "coord",
+                                           backends=clients)
+    local = shard_wal.ShardedDurableStore(tmp_path / "local", genesis,
+                                          n_shards=n)
+
+    batches = [_random_log(50 + i, 6, ID_SPACE) for i in range(3)]
+    advances = [remote.planned_advance(b) for b in batches]
+    for b in batches:
+        assert remote.append(b) == local.append(b)
+    t_full = remote.t
+    assert remote.restore_at(t_full)[1] == local.restore_at(t_full)[1]
+
+    # shard 1 loses its last group (crash before that flush landed)
+    t_stale = t_full - advances[-1]
+    hosts[1].handle(p.Rollback(t=t_stale))
+    clients[1].refresh_t()
+    assert remote.shard_ts() == [t_full, t_stale]
+    with pytest.raises(RuntimeError, match="diverged"):
+        remote.append(batches[0])  # unreconciled stores refuse new appends
+
+    state, h, t = remote.recover()
+    assert t == t_stale
+    assert remote.shard_ts() == [t_stale, t_stale]
+    assert h == local.restore_at(t_stale)[1], \
+        "wire reconciliation diverged from the local twin"
+    # and the reconciled store ingests again, staying in lockstep
+    assert remote.append(batches[0]) == t_stale + advances[0]
+
+
+def test_remote_refusals_arrive_as_local_exception_families(tmp_path):
+    """RemoteError subclasses ValueError and TransportError subclasses
+    OSError — so coordinator code written for local shards (restore
+    fallbacks, rollback refusals) needs no wire-specific handling."""
+    host = ShardHost(tmp_path / "s", _genesis())
+    client = RemoteShardClient(LocalTransport(host))
+    client.append(_random_log(1, 4, ID_SPACE))
+    with pytest.raises(ValueError):
+        client.rollback_to(client.t + 10)  # refused server-side
+    with pytest.raises(ValueError):
+        client.restore_at(10 ** 6)
+    from repro.net.client import SocketTransport
+    dead = RemoteShardClient.__new__(RemoteShardClient)
+    dead.transport = SocketTransport("127.0.0.1", 1)  # nothing listens here
+    dead._rid = 0
+    with pytest.raises(OSError):
+        dead._request(p.Cursor(), p.CursorAck)
