@@ -9,7 +9,12 @@ the primary's exact state would be meaningless):
      log shipping costs the write path;
   2. cold-replica catch-up: a fresh replica tails the full log, and the
      per-command lag is reported; its final ``state_hash()`` must equal
-     the primary's and its ``retrieval_hash()`` the primary-side read's.
+     the primary's and its ``retrieval_hash()`` the primary-side read's —
+     serial and pipelined (a second prefetch connection requests slice
+     t+1 while slice t applies, DESIGN.md §9), same hashes either way;
+  3. replica-read QPS: the same planned batch retrieval served by the
+     primary vs by a caught-up replica — the read-scaling payoff — with
+     the replica's answers hash-checked against the primary's.
 
 Everything runs through the real wire protocol (``LocalTransport`` is the
 full encode/decode round trip), so the measured numbers include codec +
@@ -109,7 +114,8 @@ def table_ingest(n: int, step: int) -> None:
 
 
 def table_catch_up(n: int, step: int) -> None:
-    """Cold-replica catch-up lag over the full durable log."""
+    """Cold-replica catch-up lag over the full durable log, serial vs
+    pipelined TAIL (prefetch slice t+1 while slice t applies)."""
     from repro.core.state import init_state
     batches = _insert_batches(n, step, seed=3)
     q = _queries(seed=4)
@@ -122,34 +128,103 @@ def table_catch_up(n: int, step: int) -> None:
         for b in batches:
             writer.append(b)
 
+        rh_primary = _primary_retrieval_hash(host, q)
+        # warmup: one untimed cold catch-up compiles the replay path, so
+        # the serial row is not charged for JIT the pipelined row reuses
+        warm = ReplicaStore(RemoteShardClient(LocalTransport(host)),
+                            init_state(2 * n, DIM, hnsw_levels=1,
+                                       hnsw_degree=2),
+                            replica_id=8)
+        warm.catch_up(max_commands=step)
+        warm.close()
+        for mode in ("serial", "pipelined"):
+            prefetch = (RemoteShardClient(LocalTransport(host))
+                        if mode == "pipelined" else None)
+            rep = ReplicaStore(RemoteShardClient(LocalTransport(host)),
+                               init_state(2 * n, DIM, hnsw_levels=1,
+                                          hnsw_degree=2),
+                               replica_id=9, prefetch=prefetch)
+            t0 = time.perf_counter()
+            t = rep.catch_up(max_commands=step,
+                             max_rounds=2 * (n // step + 2),
+                             pipeline=mode == "pipelined")
+            dt = time.perf_counter() - t0
+
+            state_ok = (t == host.store.t
+                        and rep.state_hash() == host.state_hash())
+            read_ok = rep.retrieval_hash(q, K) == rh_primary
+            emit(f"replica_catch_up_{mode}", dt / n * 1e6,
+                 f"commands={n};seconds={dt:.3f};"
+                 f"state_hash_equal={state_ok};"
+                 f"retrieval_hash_equal={read_ok}")
+            if not (state_ok and read_ok):
+                raise RuntimeError(
+                    f"{mode} caught-up replica diverged from the primary "
+                    f"(t={t} vs {host.store.t})")
+            rep.close()
+
+
+def table_replica_read_qps(n: int, step: int, *, rounds: int = 20) -> None:
+    """The read-scaling payoff: the same planned batch retrieval answered
+    by the primary's applied state vs by a caught-up replica's — every
+    replica answer hash-checked against the primary's."""
+    from repro.core.state import init_state
+    batches = _insert_batches(n, step, seed=5)
+    q = _queries(seed=6)
+    with tempfile.TemporaryDirectory() as tmp:
+        host = ShardHost(f"{tmp}/primary",
+                         init_state(2 * n, DIM, hnsw_levels=1,
+                                    hnsw_degree=2),
+                         segment_records=max(n, 1024))
+        writer = RemoteShardClient(LocalTransport(host))
+        for b in batches:
+            writer.append(b)
         rep = ReplicaStore(RemoteShardClient(LocalTransport(host)),
                            init_state(2 * n, DIM, hnsw_levels=1,
                                       hnsw_degree=2),
-                           replica_id=9)
-        t0 = time.perf_counter()
-        t = rep.catch_up(max_commands=step)
-        dt = time.perf_counter() - t0
+                           replica_id=1)
+        rep.catch_up(max_commands=step)
 
-        rh_primary = _primary_retrieval_hash(host, q)
-        state_ok = (t == host.store.t
-                    and rep.state_hash() == host.state_hash())
-        read_ok = rep.retrieval_hash(q, K) == rh_primary
-        emit("replica_catch_up", dt / n * 1e6,
-             f"commands={n};seconds={dt:.3f};state_hash_equal={state_ok};"
-             f"retrieval_hash_equal={read_ok}")
-        if not (state_ok and read_ok):
-            raise RuntimeError(
-                "caught-up replica diverged from the primary "
-                f"(t={t} vs {host.store.t})")
+        plan = query.plan_query(live_count(host.state), K, 64)
+        nq = int(np.asarray(q).shape[0])
+
+        def read_primary():
+            return query.execute_plan(host.state, q, K, plan)
+
+        def read_replica():
+            return query.execute_plan(rep.state, q, K, plan)
+
+        rh = None
+        for name, fn in (("primary", read_primary),
+                         ("replica", read_replica)):
+            ids, scores = fn()  # warmup + the hash check target
+            got = query.retrieval_hash(ids, scores)
+            if rh is None:
+                rh = got
+            elif got != rh:
+                raise RuntimeError(
+                    "replica read diverged from the primary's — the QPS "
+                    "number would be meaningless")
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                ids, scores = fn()
+            np.asarray(ids)  # materialize before stopping the clock
+            dt = time.perf_counter() - t0
+            emit(f"replica_read_qps_{name}", dt / (rounds * nq) * 1e6,
+                 f"queries_per_sec={rounds * nq / dt:.0f};"
+                 f"batch={nq};retrieval_hash_equal=True")
+        rep.close()
 
 
 def run(*, smoke: bool = False) -> None:
     if smoke:
         table_ingest(n=96, step=16)
         table_catch_up(n=96, step=16)
+        table_replica_read_qps(n=96, step=16, rounds=5)
     else:
         table_ingest(n=512, step=32)
         table_catch_up(n=512, step=32)
+        table_replica_read_qps(n=512, step=32)
 
 
 if __name__ == "__main__":

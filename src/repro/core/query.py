@@ -76,6 +76,11 @@ class QueryPlan:
     use_kernel: bool         # exact route only (HNSW gathers row-wise)
     live_count: int          # the fact the decision was made from
     reason: str
+    # who answered: "primary", or "replica:<i>" when the serve engine's
+    # read pool served this request at a proven cursor (DESIGN.md §9) —
+    # recorded so replica-served answers are replayable audit artifacts
+    # like every other planner choice
+    served_by: str = "primary"
 
 
 def plan_query(live_count: int, k: int, ef: int, *,

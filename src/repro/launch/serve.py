@@ -16,6 +16,10 @@ Topology flags (DESIGN.md §7, §8):
   --hosts a:p,b:p      attach to already-running shard servers instead
   --durable-dir DIR    durable store / coordinator metadata directory
                        (required for --hosts; defaulted for --spawn-shards)
+  --replicas K         attach K verified read replicas per shard
+                       (DESIGN.md §9); retrieval routes to the pool once
+                       the replicas prove the flush cursor. Needs
+                       --durable-dir (defaulted when absent).
 """
 from __future__ import annotations
 
@@ -73,6 +77,9 @@ def main() -> None:
                     help="comma-separated host:port shard servers "
                          "(needs --durable-dir)")
     ap.add_argument("--durable-dir", default=None)
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="verified read replicas per shard; retrieval "
+                         "routes to the pool at proven cursors")
     args = ap.parse_args()
 
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -94,6 +101,10 @@ def main() -> None:
             durable_dir = os.path.join(workdir, "coord")
         print(f"spawned {len(procs)} shard servers: {', '.join(hosts)}")
 
+    if args.replicas and durable_dir is None:
+        # replicas tail a durable WAL; default one rather than refusing
+        durable_dir = tempfile.mkdtemp(prefix="valori-serve-")
+
     try:
         rng = np.random.default_rng(args.seed)
         params = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -102,7 +113,8 @@ def main() -> None:
             s_cache=args.doc_len + args.prompt_len + args.max_new + 32,
             context_tokens=min(32, args.doc_len),
             shards=args.shards if hosts is None else 1,
-            hosts=hosts, durable_dir=durable_dir))
+            hosts=hosts, durable_dir=durable_dir,
+            replicas=args.replicas))
 
         docs = rng.integers(0, cfg.vocab_size, (args.docs, args.doc_len),
                             dtype=np.int32)
@@ -111,11 +123,18 @@ def main() -> None:
         print(f"ingested {len(ids)} docs in {time.time() - t0:.2f}s; "
               f"memory hash {engine.memory_hash():#x}")
 
+        if args.replicas:
+            t = engine.sync_replicas()
+            print(f"synced {args.replicas} replicas/shard to proven "
+                  f"cursor t={t}")
+
         prompts = rng.integers(0, cfg.vocab_size,
                                (args.requests, args.prompt_len),
                                dtype=np.int32)
         nn_ids, scores = engine.retrieve(prompts)
         print("retrieved neighbors:", nn_ids[:, 0].tolist())
+        if args.replicas:
+            print(f"served by: {engine.last_plan.served_by}")
 
         t0 = time.time()
         out = engine.generate(prompts)

@@ -273,6 +273,14 @@ class RemoteShardClient:
         return log_from_bytes(ack.log, self.contract), ack.t_end, \
             ack.state_hash
 
+    def side_tail(self, from_index: int) -> Tuple[List[bytes], int, int]:
+        """Ship the primary's side-table records [from_index, count) plus
+        the chained digest over the whole prefix — the verify target a
+        mirroring replica must reproduce (DESIGN.md §9). Returns
+        (records, count, table_digest)."""
+        ack = self._request(p.SideTail(from_index=from_index), p.SideTailAck)
+        return list(ack.records), ack.count, ack.table_digest
+
     def replica_ack(self, replica_id: int, t: int, state_hash: int) -> int:
         ack = self._request(
             p.ReplicaCursorAck(replica_id=replica_id, t=t,

@@ -73,6 +73,8 @@ READ_RANGE = 22
 LOG_ACK = 23
 RETAIN = 24
 RETAIN_ACK = 25
+SIDE_TAIL = 26
+SIDE_TAIL_ACK = 27
 ERROR = 255
 
 
@@ -485,6 +487,31 @@ class RetainAck(Message):
 
 
 @dataclasses.dataclass(frozen=True)
+class SideTail(Message):
+    """Side-table shipping: pull the primary's ``SideTable`` records from
+    record index ``from_index`` onward, so a replica mirrors doc token
+    prefixes alongside the WAL slices it tails — a promoted replica then
+    serves prefixes without refilling."""
+    TYPE = SIDE_TAIL
+    FIELDS = (("from_index", "u64"),)
+    from_index: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SideTailAck(Message):
+    """Raw self-validating side-table records [from_index, count) plus the
+    primary's running digest over ALL record bytes up to ``count`` — the
+    content-layer verify target, exactly like TAIL_ACK's ``state_hash``."""
+    TYPE = SIDE_TAIL_ACK
+    FIELDS = (("from_index", "u64"), ("count", "u64"),
+              ("table_digest", "u64"), ("records", "bytes_list"))
+    from_index: int = 0
+    count: int = 0
+    table_digest: int = 0
+    records: Tuple[bytes, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
 class ErrorMsg(Message):
     TYPE = ERROR
     FIELDS = (("kind", "str"), ("message", "str"))
@@ -498,9 +525,9 @@ MESSAGE_TYPES: Dict[int, Type[Message]] = {
         QueryAck, Checkpoint, CheckpointAck, RestoreAt, StateAck, Recover,
         Rollback, RollbackAck, Tail, TailAck, ReplicaCursorAck,
         ReplicaCursorAckAck, StateHashReq, StateHashAck, ReadRange, LogAck,
-        Retain, RetainAck, ErrorMsg)
+        Retain, RetainAck, SideTail, SideTailAck, ErrorMsg)
 }
-assert len(MESSAGE_TYPES) == 26, "duplicate message type id"
+assert len(MESSAGE_TYPES) == 28, "duplicate message type id"
 
 
 # --------------------------------------------------------------------------- #

@@ -21,16 +21,33 @@ transport: TAIL is a pure read (re-asking is harmless), the local append
 happens once per verified advance, and the ack is idempotent — so the
 replica converges to the primary's exact state under any at-least-once
 schedule, which is precisely what tests/test_replication.py's
-fault-injection suite drives."""
+fault-injection suite drives.
+
+Two additions make replicas a first-class availability layer (§9):
+
+  * **SideTable shipping** — a durable replica mirrors the primary's
+    side table (doc token prefixes) record-by-record via SIDE_TAIL,
+    verified against one chained prefix digest, so a *promoted* replica
+    serves prefixes without refilling;
+  * **promotion** — ``promote()`` turns a durable replica into a
+    ``ShardHost`` without replaying its WAL: every record in that WAL was
+    hash-verified against the old primary before it touched disk, so the
+    takeover needs one lockstep + hash check, not a replay.
+
+``LocalPrimary`` exposes the same replication surface over a
+``DurableStore`` the caller already owns — how the serve engine attaches
+in-process read replicas to its own durable stores without a server."""
 from __future__ import annotations
 
 import os
-from typing import Optional, Tuple
+import struct
+import threading
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core import hashing, machine, query as query_lib
-from repro.core.durability import DurableStore
+from repro.core.durability import DurableStore, SideTable
 from repro.core.shard_wal import live_count
 from repro.core.state import MemoryState
 from repro.net import protocol as p
@@ -40,6 +57,65 @@ class ReplicaDivergence(ValueError):
     """The replica replayed the primary's own log and got a different
     state hash — replication is wrong (or the shipped log / advertised
     hash was tampered with), and serving must not continue from here."""
+
+
+class LocalPrimary:
+    """The replica-facing surface of a ``DurableStore`` the caller already
+    owns: ``tail`` / ``replica_ack`` / ``side_tail`` with the exact
+    semantics of a ``ShardHost`` behind a client, minus the codec. The
+    serve engine uses this to attach in-process read replicas to its own
+    store(s); ``state_fn`` (when given) returns the owner's live applied
+    state so the common tail-to-the-live-cursor case hashes without a
+    time-travel restore."""
+
+    def __init__(self, store, *, state_fn=None,
+                 side_table: Optional[SideTable] = None,
+                 ef_construction: int = 32):
+        self.store = store
+        self._state_fn = state_fn
+        self.side_table = side_table
+        self.ef_construction = ef_construction
+        self.replica_cursors: Dict[int, int] = {}
+
+    def _hash_at(self, t: int) -> int:
+        if self._state_fn is not None:
+            state = self._state_fn()
+            if int(np.asarray(state.version).reshape(-1)[0]) == t:
+                return hashing.hash_pytree(state)
+        return self.store.restore_at(
+            t, ef_construction=self.ef_construction)[1]
+
+    def tail(self, from_t: int, *, max_commands: int = 0):
+        if from_t > self.store.t:
+            raise ValueError(
+                f"tail from t={from_t} is ahead of durable cursor "
+                f"{self.store.t}")
+        log, t_end = self.store.wal.tail(from_t, max_commands=max_commands)
+        return log, t_end, self._hash_at(t_end)
+
+    def replica_ack(self, replica_id: int, t: int, state_hash: int) -> int:
+        if t > self.store.t:
+            raise ValueError(
+                f"replica acked t={t} ahead of the primary's durable "
+                f"cursor {self.store.t}")
+        expect = self._hash_at(t)
+        if state_hash != expect:
+            raise ReplicaDivergence(
+                f"replica {replica_id} diverged at t={t}: replica "
+                f"{state_hash:#x}, primary {expect:#x}")
+        prev = self.replica_cursors.get(replica_id, 0)
+        self.replica_cursors[replica_id] = max(prev, t)
+        return self.replica_cursors[replica_id]
+
+    def side_tail(self, from_index: int):
+        if self.side_table is None:
+            return [], 0, 0
+        count = self.side_table.record_count
+        return (self.side_table.records_from(from_index), count,
+                self.side_table.digest_at(count))
+
+    def close(self) -> None:
+        pass  # the store and side table belong to the caller
 
 
 class ReplicaStore:
@@ -52,19 +128,32 @@ class ReplicaStore:
     ``DurableStore`` (genesis required on first boot) and survives a kill:
     restart recovery rebuilds the state from the local WAL and catch-up
     resumes from the durable cursor. Without one, it is a pure in-memory
-    follower."""
+    follower.
+
+    ``prefetch``, when given, is a *second* independent client to the same
+    primary; ``catch_up(pipeline=True)`` uses it to request slice t+1
+    while slice t is still being applied — the catch-up latency lever
+    (``bench_replication.py`` prices it)."""
 
     def __init__(self, primary, genesis: Optional[MemoryState] = None, *,
                  directory: Optional[str | os.PathLike] = None,
-                 replica_id: int = 0, ef_construction: int = 32):
+                 replica_id: int = 0, ef_construction: int = 32,
+                 prefetch=None):
         self.primary = primary
+        self.prefetch = prefetch
         self.replica_id = replica_id
         self.ef_construction = ef_construction
         self.store: Optional[DurableStore] = None
+        self.side_table: Optional[SideTable] = None
+        self._closed = False
+        self._prefetch_thread: Optional[threading.Thread] = None
         if directory is not None:
             self.store = DurableStore(directory, genesis)
             self.state, self._hash, self.t = self.store.recover(
                 ef_construction=ef_construction)
+            # the mirror of the primary's side table (SIDE_TAIL target):
+            # same filename the promoted host will serve it from
+            self.side_table = SideTable(self.store.dir / "docs.sdt")
         else:
             if genesis is None:
                 raise ValueError("an in-memory replica needs a genesis "
@@ -88,6 +177,11 @@ class ReplicaStore:
         idempotent, so the caller just runs it again."""
         log, t_end, advertised = self.primary.tail(
             self.t, max_commands=max_commands)
+        return self._commit_slice(log, t_end, advertised)
+
+    def _commit_slice(self, log, t_end: int, advertised: int) -> int:
+        """Verify-commit-ack one shipped slice (the body of ``sync``,
+        shared with the pipelined catch-up path)."""
         if t_end == self.t:
             # nothing new; still re-verify our own position against the
             # primary (a free divergence tripwire on idle syncs)
@@ -96,6 +190,7 @@ class ReplicaStore:
                     f"replica at t={self.t} has hash {self._hash:#x}, "
                     f"primary advertises {advertised:#x}")
             self._ack()
+            self._sync_side()
             return self.t
         if len(log) != t_end - self.t:
             raise p.ProtocolError(
@@ -116,25 +211,114 @@ class ReplicaStore:
         self._hash = h
         self.t = t_end
         self._ack()
+        self._sync_side()
         return self.t
 
     def _ack(self) -> None:
         self.primary.replica_ack(self.replica_id, self.t, self._hash)
 
-    def catch_up(self, *, max_commands: int = 0, max_rounds: int = 64
-                 ) -> int:
+    def _sync_side(self) -> None:
+        """Mirror side-table records shipped alongside the WAL slice —
+        only when both ends have a table (idempotent, so a transport
+        fault here just defers the mirror to the next sync)."""
+        if self.side_table is not None and hasattr(self.primary,
+                                                   "side_tail"):
+            self.sync_side_table()
+
+    def sync_side_table(self) -> int:
+        """Pull the primary's side-table records past our mirror's count
+        and verify the *whole prefix* against the primary's one chained
+        digest before committing a byte — the TAIL_ACK discipline applied
+        to the serving cache. Returns the mirrored record count."""
+        if self.side_table is None:
+            raise ValueError("an in-memory replica has no side table "
+                             "(give the replica a directory)")
+        start = self.side_table.record_count
+        records, count, advertised = self.primary.side_tail(start)
+        if count == 0 and start == 0:
+            return 0  # primary ships no side table
+        if count < start:
+            raise ReplicaDivergence(
+                f"primary's side table has {count} records, mirror already "
+                f"holds {start} — the mirror is not a prefix of the source")
+        if len(records) != count - start:
+            raise p.ProtocolError(
+                f"side tail shipped {len(records)} records for "
+                f"[{start}, {count})")
+        # dry-run the chained digest from our prefix before any append:
+        # a mismatch must commit nothing
+        digest = self.side_table.digest_at(start)
+        for raw in records:
+            digest = hashing.digest_bytes(struct.pack("<Q", digest) + raw)
+        if digest != advertised:
+            raise ReplicaDivergence(
+                f"side-table prefix digest {digest:#x} != primary's "
+                f"{advertised:#x}; refusing the mirrored records")
+        for raw in records:
+            self.side_table.append_record(raw)
+        self.side_table.sync()
+        return count
+
+    def catch_up(self, *, max_commands: int = 0, max_rounds: int = 64,
+                 pipeline: bool = False) -> int:
         """Run ``sync`` until the replica reaches the primary's cursor,
         riding through transport faults (lost/reordered messages) but
-        never through divergence. Returns the final cursor."""
+        never through divergence. Returns the final cursor.
+
+        With ``pipeline=True`` (requires the ``prefetch`` client), the
+        next TAIL is requested on the second connection *while the current
+        slice is applying* — the network/codec latency of slice t+1 hides
+        behind the bulk_apply of slice t. Verification is unchanged: every
+        slice is still hash-checked before commit, whichever connection
+        shipped it."""
+        if pipeline and self.prefetch is None:
+            raise ValueError("pipelined catch-up needs a prefetch client "
+                             "(a second connection to the same primary)")
+        pending: Optional[Tuple[threading.Thread, dict, int]] = None
         for _ in range(max_rounds):
             t_before = self.t
             try:
-                self.sync(max_commands=max_commands)
+                if pending is not None:
+                    thread, box, from_t = pending
+                    thread.join()
+                    pending = None
+                    if "result" in box and from_t == self.t:
+                        log, t_end, advertised = box["result"]
+                    else:
+                        # prefetch faulted or raced a cursor change:
+                        # fall back to a direct (idempotent) tail
+                        log, t_end, advertised = self.primary.tail(
+                            self.t, max_commands=max_commands)
+                else:
+                    log, t_end, advertised = self.primary.tail(
+                        self.t, max_commands=max_commands)
             except (p.TransportError, p.ProtocolError):
                 continue  # the step is idempotent: just ask again
+            if pipeline and t_end > self.t:
+                pending = self._start_prefetch(t_end, max_commands)
+            try:
+                self._commit_slice(log, t_end, advertised)
+            except (p.TransportError, p.ProtocolError):
+                continue
             if self.t == t_before:
                 return self.t  # a fault-free round with no progress: caught up
         return self.t
+
+    def _start_prefetch(self, from_t: int, max_commands: int
+                        ) -> Tuple[threading.Thread, dict, int]:
+        box: dict = {}
+
+        def run():
+            try:
+                box["result"] = self.prefetch.tail(
+                    from_t, max_commands=max_commands)
+            except Exception as e:  # noqa: BLE001 — surfaced via the box
+                box["error"] = e
+
+        thread = threading.Thread(target=run, daemon=True)
+        thread.start()
+        self._prefetch_thread = thread
+        return thread, box, from_t
 
     def checkpoint(self) -> None:
         """Snapshot the replica's own verified state (durable replicas
@@ -143,6 +327,45 @@ class ReplicaStore:
         if self.store is None:
             raise ValueError("in-memory replica has nothing to checkpoint")
         self.store.checkpoint(self.state)
+
+    # ------------------------------------------------------------------ #
+    # failover: promotion
+    # ------------------------------------------------------------------ #
+
+    def promote(self):
+        """Turn this durable replica into the new primary (DESIGN.md §9).
+
+        The replica's WAL is already a *verified prefix*: every slice in
+        it was applied to a candidate, hash-compared against the old
+        primary, and only then appended — so promotion needs one lockstep
+        + hash check, not a replay. Returns a ``ShardHost`` that adopts
+        the replica's store, applied state and side-table mirror; the
+        replica hands its handles over and must not be synced afterwards.
+
+        Refuses with ``ReplicaDivergence`` when the in-memory state no
+        longer matches the proven hash (bit rot / tampering); a WAL/state
+        cursor skew (the crash window between append and commit) is first
+        reconciled through ``recover()`` — the durable log stays
+        authoritative."""
+        if self.store is None:
+            raise ValueError("only a durable replica can be promoted "
+                             "(an in-memory follower has no WAL to adopt)")
+        if self.store.t != self.t:
+            # crash window: the WAL holds a verified slice the in-memory
+            # state never committed — recover() lands on the durable prefix
+            self.state, self._hash, self.t = self.store.recover(
+                ef_construction=self.ef_construction)
+        if hashing.hash_pytree(self.state) != self._hash:
+            raise ReplicaDivergence(
+                f"replica {self.replica_id} state no longer matches its "
+                f"proven hash at t={self.t}; refusing promotion")
+        from repro.net.server import ShardHost  # local import: no cycle
+        side = self.side_table
+        if side is not None:
+            side.close()  # the promoted host reopens the mirror file
+            self.side_table = None
+        return ShardHost.adopt(self.store, self.state, self._hash,
+                               ef_construction=self.ef_construction)
 
     # ------------------------------------------------------------------ #
     # serving reads
@@ -171,6 +394,19 @@ class ReplicaStore:
         return query_lib.retrieval_hash(ids, scores)
 
     def close(self) -> None:
-        close = getattr(self.primary, "close", None)
-        if close is not None:
-            close()
+        """Idempotent teardown: join any in-flight prefetch, close both
+        transports and the side-table mirror. Benches and kill tests close
+        replicas repeatedly — a double close is a no-op."""
+        if self._closed:
+            return
+        self._closed = True
+        thread = self._prefetch_thread
+        if thread is not None and thread.is_alive():
+            thread.join(timeout=5.0)
+        self._prefetch_thread = None
+        for handle in (self.primary, self.prefetch):
+            close = getattr(handle, "close", None)
+            if close is not None:
+                close()
+        if self.side_table is not None:
+            self.side_table.close()

@@ -38,7 +38,7 @@ import jax.numpy as jnp
 from repro.core import hashing, machine, query as query_lib, snapshot
 from repro.core.commands import log_from_bytes, log_to_bytes
 from repro.core.contracts import DEFAULT_CONTRACT, get_contract
-from repro.core.durability import DurableStore
+from repro.core.durability import DurableStore, SideTable
 from repro.core.shard_wal import live_count
 from repro.core.state import MemoryState, init_state
 from repro.net import protocol as p
@@ -67,6 +67,44 @@ class ShardHost:
         self.state, self._hash, t = self.store.recover(
             ef_construction=ef_construction)
         assert t == self.store.t
+        # serving-layer cache shipped to replicas via SIDE_TAIL (§9): doc
+        # token prefixes and friends, torn-tail-truncated on open like the
+        # engine's own table
+        self.side_table = SideTable(self.store.dir / "docs.sdt")
+        self._closed = False
+
+    @classmethod
+    def adopt(cls, store: DurableStore, state: MemoryState, state_hash: int,
+              *, ef_construction: int = 32) -> "ShardHost":
+        """Wrap an already-open store + verified applied state as a host
+        WITHOUT the recovery replay — the promotion path (DESIGN.md §9):
+        a replica's state is proven bit-identical at its cursor, so the
+        new primary adopts it after one lockstep check instead of
+        rebuilding it from the WAL."""
+        if int(state.version) != store.t:
+            raise ValueError(
+                f"adopt: applied cursor {int(state.version)} != durable "
+                f"cursor {store.t} — recover() first")
+        host = cls.__new__(cls)
+        host.store = store
+        host.ef_construction = ef_construction
+        host._lock = threading.RLock()
+        host._last_group = None
+        host.replica_cursors = {}
+        host.state = state
+        host._hash = state_hash
+        host.side_table = SideTable(store.dir / "docs.sdt")
+        host._closed = False
+        return host
+
+    def close(self) -> None:
+        """Idempotent teardown (the side table holds the only file handle
+        that outlives a request)."""
+        with self._lock:
+            if self._closed:
+                return
+            self.side_table.close()
+            self._closed = True
 
     # ------------------------------------------------------------------ #
 
@@ -141,6 +179,16 @@ class ShardHost:
         if isinstance(msg, p.ReadRange):
             log = self.store.wal.read_range(msg.t0, msg.t1)
             return p.LogAck(log=log_to_bytes(log))
+        if isinstance(msg, p.SideTail):
+            count = self.side_table.record_count
+            if msg.from_index > count:
+                raise ValueError(
+                    f"side tail from index {msg.from_index} is ahead of the "
+                    f"table's {count} records")
+            return p.SideTailAck(
+                from_index=msg.from_index, count=count,
+                table_digest=self.side_table.digest_at(count),
+                records=tuple(self.side_table.records_from(msg.from_index)))
         if isinstance(msg, p.Retain):
             stats = self.store.retain(msg.keep)
             return p.RetainAck(

@@ -1,4 +1,5 @@
-"""Fault-tolerant training coordinator.
+"""Fault-tolerant coordinators: training checkpoint/restart and serve-side
+primary failover by replica promotion.
 
 Wraps the train loop with the large-scale survival kit:
   * periodic deterministic checkpoints (hash-manifested, Valori semantics);
@@ -17,6 +18,19 @@ The loop itself is deliberately simple: all the intelligence lives in the
 substrate (deterministic data order, hashable state, divisibility-aware
 shardings) — which is the paper's thesis: make the state machine
 deterministic and recovery becomes trivial replay.
+
+The second half of this module is the *serving* failover coordinator
+(DESIGN.md §9): when a primary shard host dies (``TransportError`` / dead
+subprocess), ``promote_on_primary_loss`` picks the surviving replica with
+the max proven durable cursor, proves the takeover with one ``state_hash``
+comparison against the durable prefix (per surviving straggler), and
+promotes that replica's WAL as the new primary prefix — no replay, because
+every record in a replica's WAL was hash-verified against the old primary
+before it touched disk. ``promote_sharded`` runs one promotion per shard
+and then reconciles the promoted fleet to one global cursor through the
+existing ``ShardedDurableStore.recover()`` min-cursor rule (ahead shards
+roll back), so a staggered failover lands on exactly the durable prefix
+every shard can prove.
 """
 from __future__ import annotations
 
@@ -146,3 +160,97 @@ class Coordinator:
                     state, step, _ = restored
                 self.events.append({"event": "restart", "from_step": step})
         return state
+
+
+# --------------------------------------------------------------------------- #
+# serve-side failover: promotion of a verified replica (DESIGN.md §9)
+# --------------------------------------------------------------------------- #
+
+
+def proven_cursor(replica) -> int:
+    """The cursor a replica can *prove*: its own durable WAL cursor (every
+    appended slice was hash-verified against the primary before it touched
+    disk — the verify-then-append discipline in net/replica.py). A
+    SIGKILLed replica may hold one verified slice its in-memory state never
+    committed; the WAL is authoritative, so that slice still counts."""
+    if replica.store is None:
+        raise ValueError("an in-memory follower has no proven durable "
+                         "prefix to promote")
+    return replica.store.t
+
+
+def promote_on_primary_loss(replicas, *, ef_construction: int = 32):
+    """Failover for one shard: promote the best surviving replica.
+
+    1. Pick the replica with the **max proven durable cursor** — acked
+       work is never lost (every acked cursor <= some replica's proven
+       cursor), and the old primary's unshipped suffix is never
+       resurrected (nothing past the max proven cursor survives).
+    2. Prove the takeover: for each surviving straggler, the winner's
+       durable prefix at the straggler's committed cursor must hash to the
+       straggler's proven ``state_hash()`` — one ``state_hash`` comparison
+       against the durable prefix per survivor. A tampered WAL (winner or
+       straggler) breaks this and the promotion is **refused** with
+       ``ReplicaDivergence``: a primary that cannot prove its prefix never
+       serves.
+    3. ``promote()`` the winner: its store, verified state and side-table
+       mirror become a ``ShardHost`` with no replay (one lockstep + hash
+       check).
+
+    Returns ``(host, winner_index, t)``.
+    """
+    from repro.net.replica import ReplicaDivergence
+
+    replicas = list(replicas)
+    if not replicas:
+        raise ValueError("no surviving replicas to promote")
+    cursors = [proven_cursor(r) for r in replicas]
+    winner_idx = int(np.argmax(cursors))
+    winner = replicas[winner_idx]
+    t = cursors[winner_idx]
+    # reconcile the winner's crash window first (WAL may be one verified
+    # slice ahead of the committed state) so the prefix checks below read
+    # the durable truth
+    if winner.store.t != winner.t:
+        winner.state, winner._hash, winner.t = winner.store.recover(
+            ef_construction=ef_construction)
+    for i, straggler in enumerate(replicas):
+        if i == winner_idx:
+            continue
+        st = straggler.t  # committed (acked) cursor: proven at both ends
+        expect = straggler.state_hash()
+        got = winner.store.restore_at(st, ef_construction=ef_construction)[1]
+        if got != expect:
+            raise ReplicaDivergence(
+                f"promotion refused: winner (replica {winner.replica_id}) "
+                f"prefix at t={st} hashes to {got:#x}, surviving replica "
+                f"{straggler.replica_id} proved {expect:#x} — a WAL was "
+                "tampered with or replication diverged")
+    return winner.promote(), winner_idx, t
+
+
+def promote_sharded(directory, replica_sets, *, ef_construction: int = 32):
+    """Failover for a sharded fleet: one promotion per shard, then the
+    promoted hosts are reconciled to **one global cursor** through the
+    existing ``ShardedDurableStore.recover()`` min-cursor rule — per-shard
+    winners at staggered cursors roll the ahead shards back, exactly the
+    crash-reconciliation path local shards already take.
+
+    ``directory`` is the coordinator's own store dir (holds ``store.json``
+    and the merged-hash records); ``replica_sets[s]`` is the list of
+    surviving replicas of shard ``s``. Returns
+    ``(store, state, state_hash, t, hosts)`` — the reconciled sharded
+    store over the promoted hosts and its recovered global state."""
+    from repro.core.shard_wal import ShardedDurableStore
+    from repro.net.client import LocalTransport, RemoteShardClient
+
+    hosts = []
+    for shard_replicas in replica_sets:
+        host, _, _ = promote_on_primary_loss(
+            shard_replicas, ef_construction=ef_construction)
+        hosts.append(host)
+    store = ShardedDurableStore(
+        directory, backends=[RemoteShardClient(LocalTransport(h))
+                             for h in hosts])
+    state, state_hash, t = store.recover(ef_construction=ef_construction)
+    return store, state, state_hash, t, hosts

@@ -111,6 +111,18 @@ class ServeConfig:
     # A compaction policy schedules dead-ratio-driven WAL compaction.
     group_commit: Optional[wal_lib.GroupCommitPolicy] = None
     compaction: Optional[wal_lib.CompactionPolicy] = None
+    # read scaling (DESIGN.md §9): replicas=k attaches k verified
+    # log-shipping read replicas per shard (net.ReplicaStore followers of
+    # the engine's own durable store(s), or of the shard hosts in
+    # networked mode). ``retrieve()`` routes each request to a replica
+    # chosen deterministically from the query bytes — but only when that
+    # replica's acked cursor has reached the engine's flush cursor
+    # (read-your-writes through the same sync-on-read barrier); otherwise
+    # it falls back to the primary. The route lands on ``last_plan`` as
+    # ``served_by``. Replicas advance via ``sync_replicas()`` (an
+    # operator/cron concern, like checkpoints). Requires durable_dir —
+    # a replica follows a WAL, and without one there is nothing to tail.
+    replicas: int = 0
 
 
 class MemoryAugmentedEngine:
@@ -208,6 +220,18 @@ class MemoryAugmentedEngine:
             raise ValueError(
                 "group_commit/compaction policies need durable_dir set")
 
+        # the read pool (DESIGN.md §9): read_replicas[s][i] is the i-th
+        # verified follower of shard s (one list in flat mode)
+        self.read_replicas: List[List[Any]] = []
+        self._closed = False
+        if serve_cfg.replicas:
+            if self.durable is None:
+                raise ValueError(
+                    "replicas=k needs durable_dir: a read replica follows "
+                    "a durable WAL, and without one there is nothing to "
+                    "tail")
+            self._spawn_replicas(serve_cfg.replicas)
+
         self._embed_fn = jax.jit(self._embed_batch)
         self._prefill = jax.jit(
             lambda p, b: tf.prefill(p, b, cfg, self.sc.s_cache))
@@ -235,6 +259,71 @@ class MemoryAugmentedEngine:
         the batch boundaries the engine operates at)."""
         v = np.asarray(self.memory.version).reshape(-1)
         return int(v[0])
+
+    # ------------------------------------------------------------------ #
+    # read pool: verified replicas behind the flush barrier (DESIGN.md §9)
+    # ------------------------------------------------------------------ #
+
+    def _spawn_replicas(self, k: int) -> None:
+        """Attach ``k`` in-process verified followers per shard. Local
+        modes follow the engine's own store(s) through ``LocalPrimary``
+        (the replica-facing surface of a DurableStore); networked mode
+        follows the shard hosts over their own wire connections. Genesis
+        is the engine's t=0 state (its shard slice in sharded layouts) —
+        replicas then catch up through the same verify-then-ack discipline
+        any replica uses, so every cursor they report is proven."""
+        from repro.net.replica import LocalPrimary, ReplicaStore
+        if not self._layout_sharded:
+            primaries = [lambda: LocalPrimary(
+                self.durable, state_fn=lambda: self.memory,
+                side_table=self._doc_table)]
+            geneses = [self.memory]
+        elif self._clients is not None:
+            from repro.net.client import RemoteShardClient, SocketTransport
+            def remote(h):
+                addr, port = h.rsplit(":", 1)
+                return lambda: RemoteShardClient(
+                    SocketTransport(addr, int(port)),
+                    contract=self.sc.contract)
+            primaries = [remote(h) for h in self.sc.hosts]
+            geneses = [distributed.shard_slice(self.memory, s, self.n_shards)
+                       for s in range(self.n_shards)]
+        else:
+            def local(s):
+                return lambda: LocalPrimary(
+                    self.durable.shards[s],
+                    state_fn=lambda: distributed.shard_slice(
+                        self.memory, s, self.n_shards),
+                    side_table=self._doc_table)
+            primaries = [local(s) for s in range(self.n_shards)]
+            geneses = [distributed.shard_slice(self.memory, s, self.n_shards)
+                       for s in range(self.n_shards)]
+        self.read_replicas = [
+            [ReplicaStore(make_primary(), geneses[s],
+                          replica_id=s * k + i)
+             for i in range(k)]
+            for s, make_primary in enumerate(primaries)]
+
+    def _pick_replica(self, q_raw) -> int:
+        """Deterministic replica choice from the request bytes — the same
+        query always lands on the same pool slot, so a served answer is
+        replayable from (log cursor, query, plan)."""
+        from repro.core import hashing
+        return (hashing.digest_bytes(np.asarray(q_raw).tobytes())
+                % len(self.read_replicas[0]))
+
+    def sync_replicas(self, *, max_commands: int = 0) -> int:
+        """Catch every attached replica up to the current flush cursor
+        (each slice verified against the primary's hash before commit).
+        Returns the flush cursor. Like checkpoints, replica advancement is
+        an explicit serving-loop concern — ``retrieve()`` never blocks a
+        read on it; a lagging replica just loses the route until it
+        catches up."""
+        t = self.flush()
+        for pool in self.read_replicas:
+            for rep in pool:
+                rep.catch_up(max_commands=max_commands)
+        return t
 
     # ------------------------------------------------------------------ #
     # WRITE path
@@ -318,17 +407,36 @@ class MemoryAugmentedEngine:
         order-invariant integer combine — bit-identical to the flat answer
         for the exact route, and for HNSW whenever the beam covers each
         shard (DESIGN.md §7). The decision is recorded on ``self.last_plan``
-        for audit."""
+        for audit.
+
+        With a read pool (``replicas=k``), the request picks a pool slot
+        deterministically from its query bytes and is served from that
+        replica's verified state — but only when every chosen replica's
+        acked cursor has reached the flush cursor returned by the barrier
+        above (read-your-writes: a replica may lag the log, never the
+        reader). Otherwise the primary serves, and either way
+        ``last_plan.served_by`` records who answered (DESIGN.md §9)."""
         k = k or self.sc.retrieve_k
-        self.flush()  # sync-on-read: nothing un-durable is observable
+        # sync-on-read barrier: nothing un-durable is observable, and the
+        # cursor it returns is the read-your-writes floor for replica routes
+        flush_t = self.flush()
         emb = self._embed_fn(self.params, jnp.asarray(prompt_tokens))
         q_raw = boundary.admit_query(emb, self.sc.contract)
         plan = query.plan_query(
             shard_wal.live_count(self.memory), k, self.sc.ef,
             use_kernel=self.sc.use_kernel,
             exact_threshold=self.sc.exact_threshold, route=self.sc.route)
+        pool = None
+        if self.read_replicas:
+            slot = self._pick_replica(q_raw)
+            chosen = [shard_pool[slot] for shard_pool in self.read_replicas]
+            if all(rep.t >= flush_t for rep in chosen):
+                pool = chosen
+                plan = dataclasses.replace(plan, served_by=f"replica:{slot}")
         self.last_plan = plan
-        if self._clients is not None:
+        if pool is not None:
+            ids, scores = self._replica_query(pool, q_raw, k, plan)
+        elif self._clients is not None:
             # the networked read: every shard host executes the same plan
             # on its applied state, candidates merge with the one
             # order-invariant combine — bit-identical to the local sharded
@@ -341,6 +449,27 @@ class MemoryAugmentedEngine:
             ids, scores = query.sharded_host_query(
                 self.memory, self.n_shards, q_raw, k, plan)
         return np.asarray(ids), np.asarray(scores)
+
+    def _replica_query(self, pool, q_raw, k: int, plan: query.QueryPlan
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Execute the engine's plan on the chosen replicas' verified
+        states: the flat state directly, per-shard states merged with the
+        one order-invariant (score, id) combine — the same merge the
+        networked read uses, so a replica-served answer is bit-identical
+        to the primary's at the same cursor (the conformance suite pins
+        it)."""
+        from repro.core import search
+        if not self._layout_sharded:
+            return query.execute_plan(pool[0].state, q_raw, k, plan)
+        ids_parts, score_parts = [], []
+        for rep in pool:
+            ids_s, scores_s = query.execute_plan(rep.state, q_raw, k, plan)
+            ids_parts.append(jnp.asarray(ids_s, jnp.int64))
+            score_parts.append(jnp.asarray(scores_s, jnp.int64))
+        flat_ids = jnp.concatenate(ids_parts, axis=-1)
+        flat_scores = jnp.concatenate(score_parts, axis=-1)
+        s_out, i_out = search.merge_candidates(flat_scores, flat_ids, k)
+        return i_out, s_out
 
     def retrieval_hash(self, prompt_tokens: np.ndarray,
                        k: Optional[int] = None) -> int:
@@ -402,13 +531,22 @@ class MemoryAugmentedEngine:
     def close(self) -> None:
         """Flush pending ingest, join background work and release durable
         resources: the group-commit writer (and its timer thread, if
-        ``timer_flush`` was set) and the doc side table's file handle.
-        Long-lived processes that construct engines repeatedly must close
-        them — daemon threads and fds do not collect themselves."""
+        ``timer_flush`` was set), the doc side table's file handle, every
+        read replica (transports + any catch-up prefetch thread) and the
+        shard-host connections. Long-lived processes that construct
+        engines repeatedly must close them — daemon threads and fds do not
+        collect themselves. Idempotent: benches and kill tests close
+        engines repeatedly, and a double close is a no-op."""
+        if self._closed:
+            return
+        self._closed = True
         self.flush()
         self.wait_durable()
         if self._group is not None:
             self._group.close()
+        for pool in self.read_replicas:
+            for rep in pool:
+                rep.close()
         if self._doc_table is not None:
             self._doc_table.close()
         if self._clients is not None:

@@ -31,6 +31,13 @@ it; the suite demands one answer:
   ``content_hash`` against the flat replay, one ``retrieval_hash`` from
   ``remote_sharded_query`` — including after one shard-server process is
   SIGKILLed mid-grouped-ingest and ``recover()`` reconciles over the wire.
+* **replica-routed reads (DESIGN.md §9).** The same randomized six-opcode
+  logs served through verified read replicas — and through engines with
+  ``ServeConfig(replicas=k)`` read pools, flat and sharded — report the
+  SAME ``retrieval_hash`` as every stack above, with the route recorded
+  in ``last_plan.served_by``; a stale pool (primary advanced past the
+  replicas' proven cursors) falls back to the primary with identical
+  answers.
 """
 import os
 import signal
@@ -520,3 +527,108 @@ def test_sigkill_one_shard_server_mid_grouped_ingest(tmp_path):
         for proc in procs:
             proc.kill()
             proc.wait(timeout=30)
+
+
+# --------------------------------------------------------------------------- #
+# replica-routed reads join the equivalence class (DESIGN.md §9)
+# --------------------------------------------------------------------------- #
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=4, deadline=None)
+def test_replica_reads_join_the_equivalence_class(seed):
+    """The same randomized six-opcode grouped ingest, served through
+    verified read replicas following the durable store: every replica at
+    the primary's cursor reports the class's one hash_pytree and one
+    retrieval_hash — a replica-served answer is indistinguishable from a
+    primary-served one, bit for bit."""
+    from repro.net.replica import LocalPrimary, ReplicaStore
+
+    log = _random_log(seed, 24, id_space=ID_SPACE)
+    batches = _batches(log, 6)
+    q = _queries(seed)
+    genesis = init_state(2 * CAP_PER_SHARD, D)
+    flat = machine.replay(genesis, log)
+    h_flat = hashing.hash_pytree(flat)
+    ids_ref, s_ref = search.exact_search(flat, q, K)
+    rh = query.retrieval_hash(ids_ref, s_ref)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        store = durability.DurableStore(tmp, genesis)
+        _grouped_ingest(store, batches)
+        for rid in range(2):
+            rep = ReplicaStore(LocalPrimary(store), genesis, replica_id=rid)
+            assert rep.catch_up() == store.t
+            assert rep.state_hash() == h_flat, \
+                f"replica {rid} left the one-hash class"
+            assert rep.retrieval_hash(q, K) == rh, \
+                f"replica-served retrieval diverged (replica {rid})"
+
+
+def test_engine_replica_pools_conform_and_stale_pools_fall_back(
+        model, tmp_path):
+    """Engines with ``ServeConfig(replicas=2)`` read pools — flat and
+    sharded — join the engine equivalence class: one memory_hash, one
+    retrieval_hash per route, with the route recorded as ``replica:<i>``.
+    A stale pool (ingest after the last ``sync_replicas``) must fall back
+    to the primary with identical answers; a re-sync re-earns the pool."""
+    cfg, params = model
+    rng = np.random.default_rng(0)
+    docs = rng.integers(0, cfg.vocab_size, (12, 12), dtype=np.int32)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 8), dtype=np.int32)
+
+    def sc(shards, d, replicas=0):
+        return ServeConfig(
+            capacity=64, retrieve_k=3, max_new_tokens=4, s_cache=96,
+            context_tokens=8, shards=shards, replicas=replicas,
+            durable_dir=str(d) if d is not None else None,
+            group_commit=wal.GroupCommitPolicy(
+                max_batch=1 << 20,
+                max_delay_s=3600) if d is not None else None)
+
+    primary_only = MemoryAugmentedEngine(cfg, params, sc(1, None))
+    pooled = {
+        1: MemoryAugmentedEngine(cfg, params,
+                                 sc(1, tmp_path / "flat", replicas=2)),
+        2: MemoryAugmentedEngine(cfg, params,
+                                 sc(2, tmp_path / "shard", replicas=2)),
+    }
+    engines = {0: primary_only, **pooled}
+    for eng in engines.values():
+        eng.insert_documents(docs[:8])
+    for eng in pooled.values():
+        eng.sync_replicas()
+
+    assert len({eng.memory_hash() for eng in engines.values()}) == 1
+    for route in ("exact", "hnsw"):
+        hashes = set()
+        for key, eng in engines.items():
+            eng.sc.route = route
+            hashes.add(eng.retrieval_hash(prompts))
+            expect = "primary" if key == 0 else "replica:"
+            assert eng.last_plan.served_by.startswith(expect), \
+                f"engine {key} served by {eng.last_plan.served_by!r}"
+        assert len(hashes) == 1, f"replica pools diverged on route {route}"
+
+    # stale pool: new ingest outruns the replicas' proven cursors — the
+    # read must fall back to the primary and still match the class
+    for eng in engines.values():
+        eng.sc.route = "exact"
+        eng.insert_documents(docs[8:])
+    hashes = set()
+    for eng in engines.values():
+        hashes.add(eng.retrieval_hash(prompts))
+        assert eng.last_plan.served_by == "primary", \
+            "a stale replica served a read past its proven cursor"
+    assert len(hashes) == 1, "primary fallback diverged"
+
+    # a re-sync re-earns the pool at the new cursor, same answers
+    for eng in pooled.values():
+        eng.sync_replicas()
+        rh = eng.retrieval_hash(prompts)
+        assert eng.last_plan.served_by.startswith("replica:")
+        assert rh in hashes
+
+    for eng in engines.values():
+        eng.close()
+        eng.close()  # regression: engine teardown must be idempotent

@@ -90,6 +90,12 @@ def _golden_messages():
         ("retain_ack",
          p.RetainAck(snapshots_dropped=3, wal_segments_dropped=2,
                      chunks_dropped=11, oldest_snapshot=16), 13),
+        ("side_tail", p.SideTail(from_index=2), 15),
+        ("side_tail_ack",
+         p.SideTailAck(from_index=2, count=4,
+                       table_digest=0xFEEDFACE01020304,
+                       records=(b"\x01side-record-a\xfe",
+                                b"\x02side-record-bb\xfd")), 15),
         ("error",
          p.ErrorMsg(kind="ValueError", message="cursor 99 ahead of WAL"),
          14),

@@ -25,14 +25,18 @@ from _pbt import given, settings
 from _pbt import strategies as st
 
 import repro  # noqa: F401
-from repro.core import boundary, distributed, hashing, query as query_lib
+from repro.core import boundary, distributed, hashing, machine
+from repro.core import query as query_lib
 from repro.core import shard_wal
 from repro.core.commands import log_to_bytes
 from repro.core.state import init_state
 from repro.net import protocol as p
-from repro.net.client import LocalTransport, RemoteShardClient
+from repro.net.client import LocalTransport, RemoteShardClient, \
+    SocketTransport
 from repro.net.replica import ReplicaDivergence, ReplicaStore
 from repro.net.server import ShardHost, ShardServer
+from repro.runtime.coordinator import promote_on_primary_loss, \
+    promote_sharded, proven_cursor
 from test_bulk_apply import _random_log
 
 D = 8
@@ -482,9 +486,325 @@ def test_remote_refusals_arrive_as_local_exception_families(tmp_path):
         client.rollback_to(client.t + 10)  # refused server-side
     with pytest.raises(ValueError):
         client.restore_at(10 ** 6)
-    from repro.net.client import SocketTransport
     dead = RemoteShardClient.__new__(RemoteShardClient)
     dead.transport = SocketTransport("127.0.0.1", 1)  # nothing listens here
     dead._rid = 0
     with pytest.raises(OSError):
         dead._request(p.Cursor(), p.CursorAck)
+
+
+# --------------------------------------------------------------------------- #
+# failover: SIGKILL the primary, promote a verified replica (DESIGN.md §9)
+# --------------------------------------------------------------------------- #
+
+
+def _spawn_primary(directory):
+    """A real shard-server subprocess — the thing we can honestly SIGKILL.
+    Returns (proc, writer_factory) once it prints its LISTENING line."""
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.net.server", "--dir", str(directory),
+         "--capacity", str(CAP), "--dim", str(D), "--port", "0"],
+        stdout=subprocess.PIPE, text=True,
+        env=dict(os.environ, PYTHONPATH=str(SRC)))
+    line = proc.stdout.readline().strip()
+    assert line.startswith("LISTENING "), f"server failed to start: {line!r}"
+    port = int(line.split()[1])
+    return proc, lambda: RemoteShardClient(SocketTransport("127.0.0.1", port))
+
+
+def _apply_prefix(batches, t_max):
+    """Reference truth: the in-memory apply of the first ``t_max`` durable
+    commands (replica cursors land on batch boundaries here)."""
+    state, applied = _genesis(), 0
+    for log in batches:
+        if applied + len(log) > t_max:
+            break
+        state = machine.bulk_apply(state, log, ef_construction=32)
+        applied += len(log)
+    assert applied == t_max, "t_max is not a batch boundary"
+    return state
+
+
+@settings(max_examples=3)
+@given(st.integers(0, 10 ** 6))
+def test_sigkilled_primary_failover_promotes_max_proven_prefix(seed):
+    """Property (the failover contract, DESIGN.md §9): SIGKILL the primary
+    mid-grouped-ingest with two replicas at staggered cursors; promotion
+    picks the max proven durable cursor, the promoted host's state and
+    retrieval hashes equal an independent in-memory apply of exactly that
+    prefix — every acked cursor survives, nothing past the max proven
+    cursor is resurrected."""
+    with tempfile.TemporaryDirectory() as td:
+        _sigkill_failover_case(pathlib.Path(td), seed)
+
+
+def _sigkill_failover_case(root, seed):
+    proc, mk_writer = _spawn_primary(root / "primary")
+    try:
+        writer = mk_writer()
+        batches = [_random_log(seed * 1000 + i, 4, ID_SPACE)
+                   for i in range(4)]
+        reps = [ReplicaStore(mk_writer(), _genesis(),
+                             directory=root / f"replica_{i}", replica_id=i)
+                for i in range(2)]
+
+        writer.append_many(batches[:2])   # grouped ingest, part 1
+        t_lag = reps[0].catch_up()        # replica 0 stops following here
+        writer.append(batches[2])
+        t_max = reps[1].catch_up()        # replica 1 proves one batch more
+        assert 0 < t_lag < t_max == writer.t
+        acked = {r.replica_id: r.t for r in reps}
+
+        writer.append(batches[3])         # the unshipped suffix...
+        t_dead = writer.t
+        proc.kill()                       # ...dies with the primary
+        proc.wait(timeout=30)
+
+        host, winner_idx, t = promote_on_primary_loss(reps)
+        assert winner_idx == 1 and t == t_max
+        assert t == max(proven_cursor(r) for r in reps)
+        assert host.store.t == t_max < t_dead, \
+            "the dead primary's unshipped suffix was resurrected"
+        assert all(host.store.t >= c for c in acked.values()), \
+            "an acked cursor was lost in failover"
+
+        ref = _apply_prefix(batches, t_max)
+        assert host.state_hash() == hashing.hash_pytree(ref)
+        q = _queries(seed)
+        plan = query_lib.plan_query(shard_wal.live_count(ref), K, 64)
+        ids, scores = query_lib.execute_plan(ref, q, K, plan)
+        got = query_lib.execute_plan(host.state, q, K, plan)
+        assert query_lib.retrieval_hash(*got) == query_lib.retrieval_hash(
+            ids, scores)
+
+        # the promoted host is a full primary: it ingests and serves tails
+        new_writer = RemoteShardClient(LocalTransport(host))
+        new_writer.append(_random_log(seed + 7, 3, ID_SPACE))
+        straggler = reps[0]
+        straggler.primary = new_writer
+        assert straggler.catch_up() == host.store.t
+        assert straggler.state_hash() == host.state_hash()
+        host.close()
+    finally:
+        proc.kill()
+        proc.wait(timeout=30)
+
+
+def test_tampered_replica_wal_refuses_promotion(tmp_path):
+    """Replace a replica's WAL with a valid-but-different log (same length,
+    different commands): the promotion cross-check — winner's durable
+    prefix hashed at each survivor's proven cursor — catches it and the
+    promotion is refused with ReplicaDivergence."""
+    host, _ = _primary(tmp_path / "primary", batches=3, seed=5)
+    good = ReplicaStore(RemoteShardClient(LocalTransport(host)), _genesis(),
+                        directory=tmp_path / "replica_good", replica_id=0)
+    good.catch_up()
+
+    # forge a straggler whose WAL is valid (every record self-checks, the
+    # state replays cleanly) but is NOT a prefix of the primary's log
+    forged_primary, _ = _primary(tmp_path / "forged", batches=2, seed=6)
+    forged = ReplicaStore(RemoteShardClient(LocalTransport(forged_primary)),
+                          _genesis(), directory=tmp_path / "replica_forged",
+                          replica_id=1)
+    forged.catch_up()
+    assert 0 < forged.t < good.t  # good wins on cursor, forged is checked
+
+    with pytest.raises(ReplicaDivergence, match="promotion refused"):
+        promote_on_primary_loss([good, forged])
+
+    # and an in-memory follower can never be the proven winner at all
+    mem = ReplicaStore(RemoteShardClient(LocalTransport(host)), _genesis(),
+                       replica_id=2)
+    mem.catch_up()
+    with pytest.raises(ValueError, match="no proven durable prefix"):
+        promote_on_primary_loss([mem])
+
+
+def test_promote_after_crash_window_recovers_from_wal(tmp_path):
+    """A replica SIGKILLed between its WAL append and its state commit
+    reopens one verified slice ahead in the WAL; promotion reconciles
+    through recover() and lands on the durable cursor."""
+    host, _ = _primary(tmp_path / "primary", batches=2, seed=9)
+    rep = ReplicaStore(RemoteShardClient(LocalTransport(host)), _genesis(),
+                       directory=tmp_path / "replica", replica_id=0)
+    rep.catch_up()
+    # simulate the crash window: durable cursor ahead of committed state
+    rep.state, rep._hash, rep.t = rep.store.restore_at(0)[0], \
+        hashing.hash_pytree(_genesis()), 0
+    assert rep.store.t > rep.t
+    promoted = rep.promote()
+    assert promoted.store.t == host.store.t
+    assert promoted.state_hash() == host.state_hash()
+    promoted.close()
+
+
+def test_promote_sharded_reconciles_staggered_winners(tmp_path):
+    """Sharded failover: per-shard winners at staggered cursors are rolled
+    back to one global cursor through ShardedDurableStore.recover() — the
+    promoted fleet lands on exactly the prefix every shard can prove, and
+    it hash-matches the local twin at that cursor."""
+    n = 2
+    genesis = distributed.init_sharded_host(n, CAP, D)
+    hosts = [ShardHost(tmp_path / f"host_{s}",
+                       distributed.shard_slice(genesis, s, n))
+             for s in range(n)]
+    clients = [RemoteShardClient(LocalTransport(h)) for h in hosts]
+    store = shard_wal.ShardedDurableStore(tmp_path / "coord",
+                                          backends=clients)
+    local = shard_wal.ShardedDurableStore(tmp_path / "local", genesis,
+                                          n_shards=n)
+    batches = [_random_log(30 + i, 5, ID_SPACE) for i in range(3)]
+    for b in batches:
+        assert store.append(b) == local.append(b)
+
+    reps = [ReplicaStore(RemoteShardClient(LocalTransport(hosts[s])),
+                         distributed.shard_slice(genesis, s, n),
+                         directory=tmp_path / f"replica_{s}", replica_id=s)
+            for s in range(n)]
+    reps[0].catch_up()                    # shard 0's replica proves it all
+    t_stale = store.t - store.planned_advance(batches[-1])
+    # shard 1's replica lags one group (its primary dies before it tails)
+    while reps[1].t < t_stale:
+        reps[1].sync(max_commands=1)
+    assert reps[1].t == t_stale
+
+    new_store, state, h, t, promoted = promote_sharded(
+        tmp_path / "coord2", [[reps[0]], [reps[1]]])
+    assert t == t_stale, "the fleet reconciled past a shard's proven prefix"
+    assert [ph.store.t for ph in promoted] == [t_stale, t_stale], \
+        "recover() did not roll the ahead winner back"
+    assert h == local.restore_at(t_stale)[1], \
+        "promoted fleet diverged from the local twin at the global cursor"
+    # the reconciled fleet is a serving store again: it ingests in lockstep
+    local2 = shard_wal.ShardedDurableStore(tmp_path / "local2", genesis,
+                                           n_shards=n)
+    for b in batches[:2]:
+        local2.append(b)
+    assert new_store.append(batches[2]) == local2.append(batches[2])
+    for ph in promoted:
+        ph.close()
+
+
+# --------------------------------------------------------------------------- #
+# side-table shipping: the promoted replica serves prefixes without refilling
+# --------------------------------------------------------------------------- #
+
+
+def test_side_table_ships_verified_and_survives_promotion(tmp_path):
+    host, writer = _primary(tmp_path / "primary", batches=2, seed=3)
+    host.side_table.put(1, b"alpha tokens")
+    host.side_table.put(2, b"beta tokens")
+    rep = ReplicaStore(RemoteShardClient(LocalTransport(host)), _genesis(),
+                       directory=tmp_path / "replica", replica_id=0)
+    rep.catch_up()
+    assert rep.side_table.record_count == host.side_table.record_count
+    assert rep.side_table.entries == host.side_table.entries
+    assert rep.side_table.digest_at(2) == host.side_table.digest_at(2)
+
+    # incremental: later puts (including an overwrite) ship on the next sync
+    host.side_table.put(1, b"alpha v2")
+    writer.append(_random_log(8, 3, ID_SPACE))
+    rep.catch_up()
+    assert rep.side_table.record_count == 3
+    assert rep.side_table.entries[1] == b"alpha v2"
+
+    promoted = rep.promote()
+    assert promoted.side_table.entries == host.side_table.entries
+    assert promoted.side_table.digest_at(3) == host.side_table.digest_at(3)
+    # the promoted host serves SIDE_TAIL itself: a next-generation replica
+    # mirrors from it without the old primary
+    recs, count, digest = RemoteShardClient(
+        LocalTransport(promoted)).side_tail(0)
+    assert count == 3 and digest == host.side_table.digest_at(3)
+    promoted.close()
+
+
+def test_tampered_side_table_shipment_commits_nothing(tmp_path):
+    """A man-in-the-middle rewriting a shipped side-table record (and
+    re-signing the per-record digest) is caught by the chained prefix
+    digest, and the mirror commits nothing."""
+    import struct as _struct
+
+    host, _ = _primary(tmp_path / "primary", batches=1, seed=4)
+    host.side_table.put(7, b"payload")
+
+    def rewrite(m):
+        body = _struct.pack("<QI", 7, 4) + b"evil"
+        raw = body + _struct.pack(
+            "<Q", hashing.digest_bytes(body))  # self-consistent record
+        return dataclasses.replace(m, records=(raw,))
+
+    class TamperSide:
+        def __init__(self, inner):
+            self.inner = inner
+
+        def request(self, data):
+            resp = self.inner.request(data)
+            msg, rid, _ = p.decode_frame(resp)
+            if isinstance(msg, p.SideTailAck) and msg.records:
+                return p.encode_frame(rewrite(msg), rid)
+            return resp
+
+        def close(self):
+            self.inner.close()
+
+    client = RemoteShardClient(LocalTransport(host))
+    client.transport = TamperSide(LocalTransport(host))
+    rep = ReplicaStore(client, _genesis(),
+                       directory=tmp_path / "replica", replica_id=0)
+    with pytest.raises(ReplicaDivergence, match="side-table prefix digest"):
+        rep.catch_up()
+    assert rep.side_table.record_count == 0, "a tampered record committed"
+
+
+# --------------------------------------------------------------------------- #
+# pipelined catch-up + teardown
+# --------------------------------------------------------------------------- #
+
+
+def test_pipelined_catch_up_is_bit_identical_to_serial(tmp_path):
+    host, _ = _primary(tmp_path / "primary", batches=4, seed=11)
+    serial = ReplicaStore(RemoteShardClient(LocalTransport(host)),
+                          _genesis(), replica_id=0)
+    serial.catch_up(max_commands=3)
+    piped = ReplicaStore(RemoteShardClient(LocalTransport(host)),
+                         _genesis(), replica_id=1,
+                         prefetch=RemoteShardClient(LocalTransport(host)))
+    assert piped.catch_up(max_commands=3, pipeline=True) == serial.t \
+        == host.store.t
+    assert piped.state_hash() == serial.state_hash() == host.state_hash()
+    q = _queries(11)
+    assert piped.retrieval_hash(q, K) == serial.retrieval_hash(q, K)
+
+
+def test_pipelined_catch_up_rides_prefetch_faults(tmp_path):
+    """A lossy prefetch connection only costs the fallback round trip —
+    verification and convergence are unchanged."""
+    host, _ = _primary(tmp_path / "primary", batches=4, seed=13)
+    flaky = RemoteShardClient(LocalTransport(host))
+    flaky.transport = FaultyTransport(LocalTransport(host), 13,
+                                      drop_resp=0.5)
+    rep = ReplicaStore(RemoteShardClient(LocalTransport(host)), _genesis(),
+                       replica_id=2, prefetch=flaky)
+    assert rep.catch_up(max_commands=2, pipeline=True,
+                        max_rounds=200) == host.store.t
+    assert rep.state_hash() == host.state_hash()
+
+
+def test_pipeline_without_prefetch_client_is_refused(tmp_path):
+    host, _ = _primary(tmp_path / "primary", batches=1, seed=1)
+    rep = ReplicaStore(RemoteShardClient(LocalTransport(host)), _genesis())
+    with pytest.raises(ValueError, match="prefetch"):
+        rep.catch_up(pipeline=True)
+
+
+def test_replica_double_close_is_a_noop(tmp_path):
+    host, _ = _primary(tmp_path / "primary", batches=1, seed=2)
+    rep = ReplicaStore(RemoteShardClient(LocalTransport(host)), _genesis(),
+                       directory=tmp_path / "replica", replica_id=0,
+                       prefetch=RemoteShardClient(LocalTransport(host)))
+    rep.catch_up(pipeline=True)
+    rep.close()
+    rep.close()  # regression: the second close must be a no-op
+    host.close()
+    host.close()
