@@ -1,0 +1,139 @@
+"""DESIGN.md §10: the compressed coarse tier vs planner-exact vs HNSW.
+
+Three read paths over the same Q16.16 memory, every answer hash-checked:
+
+  * planner-exact       — the n*d*4-byte full scan (the baseline);
+  * coarse + re-rank    — int8 coarse scan (n*(d+8) bytes: codes + norms)
+                          then an exact Q16.16 re-rank of ef rows
+                          (ef*d*4 bytes); at ef >= live the answer is
+                          asserted BIT-EQUAL to exact, at the working ef
+                          Recall@k is measured;
+  * HNSW                — the graph route at a matched recall point.
+
+Derived columns report QPS, the analytic bytes-scanned model, and the
+reduction factor; the run FAILS (RuntimeError, counted by the harness) if
+the coverage hash differs from exact or the bytes reduction falls below
+2x — the acceptance floor.
+
+Run directly (``python benchmarks/bench_coarse.py [--smoke]``) or via
+``benchmarks.run``. ``--smoke`` shrinks the corpus so CI exercises the
+whole path in seconds.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+import repro  # noqa: F401
+import jax.numpy as jnp
+from benchmarks.common import emit
+from repro.core import boundary, codes, commands, machine, query, search
+from repro.core.state import init_state
+
+
+def _time_min(fn, iters: int = 3):
+    """min-of-iters wall time (seconds), jax-synced; returns (t, out)."""
+    out = fn()
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn()
+        import jax
+        jax.tree.map(lambda x: x.block_until_ready()
+                     if hasattr(x, "block_until_ready") else x, out)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def _recall(got_ids, ref_ids, k: int) -> float:
+    g, r = np.asarray(got_ids), np.asarray(ref_ids)
+    return float(np.mean([len(set(g[i]) & set(r[i])) / k
+                          for i in range(len(g))]))
+
+
+def run_tier(n: int, dim: int, k: int, ef: int, batch: int,
+             hnsw_ef: int) -> None:
+    rng = np.random.default_rng(13)
+    centers = rng.normal(size=(16, dim)) * 2.0
+    vecs = (centers[rng.integers(0, 16, n)]
+            + rng.normal(size=(n, dim))).astype(np.float32)
+    qf = (centers[rng.integers(0, 16, batch)]
+          + rng.normal(size=(batch, dim))).astype(np.float32)
+
+    cap = 1 << (n - 1).bit_length()
+    state = machine.bulk_apply(
+        init_state(cap, dim, hnsw_degree=16),
+        commands.insert_batch(jnp.arange(n, dtype=jnp.int64),
+                              boundary.normalize_embedding(vecs)))
+    q = boundary.admit_query(qf)
+    table = codes.build(state)
+
+    # -- planner-exact: the baseline scan ------------------------------- #
+    plan_e = query.plan_query(n, k, ef, route="exact")
+    t_e, (ids_e, s_e) = _time_min(
+        lambda: query.execute_plan(state, q, k, plan_e))
+    h_exact = query.retrieval_hash(ids_e, s_e)
+    bytes_exact = n * dim * 4
+    emit(f"coarse_baseline_exact_n{n}", t_e / batch * 1e6,
+         f"qps={batch / t_e:.0f};bytes_scanned={bytes_exact};"
+         f"hash={h_exact:#x}")
+
+    # -- coverage point: ef_coarse >= live ==> bit-equal to exact ------- #
+    plan_cov = query.plan_query(n, k, ef, route="coarse", ef_coarse=cap,
+                                dim=dim)
+    ids_cov, s_cov = query.execute_plan(state, q, k, plan_cov, codes=table)
+    h_cov = query.retrieval_hash(ids_cov, s_cov)
+    emit(f"coarse_coverage_n{n}", 0.0,
+         f"ef_coarse={cap};hash={h_cov:#x};hash_equal={h_cov == h_exact}")
+
+    # -- working point: the compressed scan at ef << n ------------------ #
+    plan_c = query.plan_query(n, k, ef, route="coarse", ef_coarse=ef,
+                              dim=dim)
+    t_c, (ids_c, s_c) = _time_min(
+        lambda: query.execute_plan(state, q, k, plan_c, codes=table))
+    recall_c = _recall(ids_c, ids_e, k)
+    bytes_coarse = n * (dim + 8) + ef * dim * 4
+    reduction = bytes_exact / bytes_coarse
+    h_c = query.retrieval_hash(ids_c, s_c)
+    # determinism at partial coverage: the same plan re-serves the same hash
+    _, (ids_c2, s_c2) = _time_min(
+        lambda: query.execute_plan(state, q, k, plan_c, codes=table),
+        iters=1)
+    stable = query.retrieval_hash(ids_c2, s_c2) == h_c
+    emit(f"coarse_rerank_n{n}_ef{ef}", t_c / batch * 1e6,
+         f"qps={batch / t_c:.0f};recall@{k}={recall_c:.3f};"
+         f"bytes_scanned={bytes_coarse};reduction={reduction:.2f}x;"
+         f"hash={h_c:#x};hash_stable={stable}")
+
+    # -- HNSW at a matched-recall operating point ----------------------- #
+    plan_h = query.plan_query(n, k, hnsw_ef, route="hnsw")
+    t_h, (ids_h, s_h) = _time_min(
+        lambda: query.execute_plan(state, q, k, plan_h))
+    recall_h = _recall(ids_h, ids_e, k)
+    emit(f"coarse_vs_hnsw_n{n}_ef{hnsw_ef}", t_h / batch * 1e6,
+         f"qps={batch / t_h:.0f};recall@{k}={recall_h:.3f};"
+         f"coarse_recall@{k}={recall_c:.3f}")
+
+    # -- the acceptance floor ------------------------------------------- #
+    if h_cov != h_exact or not stable:
+        raise RuntimeError(
+            f"coarse tier hash violation at n={n}: coverage={h_cov:#x} "
+            f"exact={h_exact:#x} stable={stable}")
+    if reduction < 2.0:
+        raise RuntimeError(
+            f"bytes-scanned reduction {reduction:.2f}x below the 2x floor "
+            f"at n={n}, dim={dim}, ef={ef}")
+
+
+def run(smoke: bool = False) -> None:
+    if smoke:
+        run_tier(n=1_024, dim=32, k=10, ef=128, batch=16, hnsw_ef=64)
+    else:
+        run_tier(n=8_192, dim=64, k=10, ef=512, batch=32, hnsw_ef=64)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(smoke="--smoke" in sys.argv[1:])

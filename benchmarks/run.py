@@ -10,6 +10,9 @@ Prints ``name,us_per_call,derived`` CSV (stdout). Mapping to the paper:
                                      sharded ingest + kill + recover)
   bench_serve       — DESIGN.md §7  (sharded vs single-host serve engine,
                                      memory/retrieval hashes cross-checked)
+  bench_coarse      — DESIGN.md §10 (int8 coarse scan + exact re-rank vs
+                                     planner-exact and HNSW; bytes-scanned
+                                     model, coverage hash asserted)
   bench_replication — DESIGN.md §8  (ingest with 0/1/2 verified replicas,
                                      cold-replica catch-up lag, hash-checked)
   bench_roofline    — EXPERIMENTS.md §Roofline (reads dry-run artifacts)
@@ -19,15 +22,16 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_contracts, bench_divergence, bench_ingest,
-                            bench_latency, bench_recall, bench_replication,
-                            bench_roofline, bench_serve, bench_snapshot,
-                            bench_wal)
+    from benchmarks import (bench_coarse, bench_contracts, bench_divergence,
+                            bench_ingest, bench_latency, bench_recall,
+                            bench_replication, bench_roofline, bench_serve,
+                            bench_snapshot, bench_wal)
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_divergence, bench_contracts, bench_recall,
                 bench_snapshot, bench_latency, bench_ingest, bench_wal,
-                bench_serve, bench_replication, bench_roofline):
+                bench_serve, bench_replication, bench_coarse,
+                bench_roofline):
         try:
             mod.run()
         except Exception as e:  # noqa: BLE001

@@ -18,7 +18,11 @@ Public surface:
                 crash recovery, retention (DESIGN.md §5)
   shard_wal   — ShardedDurableStore: per-shard WALs reconciled to one
                 global cursor, durable distributed ingest (DESIGN.md §6)
-  search      — exact deterministic k-NN (wide integer scores)
+  search      — exact deterministic k-NN (wide integer scores) and the
+                compressed coarse tier's scan + exact re-rank
+  codes       — deterministic int8 code table over Q16.16 rows: pure
+                function of the live rows, incrementally maintained,
+                chunk-snapshot-able (DESIGN.md §10)
   hnsw        — deterministic HNSW (paper §7), TPU-adapted
   query       — batched deterministic query engine: vmapped HNSW, planner,
                 shard fan-out (DESIGN.md §4)
@@ -33,9 +37,9 @@ Most-used entry points (each docstring states the contract it promises):
   ShardedDurableStore      — per-shard WALs, one reconciled global cursor
   plan_query               — deterministic exact-vs-HNSW route from host ints
 """
-from repro.core import (boundary, commands, contracts, distributed, durability,
-                        fixedpoint, hashing, hnsw, machine, query, search,
-                        shard_wal, snapshot, state, wal)
+from repro.core import (boundary, codes, commands, contracts, distributed,
+                        durability, fixedpoint, hashing, hnsw, machine, query,
+                        search, shard_wal, snapshot, state, wal)
 from repro.core.contracts import (CONTRACTS, DEFAULT_CONTRACT, Q8_8, Q16_16,
                                   Q32_32, PrecisionContract, get_contract)
 from repro.core.durability import DurableStore, SideTable, restore_at
@@ -48,9 +52,9 @@ from repro.core.wal import (CompactionPolicy, GroupCommitPolicy,
                             GroupCommitWriter, WriteAheadLog)
 
 __all__ = [
-    "boundary", "commands", "contracts", "distributed", "durability",
-    "fixedpoint", "hashing", "hnsw", "machine", "query", "search",
-    "shard_wal", "snapshot", "state", "wal",
+    "boundary", "codes", "commands", "contracts", "distributed",
+    "durability", "fixedpoint", "hashing", "hnsw", "machine", "query",
+    "search", "shard_wal", "snapshot", "state", "wal",
     "CONTRACTS", "DEFAULT_CONTRACT", "Q8_8", "Q16_16", "Q32_32",
     "PrecisionContract", "get_contract", "MemoryState", "init_state",
     "apply_command", "bulk_apply", "replay", "content_hash",

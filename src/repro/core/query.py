@@ -40,6 +40,7 @@ INF = search.INF
 
 ROUTE_EXACT = "exact"
 ROUTE_HNSW = "hnsw"
+ROUTE_COARSE = "coarse"
 
 
 # --------------------------------------------------------------------------- #
@@ -70,10 +71,10 @@ def batched_hnsw_search(state: MemoryState, queries_raw: jax.Array, k: int,
 class QueryPlan:
     """A replayable routing decision. Pure data: two plans built from the
     same facts compare equal, and the facts are recorded for audit."""
-    route: str               # ROUTE_EXACT | ROUTE_HNSW
+    route: str               # ROUTE_EXACT | ROUTE_HNSW | ROUTE_COARSE
     k: int
     ef: int
-    use_kernel: bool         # exact route only (HNSW gathers row-wise)
+    use_kernel: bool         # exact/coarse routes (HNSW gathers row-wise)
     live_count: int          # the fact the decision was made from
     reason: str
     # who answered: "primary", or "replica:<i>" when the serve engine's
@@ -81,35 +82,54 @@ class QueryPlan:
     # recorded so replica-served answers are replayable audit artifacts
     # like every other planner choice
     served_by: str = "primary"
+    # compressed-tier facts (DESIGN.md §10): candidate-set size for the
+    # coarse route (0 = tier disabled) and the vector dimension the
+    # decision was made from — recorded so a coarse answer is replayable
+    # from (plan, log cursor, query) like every other route
+    ef_coarse: int = 0
+    dim: int = 0
 
 
 def plan_query(live_count: int, k: int, ef: int, *,
                use_kernel: bool = False, exact_threshold: int = 1024,
-               route: str = "auto") -> QueryPlan:
-    """Pick exact-scan vs HNSW from static facts — host ints only, so the
-    same request against the same memory plans identically everywhere.
+               route: str = "auto", ef_coarse: int = 0,
+               dim: int = 0) -> QueryPlan:
+    """Pick exact-scan vs HNSW vs the compressed coarse tier from static
+    facts — host ints only, so the same request against the same memory
+    plans identically everywhere.
 
-    Rules (DESIGN.md §4), first match wins:
+    Rules (DESIGN.md §4, §10), first match wins:
       1. forced route (``route != "auto"``) — operator override (forcing
-         "hnsw" with k > ef raises: the beam cannot return k results);
+         "hnsw" with k > ef, or "coarse" with k > ef_coarse, raises: the
+         candidate set cannot return k results);
       2. ``k > ef`` → exact (an ef-beam cannot return k results);
       3. ``live_count <= exact_threshold`` → exact (the scan is cheap and
          exact; no reason to pay graph traversal);
       4. ``ef >= live_count`` → exact (the beam would cover the whole
          corpus anyway — a scan does the same work without the gathers);
-      5. otherwise → HNSW.
+      5. ``0 < k <= ef_coarse`` and ``4 * ef_coarse <= 3 * live_count``
+         and ``dim <= 8192`` → coarse: the int8 scan streams 1/4 the
+         bytes of the exact scan, so bytes beat exact once the re-rank
+         pool is under 3/4 of the corpus (the break-even of
+         live*dim*1 + ef*dim*4 vs live*dim*4); the dim cap is the qcoarse
+         kernel's int32 exactness bound;
+      6. otherwise → HNSW.
     """
     def mk(r, why):
         return QueryPlan(route=r, k=k, ef=ef, use_kernel=use_kernel,
-                         live_count=live_count, reason=why)
+                         live_count=live_count, reason=why,
+                         ef_coarse=ef_coarse, dim=dim)
 
     if route != "auto":
-        if route not in (ROUTE_EXACT, ROUTE_HNSW):
+        if route not in (ROUTE_EXACT, ROUTE_HNSW, ROUTE_COARSE):
             raise ValueError(f"unknown route {route!r}")
         if route == ROUTE_HNSW and k > ef:
             # an ef-beam physically cannot return k results; truncating
             # silently would hand the caller [B, ef]-shaped arrays
             raise ValueError(f"route='hnsw' needs k <= ef, got k={k} ef={ef}")
+        if route == ROUTE_COARSE and k > ef_coarse:
+            raise ValueError(f"route='coarse' needs k <= ef_coarse, "
+                             f"got k={k} ef_coarse={ef_coarse}")
         return mk(route, "forced")
     if k > ef:
         return mk(ROUTE_EXACT, f"k={k} > ef={ef}")
@@ -117,20 +137,35 @@ def plan_query(live_count: int, k: int, ef: int, *,
         return mk(ROUTE_EXACT, f"live={live_count} <= {exact_threshold}")
     if ef >= live_count:
         return mk(ROUTE_EXACT, f"ef={ef} >= live={live_count}")
+    if (0 < k <= ef_coarse and 4 * ef_coarse <= 3 * live_count
+            and dim <= 8192):
+        return mk(ROUTE_COARSE,
+                  f"int8 scan + {ef_coarse}-rerank beats exact bytes at "
+                  f"live={live_count}, dim={dim}")
     return mk(ROUTE_HNSW, f"live={live_count}, k={k}, ef={ef}")
 
 
 def execute_plan(state: MemoryState, queries_raw: jax.Array, k: int,
-                 plan: QueryPlan, *, metric: str = search.METRIC_L2
-                 ) -> Tuple[jax.Array, jax.Array]:
+                 plan: QueryPlan, *, metric: str = search.METRIC_L2,
+                 codes=None) -> Tuple[jax.Array, jax.Array]:
     """Run the planned route: (ids [B,k] int64, wide scores [B,k] int64).
 
-    Both routes score with the same wide integer L2, so the planner can
-    switch routes without changing a returned score's meaning.
+    All routes score with the same wide integer metric, so the planner can
+    switch routes without changing a returned score's meaning. The coarse
+    route takes the caller's maintained ``codes.CodeTable`` when given,
+    and otherwise derives it from the state on the spot — the table is a
+    pure function of the live rows, so both are bit-identical (the
+    maintained table is a cost optimization, never a semantic one).
     """
     if plan.route == ROUTE_EXACT:
         return search.exact_search(state, queries_raw, k, metric=metric,
                                    use_kernel=plan.use_kernel)
+    if plan.route == ROUTE_COARSE:
+        from repro.core import codes as codes_lib  # lazy: leaf-level module
+        table = codes if codes is not None else codes_lib.build(state)
+        return search.coarse_search(state, table, queries_raw, k,
+                                    ef_coarse=plan.ef_coarse, metric=metric,
+                                    use_kernel=plan.use_kernel)
     ids, dists, _ = batched_hnsw_search(state, queries_raw, k, ef=plan.ef)
     return ids, dists
 
@@ -164,8 +199,8 @@ def sharded_query(mesh, axis: str, state: MemoryState, queries_raw: jax.Array,
 
 def sharded_host_query(state: MemoryState, n_shards: int,
                        queries_raw: jax.Array, k: int, plan: QueryPlan, *,
-                       metric: str = search.METRIC_L2
-                       ) -> Tuple[jax.Array, jax.Array]:
+                       metric: str = search.METRIC_L2,
+                       tables=None) -> Tuple[jax.Array, jax.Array]:
     """The planned route fanned out over a *host-side* sharded-layout state
     (no mesh): per-shard execution through the ``shard_wal`` twins, one
     order-invariant merge. This is the serve engine's sharded read path.
@@ -174,7 +209,12 @@ def sharded_host_query(state: MemoryState, n_shards: int,
     content (the merge is permutation- and layout-invariant). HNSW route:
     deterministic for a fixed shard count; bit-identical to the flat graph
     whenever every per-shard beam is exhaustive (``plan.ef`` >= per-shard
-    live count) — the conformance regime DESIGN.md §7 pins.
+    live count) — the conformance regime DESIGN.md §7 pins. Coarse route:
+    per-shard int8 scan + exact re-rank; bit-identical to flat exact
+    whenever every shard's candidate set covers its slice
+    (``plan.ef_coarse`` >= per-shard live count — DESIGN.md §10).
+    ``tables`` optionally carries the engine's maintained per-shard code
+    tables; absent, each shard derives its table from its slice.
     """
     from repro.core import shard_wal  # lazy: shard_wal imports us lazily
 
@@ -182,6 +222,10 @@ def sharded_host_query(state: MemoryState, n_shards: int,
         return shard_wal.exact_search_sharded(
             state, n_shards, queries_raw, k, metric=metric,
             use_kernel=plan.use_kernel)
+    if plan.route == ROUTE_COARSE:
+        return shard_wal.coarse_search_sharded(
+            state, n_shards, queries_raw, k, ef_coarse=plan.ef_coarse,
+            metric=metric, use_kernel=plan.use_kernel, tables=tables)
     return shard_wal.hnsw_search_sharded(state, n_shards, queries_raw, k,
                                          ef=plan.ef)
 

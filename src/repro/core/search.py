@@ -117,6 +117,76 @@ def merge_candidates(scores: jax.Array, ids: jax.Array, k: int
     return s_out, jnp.where(s_out < INF, i_out, jnp.int64(-1))
 
 
+@partial(jax.jit, static_argnames=("k", "ef_coarse", "metric", "use_kernel"))
+def coarse_search(state: MemoryState, table, queries_raw: jax.Array, k: int,
+                  *, ef_coarse: int, metric: str = METRIC_L2,
+                  use_kernel: bool = False
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Compressed-tier k-NN: int8 coarse scan, exact Q16.16 re-rank.
+
+    Two stages (DESIGN.md §10):
+
+    1. *Coarse scan*: approximate integer scores over the int8 code table
+       (``kernels/qcoarse`` when ``use_kernel``, its jnp oracle otherwise —
+       bit-identical either way), candidates = the ``ef_coarse`` best by
+       (approx score, slot).
+    2. *Re-rank*: the survivors re-scored with the exact wide Q16.16
+       ``score_block`` arithmetic and combined by ``merge_candidates`` —
+       the same (score, id) tie-break every other read path uses.
+
+    The served scores are therefore exact: quantization error can only
+    cost *recall* (a true neighbor missing from the candidate set), never
+    score fidelity. Coverage implies bit-exactness: whenever the candidate
+    set contains every live row — by construction when
+    ``ef_coarse >= live_count`` — the result equals ``exact_search``'s
+    bit-for-bit, which is the conformance suite's coarse-route contract.
+
+    Returns (ids [nq, k] int64, scores [nq, k] int64); missing results
+    are (-1, INF), exactly like ``exact_search``.
+    """
+    from repro.core import codes as codes_lib    # lazy: codes is leaf-level
+    from repro.kernels.qcoarse import ops as qcoarse_ops
+
+    n = state.vectors.shape[0]
+    ef = min(ef_coarse, n)
+    if ef < k:
+        raise ValueError(
+            f"coarse route needs ef_coarse >= k (got ef_coarse={ef_coarse}, "
+            f"k={k}, capacity={n}): a candidate set of {ef} cannot "
+            f"yield {k} results")
+
+    w = codes_lib.query_weights(queries_raw, table, metric)
+    s = qcoarse_ops.qcoarse(w, table.codes, use_pallas=use_kernel)
+    if metric == METRIC_L2:
+        approx = table.norms[None, :] - 2 * s
+    else:
+        approx = -s
+    approx = jnp.where(state.valid[None, :], approx, INF)
+
+    # candidate selection by (approx score, slot): slots are unique, so the
+    # set is deterministic; the *served* tie order is fixed later by the
+    # exact (score, id) merge, the same combine every fan-in path shares
+    slots = jnp.arange(n, dtype=jnp.int64)
+    if use_kernel:
+        s_c, slot_c = _topk_by_score_kernel(approx, slots, ef)
+    else:
+        s_c, slot_c = topk_by_score(approx, slots, ef)
+    slot_i = slot_c.astype(jnp.int32)                       # [nq, ef]
+
+    # exact re-rank: the same wide integer arithmetic as score_block over
+    # the full arena, gathered per query (integer sums are order-invariant,
+    # so the values are bit-identical to the full scan's)
+    rows = state.vectors[slot_i]                            # [nq, ef, d]
+    exact = jax.vmap(
+        lambda q, db: score_block(q[None, :], db, metric)[0]
+    )(queries_raw, rows)                                    # [nq, ef]
+    live = state.valid[slot_i] & (s_c < INF)
+    exact = jnp.where(live, exact, INF)
+    cand_ids = jnp.where(live, state.ids[slot_i], jnp.int64(1) << 62)
+    s_out, i_out = merge_candidates(exact, cand_ids, k)
+    return i_out, s_out
+
+
 def merge_topk(scores_a: jax.Array, ids_a: jax.Array,
                scores_b: jax.Array, ids_b: jax.Array, k: int
                ) -> Tuple[jax.Array, jax.Array]:

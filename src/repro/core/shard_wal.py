@@ -431,6 +431,41 @@ def exact_search_sharded(state: MemoryState, n_shards: int,
     return i_out, s_out
 
 
+def coarse_search_sharded(state: MemoryState, n_shards: int,
+                          queries_raw: jax.Array, k: int, *,
+                          ef_coarse: int, metric: str = search.METRIC_L2,
+                          use_kernel: bool = False,
+                          tables: Optional[Sequence] = None
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """The compressed tier over a host-side sharded-layout state: each
+    shard coarse-scans its own int8 code table and re-ranks exactly, the
+    per-shard top-k candidates combine with the one shared (score, id)
+    merge — the sharded twin of ``search.coarse_search``. Served scores
+    are exact Q16.16 on every path, so whenever every shard's candidate
+    set covers its slice (``ef_coarse`` >= per-shard live count) the
+    answer is bit-identical to ``exact_search_sharded`` — and therefore
+    to the flat scan (DESIGN.md §10). ``tables[s]``, when given, must be
+    ``codes.build`` of shard s's slice (the engine maintains exactly
+    that); otherwise each shard derives its table on the spot. Returns
+    (ids [nq, k], scores [nq, k])."""
+    from repro.core import codes as codes_lib  # lazy: leaf-level module
+
+    ids_parts, score_parts = [], []
+    for s in range(n_shards):
+        local = distributed.shard_slice(state, s, n_shards)
+        table = tables[s] if tables is not None else codes_lib.build(local)
+        ids, scores = search.coarse_search(local, table, queries_raw, k,
+                                           ef_coarse=ef_coarse,
+                                           metric=metric,
+                                           use_kernel=use_kernel)
+        ids_parts.append(ids)
+        score_parts.append(scores)
+    flat_ids = jnp.concatenate(ids_parts, axis=-1)
+    flat_scores = jnp.concatenate(score_parts, axis=-1)
+    s_out, i_out = search.merge_candidates(flat_scores, flat_ids, k)
+    return i_out, s_out
+
+
 def hnsw_search_sharded(state: MemoryState, n_shards: int,
                         queries_raw: jax.Array, k: int, *, ef: int = 64
                         ) -> Tuple[jax.Array, jax.Array]:

@@ -7,6 +7,9 @@ integer kernels admit no tolerance.
 
   qgemm     — exact fixed-point scoring matmul; int64 accumulation realized
               as three int32 limb planes (TPU has no native int64)
+  qcoarse   — int8 coarse-scan scoring for the compressed tier: int32 query
+              weights decomposed into four 8-bit limb planes against int8
+              codes (1/4 the bytes streamed of the exact scan)
   qtopk     — deterministic k-smallest with tie keys over dual-plane scores
   qboundary — fused float→Q-encode→integer-L2-normalize (the paper's §5.3
               determinism boundary, the hottest serving entry point)

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: int8 coarse-scan scoring (the compressed tier's scan).
+
+The coarse tier ranks rows by an integer dot between an int32 query weight
+vector w (``codes.query_weights``) and the int8 code rows. The database
+operand streams as *int8* — a 4x bytes-scanned reduction against the int32
+exact scan — while the weights, too wide for one int8 multiply, decompose
+into four 8-bit limbs (the same move qgemm makes for Q16.16 values):
+
+    w = (w >> 24)<<24 + ((w >> 16) & 0xFF)<<16 + ((w >> 8) & 0xFF)<<8
+        + (w & 0xFF)
+
+(exact for signed w under arithmetic shifts). Four int32 partial planes
+
+    P_3 = sum w3*c,  P_2 = sum w2*c,  P_1 = sum w1*c,  P_0 = sum w0*c
+
+combine outside the kernel, where XLA's int64 emulation is available, as
+
+    S = (P_3 << 24) + (P_2 << 16) + (P_1 << 8) + P_0.
+
+Range analysis (why int32 accumulation is exact): |w| <= W_BOUND = 2^28
+(codes.py clips), so |w3| <= 2^4 and the unsigned low limbs are < 2^8;
+|c| <= 127, so every plane's accumulation over D dims is bounded by
+255 * 127 * D < 2^31 for D <= 2^13 = 8192 — checked by ops.py.
+
+Tiling mirrors qgemm: grid (nq/BQ, nn/BN, d/BK), output tile [BQ, BN, 4]
+accumulated across the BK grid axis ('arbitrary' semantics). In interpret
+mode every op is exact NumPy, so CPU validation is bit-exact against ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from repro.core import compat
+
+_CompilerParams = compat.pallas_tpu_compiler_params()
+
+
+def _qcoarse_kernel(w_ref, c_ref, out_ref):
+    """One (BQ, BN) output tile, accumulated across the K grid dimension."""
+    k = pl.program_id(2)
+
+    w = w_ref[...]                      # [BQ, BK] int32 query weights
+    c = c_ref[...].astype(jnp.int32)    # [BN, BK] int8 codes, widened in-reg
+
+    w3 = w >> 24
+    w2 = (w >> 16) & 0xFF
+    w1 = (w >> 8) & 0xFF
+    w0 = w & 0xFF
+
+    dot = functools.partial(
+        jax.lax.dot_general,
+        dimension_numbers=(((1,), (1,)), ((), ())),  # contract BK, no batch
+        preferred_element_type=jnp.int32,
+    )
+    planes = jnp.stack(
+        [dot(w3, c), dot(w2, c), dot(w1, c), dot(w0, c)], axis=-1
+    )  # [BQ, BN, 4]
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = planes
+
+    @pl.when(k != 0)
+    def _accum():
+        out_ref[...] += planes
+
+
+def qcoarse_planes_pallas(
+    weights: jax.Array,  # [nq, d] int32 query weights (|w| <= W_BOUND)
+    codes: jax.Array,    # [nn, d] int8 code rows
+    *,
+    block_q: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns the four int32 limb planes [nq, nn, 4].
+
+    Shapes must be multiples of the block sizes (ops.py pads).
+    """
+    nq, d = weights.shape
+    nn, d2 = codes.shape
+    assert d == d2, (d, d2)
+    assert nq % block_q == 0 and nn % block_n == 0 and d % block_k == 0
+
+    grid = (nq // block_q, nn // block_n, d // block_k)
+    return pl.pallas_call(
+        _qcoarse_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_n, block_k), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_n, 4), lambda i, j, k: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nq, nn, 4), jnp.int32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(weights, codes)

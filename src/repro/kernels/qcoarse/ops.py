@@ -1,0 +1,69 @@
+"""jit'd public wrapper for the qcoarse kernel: padding, range checks, combine."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qcoarse import kernel as _kernel
+
+# |w| <= W_BOUND (codes.query_weights clips) keeps all four int32 planes
+# overflow-free up to MAX_DIM: 255 * 127 * 2^13 < 2^31.
+W_BOUND = 1 << 28
+MAX_DIM = 1 << 13
+
+
+def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _pick_blocks(nq: int, nn: int, d: int):
+    bq = min(128, max(8, nq))
+    bn = 128 if nn >= 128 else max(8, nn)
+    bk = 512 if d >= 512 else max(128, d) if d >= 128 else d
+    return bq, bn, bk
+
+
+@partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def qcoarse_planes(weights: jax.Array, codes: jax.Array, *,
+                   interpret: bool = True, use_pallas: bool = True
+                   ) -> jax.Array:
+    """Four int32 limb planes [nq, nn, 4] for int32 weights x int8 codes."""
+    if weights.shape[-1] > MAX_DIM:
+        raise ValueError(
+            f"qcoarse exactness bound needs dim ≤ {MAX_DIM}, "
+            f"got {weights.shape[-1]}"
+        )
+    nq, d = weights.shape
+    nn = codes.shape[0]
+    if not use_pallas:
+        from repro.kernels.qcoarse import ref
+        return ref.qcoarse_planes_ref(weights, codes)
+    bq, bn, bk = _pick_blocks(nq, nn, d)
+    wp = _pad_to(weights.astype(jnp.int32), bq, bk)
+    cp = _pad_to(codes.astype(jnp.int8), bn, bk)
+    planes = _kernel.qcoarse_planes_pallas(
+        wp, cp, block_q=bq, block_n=bn, block_k=bk, interpret=interpret
+    )
+    return planes[:nq, :nn]
+
+
+@partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def qcoarse(weights: jax.Array, codes: jax.Array, *,
+            interpret: bool = True, use_pallas: bool = True) -> jax.Array:
+    """Exact weighted-dot scores S [nq, nn] int64 — planes + int64 combine.
+
+    Bit-identical to ref.qcoarse_ref for |w| <= W_BOUND and dim <= 8192
+    (the bounds codes.query_weights guarantees for boundary-normalized
+    inputs).
+    """
+    planes = qcoarse_planes(
+        weights, codes, interpret=interpret, use_pallas=use_pallas
+    ).astype(jnp.int64)
+    return ((planes[..., 0] << 24) + (planes[..., 1] << 16)
+            + (planes[..., 2] << 8) + planes[..., 3])

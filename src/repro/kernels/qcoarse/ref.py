@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the qcoarse kernel: direct i64 accumulation."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qcoarse_ref(weights: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """Exact weighted dot S [nq, nn] int64 — the i64-accumulator rule."""
+    return jnp.einsum(
+        "qd,nd->qn", weights.astype(jnp.int64), codes.astype(jnp.int64)
+    )
+
+
+def qcoarse_planes_ref(weights: jnp.ndarray, codes: jnp.ndarray
+                       ) -> jnp.ndarray:
+    """The four-limb partial planes, computed without Pallas (tile tests)."""
+    w = weights.astype(jnp.int32)
+    c = codes.astype(jnp.int32)
+    limbs = (w >> 24, (w >> 16) & 0xFF, (w >> 8) & 0xFF, w & 0xFF)
+    planes = [jnp.einsum("qd,nd->qn", l, c) for l in limbs]
+    return jnp.stack(planes, axis=-1)
+
+
+def combine_planes_ref(planes: jnp.ndarray) -> jnp.ndarray:
+    p = planes.astype(jnp.int64)
+    return (p[..., 0] << 24) + (p[..., 1] << 16) + (p[..., 2] << 8) + p[..., 3]

@@ -20,6 +20,12 @@ Topology flags (DESIGN.md §7, §8):
                        (DESIGN.md §9); retrieval routes to the pool once
                        the replicas prove the flush cursor. Needs
                        --durable-dir (defaulted when absent).
+  --route R            force the read route (exact | hnsw | coarse) or
+                       leave the planner to choose (auto, the default);
+                       the recorded QueryPlan route is reported either way
+  --ef-coarse N        candidate-set size for the compressed coarse tier
+                       (DESIGN.md §10); defaulted to cover the corpus when
+                       --route coarse is forced without it
 """
 from __future__ import annotations
 
@@ -80,7 +86,17 @@ def main() -> None:
     ap.add_argument("--replicas", type=int, default=0,
                     help="verified read replicas per shard; retrieval "
                          "routes to the pool at proven cursors")
+    ap.add_argument("--route", default="auto",
+                    choices=["auto", "exact", "hnsw", "coarse"],
+                    help="read route: planner's choice (auto) or forced")
+    ap.add_argument("--ef-coarse", type=int, default=0,
+                    help="coarse-tier candidate-set size (0 disables the "
+                         "compressed tier under auto routing)")
     args = ap.parse_args()
+    if args.route == "coarse" and args.ef_coarse <= 0:
+        # a forced coarse route needs a candidate-set size; cover the
+        # whole corpus, which also makes the answer bit-equal to exact
+        args.ef_coarse = max(args.docs, 1)
 
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
     if cfg.external_embeddings:
@@ -114,7 +130,8 @@ def main() -> None:
             context_tokens=min(32, args.doc_len),
             shards=args.shards if hosts is None else 1,
             hosts=hosts, durable_dir=durable_dir,
-            replicas=args.replicas))
+            replicas=args.replicas,
+            route=args.route, ef_coarse=args.ef_coarse))
 
         docs = rng.integers(0, cfg.vocab_size, (args.docs, args.doc_len),
                             dtype=np.int32)
@@ -133,6 +150,8 @@ def main() -> None:
                                dtype=np.int32)
         nn_ids, scores = engine.retrieve(prompts)
         print("retrieved neighbors:", nn_ids[:, 0].tolist())
+        print(f"planned route: {engine.last_plan.route} "
+              f"({engine.last_plan.reason})")
         if args.replicas:
             print(f"served by: {engine.last_plan.served_by}")
 

@@ -248,8 +248,11 @@ class RemoteShardClient:
         q = np.asarray(queries_raw)
         nq, dim = q.shape
         data = q.astype(q.dtype.newbyteorder("<")).tobytes()
+        # the coarse route rides the ef field (the route string
+        # disambiguates), keeping the frozen Query frame format intact
+        ef = plan.ef_coarse if plan.route == "coarse" else plan.ef
         ack = self._request(
-            p.Query(k=k, ef=plan.ef, route=plan.route,
+            p.Query(k=k, ef=ef, route=plan.route,
                     use_kernel=plan.use_kernel, nq=nq, dim=dim,
                     itemsize=q.dtype.itemsize, data=data),
             p.QueryAck)

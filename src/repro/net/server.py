@@ -53,6 +53,12 @@ class ShardHost:
     drive the same code path, so fault-injection tests exercise exactly
     the bytes and branches production traffic does."""
 
+    # compressed-tier cache, keyed by applied cursor: the code table is a
+    # pure function of the state (DESIGN.md §10), so any holder of the same
+    # durable prefix derives the same table — caching is a cost choice,
+    # never a semantic one. Class-level default so adopt() inherits it.
+    _code_cache: Optional[Tuple[int, object]] = None
+
     def __init__(self, directory, genesis: Optional[MemoryState] = None, *,
                  segment_records: int = 1024,
                  ef_construction: int = 32):
@@ -228,6 +234,18 @@ class ShardHost:
         self._last_group = (msg.base_t, digest, t)
         return p.AppendAck(t=t)
 
+    def _coarse_table(self):
+        """The shard's int8 code table at the current applied cursor,
+        derived from the state on first use and kept until the cursor
+        moves (every applied command advances ``state.version``, and a
+        rollback to cursor t restores the deterministic state at t, so
+        the cursor fully keys the table)."""
+        from repro.core import codes as codes_lib
+        v = int(self.state.version)
+        if self._code_cache is None or self._code_cache[0] != v:
+            self._code_cache = (v, codes_lib.build(self.state))
+        return self._code_cache[1]
+
     def _do_query(self, msg: p.Query) -> p.QueryAck:
         vdt = _VDT.get(msg.itemsize)
         if vdt is None:
@@ -240,10 +258,17 @@ class ShardHost:
         queries = jnp.asarray(
             np.frombuffer(msg.data, dtype=vdt).reshape(msg.nq, msg.dim),
             self.contract.storage_dtype)
+        # the wire Query reuses the ef field for the coarse candidate-set
+        # size (the route string disambiguates), so the frozen frame
+        # format carries the compressed tier without a fields change
+        coarse = msg.route == query_lib.ROUTE_COARSE
         plan = query_lib.QueryPlan(
             route=msg.route, k=msg.k, ef=msg.ef, use_kernel=msg.use_kernel,
-            live_count=live_count(self.state), reason="remote")
-        ids, scores = query_lib.execute_plan(self.state, queries, msg.k, plan)
+            live_count=live_count(self.state), reason="remote",
+            ef_coarse=msg.ef if coarse else 0, dim=msg.dim)
+        table = self._coarse_table() if coarse else None
+        ids, scores = query_lib.execute_plan(self.state, queries, msg.k, plan,
+                                             codes=table)
         ids_h = np.asarray(ids).astype("<i8")
         scores_h = np.asarray(scores).astype("<i8")
         return p.QueryAck(nq=msg.nq, k=msg.k, ids=ids_h.tobytes(),

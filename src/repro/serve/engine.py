@@ -89,13 +89,19 @@ class ServeConfig:
     # ``durable_dir`` (the coordinator's own metadata directory); when
     # ``shards`` is left at 1 it is inferred as ``len(hosts)``.
     hosts: Optional[List[str]] = None
-    # read-path planning (DESIGN.md §4): the planner picks exact-scan vs
-    # HNSW per request from static facts; "auto" applies the planner rules,
-    # "exact"/"hnsw" force a route
+    # read-path planning (DESIGN.md §4, §10): the planner picks exact-scan
+    # vs HNSW vs the compressed coarse tier per request from static facts;
+    # "auto" applies the planner rules, "exact"/"hnsw"/"coarse" force a
+    # route
     route: str = "auto"
     ef: int = 64                 # HNSW beam width when that route is taken
+    # compressed tier (DESIGN.md §10): candidate-set size for the coarse
+    # route. 0 disables the tier; > 0 lets "auto" route through the int8
+    # coarse scan + exact re-rank, and makes the engine maintain the code
+    # tables incrementally on ingest (table == codes.build(state) always)
+    ef_coarse: int = 0
     exact_threshold: int = 1024  # live count at/below which exact scan wins
-    use_kernel: bool = False     # Pallas qgemm/qtopk on the exact route
+    use_kernel: bool = False     # Pallas kernels on the exact/coarse routes
     # durability (DESIGN.md §5): with a durable_dir, every ingested command
     # is WAL-appended before it is visible, incremental v2 snapshots are cut
     # every checkpoint_every commands (0 = manual only), and recover()
@@ -169,6 +175,12 @@ class MemoryAugmentedEngine:
         self.docs: Dict[int, np.ndarray] = {}   # id -> token prefix
         self._next_id = 0
         self.last_plan: Optional[query.QueryPlan] = None
+        # compressed tier (DESIGN.md §10): one code table per shard slice
+        # (one entry in flat mode), built on first coarse read and then
+        # maintained incrementally on ingest; None until needed and after
+        # recover/rollback (the table is a pure function of the state, so
+        # a lazy rebuild is always bit-identical)
+        self._code_tables: Optional[List[Any]] = None
 
         self.durable = None  # DurableStore | ShardedDurableStore | None
         self._group: Optional[wal_lib.GroupCommitWriter] = None
@@ -326,6 +338,77 @@ class MemoryAugmentedEngine:
         return t
 
     # ------------------------------------------------------------------ #
+    # compressed tier: per-slice code tables (DESIGN.md §10)
+    # ------------------------------------------------------------------ #
+
+    def _memory_slices(self) -> List[MemoryState]:
+        if not self._layout_sharded:
+            return [self.memory]
+        return [distributed.shard_slice(self.memory, s, self.n_shards)
+                for s in range(self.n_shards)]
+
+    def _ensure_code_tables(self) -> None:
+        """Build the per-slice code tables from the live state. Idempotent;
+        the result is the same bits any other holder of this state would
+        derive (``codes.build`` is pure in the live rows)."""
+        if self._code_tables is not None:
+            return
+        from repro.core import codes as codes_lib
+        self._code_tables = [codes_lib.build(sl)
+                             for sl in self._memory_slices()]
+
+    def _refresh_code_tables(self, inserted_ids: np.ndarray) -> None:
+        """Incremental maintenance after an ingest batch: only the slots
+        that received this batch's ids re-encode (engine writes are fresh
+        INSERTs, so those are exactly the touched slots); a per-dim param
+        drift falls back to a full rebuild inside ``codes.refresh`` —
+        either way the invariant ``table == codes.build(slice)`` holds."""
+        if self._code_tables is None:
+            return
+        from repro.core import codes as codes_lib
+        tables = []
+        for sl, tbl in zip(self._memory_slices(), self._code_tables):
+            touched = np.nonzero(
+                np.isin(np.asarray(sl.ids), inserted_ids)
+                & np.asarray(sl.valid))[0].astype(np.int32)
+            tables.append(codes_lib.refresh(tbl, sl, touched))
+        self._code_tables = tables
+
+    def _checkpoint_code_tables(self) -> None:
+        """Cut the code tables' own content-addressed manifests beside the
+        state snapshots (``<durable_dir>/codes/``): chunks dedup against
+        the previous checkpoint, so a param-stable refresh costs only the
+        touched rows' chunks. Recovery does NOT read these — the table is
+        rebuilt from the recovered state (pure function, always correct);
+        the manifests are the incremental audit/warm-start artifact, and
+        tests verify a restored manifest equals the rebuild bit-for-bit."""
+        if self.sc.durable_dir is None or not self._coarse_enabled():
+            return
+        from repro.core import codes as codes_lib
+        self._ensure_code_tables()
+        t = self._cursor()
+        cdir = pathlib.Path(self.sc.durable_dir) / "codes"
+        store = snapshot.ChunkStore(cdir / "chunks")
+        keep_keys = set()
+        for s, tbl in enumerate(self._code_tables):
+            manifest, _ = codes_lib.snapshot_table_v2(tbl, t, store)
+            path = cdir / f"codes_{s:04d}_t{t:020d}.mft"
+            tmp = path.with_suffix(".tmp")
+            tmp.write_bytes(manifest)
+            tmp.replace(path)
+            keep_keys.update(codes_lib.table_manifest_chunk_keys(manifest))
+        # retain only the newest manifest set + the chunks it references
+        for old in cdir.glob("codes_*.mft"):
+            if not old.name.endswith(f"t{t:020d}.mft"):
+                old.unlink()
+        for key in store.keys():
+            if key not in keep_keys:
+                store.delete(key)
+
+    def _coarse_enabled(self) -> bool:
+        return self.sc.ef_coarse > 0 or self.sc.route == query.ROUTE_COARSE
+
+    # ------------------------------------------------------------------ #
     # WRITE path
     # ------------------------------------------------------------------ #
 
@@ -390,6 +473,7 @@ class MemoryAugmentedEngine:
                     jax.tree.map(lambda a, s=s: a[s], routed))
             self.memory = shard_wal.bulk_apply_sharded(
                 self.memory, batch_log, self.n_shards, routed=routed)
+        self._refresh_code_tables(ids)
         self._maybe_checkpoint()
         return [int(i) for i in ids]
 
@@ -425,7 +509,8 @@ class MemoryAugmentedEngine:
         plan = query.plan_query(
             shard_wal.live_count(self.memory), k, self.sc.ef,
             use_kernel=self.sc.use_kernel,
-            exact_threshold=self.sc.exact_threshold, route=self.sc.route)
+            exact_threshold=self.sc.exact_threshold, route=self.sc.route,
+            ef_coarse=self.sc.ef_coarse, dim=self.cfg.d_model)
         pool = None
         if self.read_replicas:
             slot = self._pick_replica(q_raw)
@@ -444,10 +529,19 @@ class MemoryAugmentedEngine:
             from repro.net.client import remote_sharded_query
             ids, scores = remote_sharded_query(self._clients, q_raw, k, plan)
         elif not self._layout_sharded:
-            ids, scores = query.execute_plan(self.memory, q_raw, k, plan)
+            if plan.route == query.ROUTE_COARSE:
+                self._ensure_code_tables()
+                ids, scores = query.execute_plan(
+                    self.memory, q_raw, k, plan, codes=self._code_tables[0])
+            else:
+                ids, scores = query.execute_plan(self.memory, q_raw, k, plan)
         else:
+            tables = None
+            if plan.route == query.ROUTE_COARSE:
+                self._ensure_code_tables()
+                tables = self._code_tables
             ids, scores = query.sharded_host_query(
-                self.memory, self.n_shards, q_raw, k, plan)
+                self.memory, self.n_shards, q_raw, k, plan, tables=tables)
         return np.asarray(ids), np.asarray(scores)
 
     def _replica_query(self, pool, q_raw, k: int, plan: query.QueryPlan
@@ -576,6 +670,7 @@ class MemoryAugmentedEngine:
         self._last_ckpt_t = self._cursor()
         if self.sc.retain_snapshots > 0:
             stats.update(self.durable.retain(self.sc.retain_snapshots))
+        self._checkpoint_code_tables()
         return stats
 
     def _maybe_checkpoint(self) -> None:
@@ -652,7 +747,8 @@ class MemoryAugmentedEngine:
         self.wait_durable()
         state, h, t = self.durable.recover()
         self.memory = state
-        self._last_ckpt_t = t
+        self._code_tables = None  # rebuilt from the recovered state on
+        self._last_ckpt_t = t     # first coarse read (pure function of it)
         self._reload_audit_logs(t)
         self._reload_serving_caches()
         return t, h
@@ -669,6 +765,7 @@ class MemoryAugmentedEngine:
         self.durable.rollback_to(t)
         state, h = self.durable.restore_at(t)
         self.memory = state
+        self._code_tables = None  # pure function of the restored state
         self._last_ckpt_t = t
         self._reload_audit_logs(t)
         self._reload_serving_caches()

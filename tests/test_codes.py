@@ -1,0 +1,257 @@
+"""The compressed tier's code table (DESIGN.md §10).
+
+The table is replay-invariant STATE, not a cache: ``build(state)`` is a
+pure function of the live rows, ``refresh`` maintained across arbitrary
+six-opcode logs must equal a fresh ``build`` bit-for-bit, and whenever
+the candidate set provably covers the exact top-k (ef_coarse >= live
+count) the re-ranked answer must equal ``exact_search`` bit-for-bit —
+the coverage-implies-bit-exact contract.
+"""
+import numpy as np
+import pytest
+from _pbt import given, settings
+from _pbt import strategies as st
+
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.core import codes, commands, machine, query, search, snapshot
+from repro.core.state import init_state
+from test_bulk_apply import _random_log
+
+D = 8
+CAP = 32
+RNG = np.random.default_rng(0)
+
+
+def _fresh_state(n, d=D, cap=CAP, seed=3):
+    rng = np.random.default_rng(seed)
+    ids = jnp.arange(n, dtype=jnp.int64)
+    vecs = jnp.asarray(rng.integers(-65536, 65537, (n, d)), jnp.int32)
+    return machine.bulk_apply(init_state(cap, d),
+                              commands.insert_batch(ids, vecs))
+
+
+def _queries(nq, d=D, seed=11):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(-65536, 65537, (nq, d)), jnp.int32)
+
+
+def _assert_tables_equal(a, b):
+    assert (np.asarray(a.codes) == np.asarray(b.codes)).all()
+    assert (np.asarray(a.offset) == np.asarray(b.offset)).all()
+    assert (np.asarray(a.scale) == np.asarray(b.scale)).all()
+    assert (np.asarray(a.norms) == np.asarray(b.norms)).all()
+    assert codes.table_hash(a) == codes.table_hash(b)
+
+
+# --------------------------------------------------------------------------- #
+# build: a pure function of the live rows
+# --------------------------------------------------------------------------- #
+
+
+def test_build_is_pure_function_of_state():
+    s = _fresh_state(10)
+    _assert_tables_equal(codes.build(s), codes.build(s))
+
+
+def test_params_integer_invariants():
+    """Scales are powers of two in [1, 2^16]; offsets are multiples of
+    their scale; codes stay in the symmetric int8 range; dead rows zero."""
+    s = _fresh_state(20, cap=CAP)
+    dead_log = commands.delete_cmd(0, D)
+    for i in (7, 13):
+        dead_log = dead_log.concat(commands.delete_cmd(i, D))
+    s = machine.bulk_apply(s, dead_log)
+    t = codes.build(s)
+    sc = np.asarray(t.scale, np.int64)
+    off = np.asarray(t.offset, np.int64)
+    assert ((sc & (sc - 1)) == 0).all() and (sc >= 1).all()
+    assert (sc <= (1 << codes.MAX_EXP)).all()
+    assert (off % sc == 0).all()
+    c = np.asarray(t.codes)
+    assert c.dtype == np.int8 and (np.abs(c.astype(np.int32)) <= 127).all()
+    dead = ~np.asarray(s.valid)
+    assert (c[dead] == 0).all()
+    assert (np.asarray(t.norms)[dead] == 0).all()
+
+
+def test_quantization_error_bounded_by_scale():
+    """|raw - (off + code*scale)| <= scale/2 + scale (round + clip slack)
+    for every live element — the per-dim error bound behind recall."""
+    s = _fresh_state(25, cap=CAP, seed=9)
+    t = codes.build(s)
+    live = np.asarray(s.valid)
+    raw = np.asarray(s.vectors, np.int64)[live]
+    dec = (np.asarray(t.offset, np.int64)[None, :]
+           + np.asarray(t.codes, np.int64)[live]
+           * np.asarray(t.scale, np.int64)[None, :])
+    err = np.abs(raw - dec)
+    assert (err <= np.asarray(t.scale, np.int64)[None, :]).all()
+
+
+# --------------------------------------------------------------------------- #
+# refresh == build across randomized six-opcode logs (replay invariance)
+# --------------------------------------------------------------------------- #
+
+
+@given(st.integers(0, 10_000), st.integers(1, 60))
+@settings(max_examples=15, deadline=None)
+def test_refresh_equals_build_randomized(seed, n_cmds):
+    s = init_state(CAP, D)
+    t = codes.build(s)
+    log = _random_log(seed, n_cmds, id_space=12)
+    step = max(1, n_cmds // 4)
+    for i in range(0, n_cmds, step):
+        s, t = codes.apply_with_codes(s, t, log.slice(i, min(i + step,
+                                                             n_cmds)))
+    _assert_tables_equal(t, codes.build(s))
+
+
+def test_refresh_incremental_path_when_params_stable():
+    """Inserting a vector inside the existing per-dim envelope keeps the
+    params and takes the row-touch path; the result still == build."""
+    s = _fresh_state(16)
+    t = codes.build(s)
+    mid = np.asarray(s.vectors)[:16].mean(axis=0).astype(np.int32)
+    log = commands.insert_batch(jnp.asarray([100], jnp.int64),
+                                jnp.asarray(mid[None, :]))
+    s2, t2 = codes.apply_with_codes(s, t, log)
+    assert (np.asarray(t2.offset) == np.asarray(t.offset)).all()
+    assert (np.asarray(t2.scale) == np.asarray(t.scale)).all()
+    _assert_tables_equal(t2, codes.build(s2))
+
+
+# --------------------------------------------------------------------------- #
+# coverage ==> bit-exact against exact_search
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("metric", ["l2", "dot"])
+@pytest.mark.parametrize("n,k", [(1, 1), (7, 3), (28, 5)])
+def test_coverage_implies_bit_exact(metric, n, k):
+    s = _fresh_state(n, seed=n)
+    t = codes.build(s)
+    q = _queries(4)
+    want = search.exact_search(s, q, k, metric=metric)
+    ids, scores = search.coarse_search(s, t, q, k, ef_coarse=CAP,
+                                       metric=metric)
+    assert (np.asarray(ids) == np.asarray(want[0])).all()
+    assert (np.asarray(scores) == np.asarray(want[1])).all()
+    assert query.retrieval_hash(ids, scores) == \
+        query.retrieval_hash(*want[::-1][::-1])
+
+
+def test_partial_coverage_is_deterministic():
+    """ef < live: the answer may differ from exact but must be the same
+    answer every time, across kernel modes, and recall is measurable."""
+    s = _fresh_state(28, seed=5)
+    t = codes.build(s)
+    q = _queries(6)
+    a = search.coarse_search(s, t, q, 5, ef_coarse=8)
+    b = search.coarse_search(s, t, q, 5, ef_coarse=8)
+    c = search.coarse_search(s, t, q, 5, ef_coarse=8, use_kernel=True)
+    for x in (b, c):
+        assert (np.asarray(a[0]) == np.asarray(x[0])).all()
+        assert (np.asarray(a[1]) == np.asarray(x[1])).all()
+    exact_ids = np.asarray(search.exact_search(s, q, 5)[0])
+    hits = sum(len(set(r) & set(e))
+               for r, e in zip(np.asarray(a[0]).tolist(), exact_ids.tolist()))
+    assert hits / exact_ids.size > 0.5  # int8 on 28 rows: recall is high
+
+
+def test_coarse_rejects_k_beyond_ef():
+    s = _fresh_state(10)
+    t = codes.build(s)
+    with pytest.raises(ValueError):
+        search.coarse_search(s, t, _queries(2), 6, ef_coarse=4)
+
+
+# --------------------------------------------------------------------------- #
+# planner: the coarse route from static facts
+# --------------------------------------------------------------------------- #
+
+
+def test_planner_picks_coarse_when_bytes_win():
+    plan = query.plan_query(5000, 10, 64, ef_coarse=256, dim=64)
+    assert plan.route == query.ROUTE_COARSE
+    assert plan.ef_coarse == 256 and plan.dim == 64
+
+
+def test_planner_coarse_rules():
+    # no ef_coarse configured -> never coarse
+    assert query.plan_query(5000, 10, 64, dim=64).route != "coarse"
+    # candidate set nearly the corpus -> bytes don't win -> not coarse
+    assert query.plan_query(100, 10, 16, ef_coarse=90,
+                            dim=64).route != "coarse"
+    # tiny corpus -> exact short-circuits first
+    assert query.plan_query(50, 10, 64, ef_coarse=32,
+                            dim=64).route == query.ROUTE_EXACT
+    # forced coarse with k > ef_coarse is a contract violation
+    with pytest.raises(ValueError):
+        query.plan_query(5000, 10, 64, route="coarse", ef_coarse=4, dim=64)
+    # forced coarse is honored regardless of the byte model
+    plan = query.plan_query(100, 5, 64, route="coarse", ef_coarse=90, dim=64)
+    assert plan.route == query.ROUTE_COARSE
+
+
+def test_execute_plan_coarse_route():
+    s = _fresh_state(24, seed=8)
+    q = _queries(3)
+    want = search.exact_search(s, q, 4)
+    plan = query.plan_query(24, 4, 64, route="coarse", ef_coarse=CAP, dim=D)
+    ids, scores = query.execute_plan(s, q, 4, plan)
+    assert (np.asarray(ids) == np.asarray(want[0])).all()
+    assert (np.asarray(scores) == np.asarray(want[1])).all()
+    # and with a prebuilt table (the engine's cached path)
+    ids2, scores2 = query.execute_plan(s, q, 4, plan, codes=codes.build(s))
+    assert (np.asarray(ids2) == np.asarray(ids)).all()
+
+
+# --------------------------------------------------------------------------- #
+# durability: the table rides the chunked v2 snapshot format
+# --------------------------------------------------------------------------- #
+
+
+def test_table_snapshot_roundtrip(tmp_path):
+    s = _fresh_state(20, seed=4)
+    t = codes.build(s)
+    store = snapshot.ChunkStore(str(tmp_path / "chunks"))
+    blob, stats = codes.snapshot_table_v2(t, 17, store)
+    assert stats["chunks_written"] > 0
+    t2, cursor = codes.restore_table_v2(blob, store)
+    assert cursor == 17
+    _assert_tables_equal(t, t2)
+    assert codes.table_manifest_cursor(blob) == 17
+    keys = codes.table_manifest_chunk_keys(blob)
+    assert set(keys) <= set(store.keys())
+
+
+def test_table_snapshot_incremental_dedup(tmp_path):
+    """A second snapshot after a small insert re-writes only the chunks
+    that changed — content addressing makes code checkpoints cheap."""
+    s = _fresh_state(20, seed=4)
+    t = codes.build(s)
+    store = snapshot.ChunkStore(str(tmp_path / "chunks"))
+    _, stats1 = codes.snapshot_table_v2(t, 1, store, chunk_size=256)
+    assert stats1["chunks_written"] == stats1["chunks"]  # all fresh
+    mid = np.asarray(s.vectors)[:20].mean(axis=0).astype(np.int32)
+    s2, t2 = codes.apply_with_codes(
+        s, t, commands.insert_batch(jnp.asarray([200], jnp.int64),
+                                    jnp.asarray(mid[None, :])))
+    blob2, stats2 = codes.snapshot_table_v2(t2, 2, store, chunk_size=256)
+    assert stats2["chunks_written"] < stats1["chunks_written"]
+    assert stats2["chunks"] > stats2["chunks_written"]  # dedup reuse
+    t3, _ = codes.restore_table_v2(blob2, store)
+    _assert_tables_equal(t2, t3)
+
+
+def test_table_restore_detects_corruption(tmp_path):
+    s = _fresh_state(12)
+    t = codes.build(s)
+    store = snapshot.ChunkStore(str(tmp_path / "chunks"))
+    blob, _ = codes.snapshot_table_v2(t, 3, store)
+    bad = bytearray(blob)
+    bad[-1] ^= 0xFF  # flip a bit in the stored table hash
+    with pytest.raises(ValueError, match="hash"):
+        codes.restore_table_v2(bytes(bad), store)

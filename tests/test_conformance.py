@@ -632,3 +632,119 @@ def test_engine_replica_pools_conform_and_stale_pools_fall_back(
     for eng in engines.values():
         eng.close()
         eng.close()  # regression: engine teardown must be idempotent
+
+
+# --------------------------------------------------------------------------- #
+# the compressed coarse tier joins the equivalence class (DESIGN.md §10)
+# --------------------------------------------------------------------------- #
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_coarse_route_joins_the_equivalence_class(seed):
+    """Coverage (ef_coarse >= live count) makes the int8 coarse scan +
+    exact re-rank BIT-EQUAL to the exact route, whatever the quantization
+    error — on the flat state, both kernel modes, every shard count, and
+    a durable-store restore of the same randomized six-opcode log."""
+    from repro.core import codes
+
+    log = _random_log(seed, 36, id_space=ID_SPACE)
+    batches = _batches(log, 9)
+    q = _queries(seed)
+
+    genesis = init_state(2 * CAP_PER_SHARD, D)
+    s_flat = machine.replay(genesis, log)
+    ids_ref, s_ref = search.exact_search(s_flat, q, K)
+    rh = query.retrieval_hash(ids_ref, s_ref)
+
+    # EF (= 64) >= any live count here: the candidate set provably covers
+    plan_c = query.plan_query(int(shard_wal.live_count(s_flat)), K, EF,
+                              route="coarse", ef_coarse=EF, dim=D)
+    assert plan_c.route == "coarse"
+
+    for uk in (False, True):
+        plan = query.plan_query(int(shard_wal.live_count(s_flat)), K, EF,
+                                route="coarse", ef_coarse=EF, dim=D,
+                                use_kernel=uk)
+        i_c, s_c = query.execute_plan(s_flat, q, K, plan)
+        assert query.retrieval_hash(i_c, s_c) == rh, \
+            f"flat coarse != exact (use_kernel={uk})"
+
+    # a prebuilt, incrementally-maintained table serves the same answer
+    tbl = codes.build(genesis)
+    st_inc, tbl = codes.apply_with_codes(genesis, tbl, log)
+    assert hashing.hash_pytree(st_inc) == hashing.hash_pytree(s_flat)
+    i_t, s_t = query.execute_plan(st_inc, q, K, plan_c, codes=tbl)
+    assert query.retrieval_hash(i_t, s_t) == rh, "maintained table diverged"
+
+    for ns in SHARD_COUNTS:
+        sh = distributed.init_sharded_host(ns, CAP_PER_SHARD, D)
+        for b in batches:
+            sh = shard_wal.bulk_apply_sharded(sh, b, ns)
+        i_s, s_s = query.sharded_host_query(sh, ns, q, K, plan_c)
+        assert query.retrieval_hash(i_s, s_s) == rh, \
+            f"sharded coarse diverged (n_shards={ns})"
+
+        with tempfile.TemporaryDirectory() as tmp:
+            store = shard_wal.ShardedDurableStore(
+                tmp, distributed.init_sharded_host(ns, CAP_PER_SHARD, D),
+                n_shards=ns)
+            _grouped_ingest(store, batches)
+            state, _ = store.restore_at(store.t)
+            i_d, s_d = query.sharded_host_query(state, ns, q, K, plan_c)
+            assert query.retrieval_hash(i_d, s_d) == rh, \
+                f"durable-restored coarse diverged (n_shards={ns})"
+
+
+def test_engine_coarse_route_conforms_including_recover(model, tmp_path):
+    """``ServeConfig(route='coarse', ef_coarse=64)`` engines — flat and
+    sharded, live and recovered — report the exact route's
+    retrieval_hash, and record the coarse route in the plan."""
+    cfg, params = model
+    rng = np.random.default_rng(2)
+    docs = rng.integers(0, cfg.vocab_size, (14, 12), dtype=np.int32)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 8), dtype=np.int32)
+
+    def sc(shards, d, route):
+        return ServeConfig(
+            capacity=64, retrieve_k=3, max_new_tokens=4, s_cache=96,
+            context_tokens=8, shards=shards, durable_dir=str(d),
+            route=route, ef_coarse=64,
+            group_commit=wal.GroupCommitPolicy(max_batch=1 << 20,
+                                               max_delay_s=3600))
+
+    engines = {
+        "exact-flat": MemoryAugmentedEngine(
+            cfg, params, sc(1, tmp_path / "e1", "exact")),
+        "coarse-flat": MemoryAugmentedEngine(
+            cfg, params, sc(1, tmp_path / "c1", "coarse")),
+        "coarse-shard": MemoryAugmentedEngine(
+            cfg, params, sc(2, tmp_path / "c2", "coarse")),
+    }
+    hashes = set()
+    for name, eng in engines.items():
+        eng.insert_documents(docs[:8])
+        eng.insert_documents(docs[8:])   # exercises incremental refresh
+        hashes.add(eng.retrieval_hash(prompts))
+        if name.startswith("coarse"):
+            assert eng.last_plan.route == "coarse"
+            assert eng.last_plan.ef_coarse == 64
+    assert len(hashes) == 1, "coarse engines diverged from exact"
+
+    for eng in engines.values():
+        eng.checkpoint()
+        eng.close()
+
+    # the coarse checkpoints also persisted code-table manifests
+    assert any(f.startswith("codes_") and f.endswith(".mft")
+               for f in os.listdir(tmp_path / "c1" / "codes"))
+
+    for name, d, shards in (("coarse-flat", "c1", 1),
+                            ("coarse-shard", "c2", 2)):
+        eng = MemoryAugmentedEngine(cfg, params,
+                                    sc(shards, tmp_path / d, "coarse"))
+        eng.recover()
+        rh = eng.retrieval_hash(prompts)
+        assert eng.last_plan.route == "coarse"
+        assert rh in hashes, f"recovered {name} diverged"
+        eng.close()

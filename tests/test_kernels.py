@@ -114,3 +114,132 @@ def test_qboundary_unit_norm_property():
     norms = (raw.astype(np.float64) / Q16_16.one)
     lens = np.sqrt((norms ** 2).sum(-1))
     assert np.abs(lens - 1.0).max() < 1e-3
+
+
+# --------------------------------------------------------------------------- #
+# qcoarse: the compressed tier's int8 coarse scan (DESIGN.md §10)
+# --------------------------------------------------------------------------- #
+
+from repro.core import codes as codes_lib  # noqa: E402
+from repro.core import commands, machine, search  # noqa: E402
+from repro.core.state import init_state  # noqa: E402
+from repro.kernels.qcoarse import ops as qcoarse_ops  # noqa: E402
+from repro.kernels.qcoarse import ref as qcoarse_ref  # noqa: E402
+
+W = qcoarse_ops.W_BOUND
+
+
+@pytest.mark.parametrize("nq,nn,d", [
+    (1, 1, 8), (4, 16, 32), (8, 128, 64), (128, 256, 512),
+    (7, 100, 384), (130, 257, 640), (3, 33, 8192),
+])
+def test_qcoarse_exact_vs_oracle(nq, nn, d):
+    """Odd/prime/padded shapes: the Pallas planes + combine == direct i64."""
+    w = RNG.integers(-W, W + 1, size=(nq, d)).astype(np.int32)
+    c = RNG.integers(-127, 128, size=(nn, d)).astype(np.int8)
+    got = qcoarse_ops.qcoarse(jnp.asarray(w), jnp.asarray(c))
+    want = qcoarse_ref.qcoarse_ref(jnp.asarray(w), jnp.asarray(c))
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_qcoarse_extreme_values():
+    """|w| = W_BOUND, |c| = 127 at max dim: the overflow-freedom proof."""
+    d = 8192
+    w = np.full((2, d), W, np.int32)
+    w[1] = -W
+    c = np.concatenate([np.full((1, d), 127, np.int8),
+                        np.full((1, d), -127, np.int8)])
+    got = qcoarse_ops.qcoarse(jnp.asarray(w), jnp.asarray(c))
+    want = qcoarse_ref.qcoarse_ref(jnp.asarray(w), jnp.asarray(c))
+    assert (np.asarray(got) == np.asarray(want)).all()
+    assert int(got[0, 0]) == d * W * 127
+
+
+def test_qcoarse_rejects_oversized_dim():
+    w = np.zeros((2, 16384), np.int32)
+    c = np.zeros((2, 16384), np.int8)
+    with pytest.raises(ValueError, match="dim"):
+        qcoarse_ops.qcoarse(jnp.asarray(w), jnp.asarray(c))
+
+
+@given(st.integers(1, 5), st.integers(1, 140), st.integers(8, 96))
+@settings(max_examples=20, deadline=None)
+def test_qcoarse_property(nq, nn, d):
+    w = RNG.integers(-W, W + 1, size=(nq, d)).astype(np.int32)
+    c = RNG.integers(-127, 128, size=(nn, d)).astype(np.int8)
+    got = qcoarse_ops.qcoarse(jnp.asarray(w), jnp.asarray(c))
+    want = qcoarse_ref.qcoarse_ref(jnp.asarray(w), jnp.asarray(c))
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def _coarse_state(n_live, d, n_dead=0, duplicate_rows=0, seed=7):
+    """A flat state with n_live fresh rows, optionally some tombstones and
+    duplicated vectors (ids stay unique — ties must break on id)."""
+    rng = np.random.default_rng(seed)
+    cap = max(64, n_live + n_dead + duplicate_rows)
+    vecs = rng.integers(-65536, 65537, (n_live, d)).astype(np.int32)
+    if duplicate_rows:
+        vecs = np.concatenate([vecs, vecs[:duplicate_rows]], axis=0)
+    n = len(vecs)
+    ids = np.arange(n, dtype=np.int64)
+    st_ = machine.bulk_apply(
+        init_state(cap, d),
+        commands.insert_batch(jnp.asarray(ids), jnp.asarray(vecs)))
+    if n_dead:
+        dead = np.arange(0, n, max(1, n // n_dead))[:n_dead].tolist()
+        log = commands.delete_cmd(dead[0], d)
+        for i in dead[1:]:
+            log = log.concat(commands.delete_cmd(i, d))
+        st_ = machine.bulk_apply(st_, log)
+    return st_
+
+
+@pytest.mark.parametrize("metric", ["l2", "dot"])
+def test_coarse_search_kernel_parity(metric):
+    """use_kernel=True (Pallas qcoarse + qtopk) == jnp path, bit for bit."""
+    st_ = _coarse_state(37, 24)
+    tbl = codes_lib.build(st_)
+    q = RNG.integers(-65536, 65537, (5, 24)).astype(np.int32)
+    for ef in (8, 16, 64):
+        a = search.coarse_search(st_, tbl, jnp.asarray(q), 5,
+                                 ef_coarse=ef, metric=metric)
+        b = search.coarse_search(st_, tbl, jnp.asarray(q), 5,
+                                 ef_coarse=ef, metric=metric,
+                                 use_kernel=True)
+        assert (np.asarray(a[0]) == np.asarray(b[0])).all()
+        assert (np.asarray(a[1]) == np.asarray(b[1])).all()
+
+
+@pytest.mark.parametrize("metric", ["l2", "dot"])
+def test_coarse_search_tombstones(metric):
+    """Dead rows never surface, in either kernel mode, and coverage over
+    the survivors still reproduces exact_search bit-for-bit."""
+    st_ = _coarse_state(30, 16, n_dead=9)
+    tbl = codes_lib.build(st_)
+    q = RNG.integers(-65536, 65537, (4, 16)).astype(np.int32)
+    want = search.exact_search(st_, jnp.asarray(q), 6, metric=metric)
+    dead = set(np.arange(0, 30, max(1, 30 // 9))[:9].tolist())
+    for uk in (False, True):
+        ids, scores = search.coarse_search(st_, tbl, jnp.asarray(q), 6,
+                                           ef_coarse=64, metric=metric,
+                                           use_kernel=uk)
+        assert not (set(np.asarray(ids).ravel().tolist()) & dead)
+        assert (np.asarray(ids) == np.asarray(want[0])).all()
+        assert (np.asarray(scores) == np.asarray(want[1])).all()
+
+
+@pytest.mark.parametrize("metric", ["l2", "dot"])
+def test_coarse_search_duplicate_vectors_tie_break(metric):
+    """Identical vectors under different ids: the served tie order is the
+    exact (score, id) order, identical across kernel modes and identical
+    to exact_search under coverage."""
+    st_ = _coarse_state(20, 12, duplicate_rows=10)
+    tbl = codes_lib.build(st_)
+    q = RNG.integers(-65536, 65537, (3, 12)).astype(np.int32)
+    want = search.exact_search(st_, jnp.asarray(q), 8, metric=metric)
+    for uk in (False, True):
+        ids, scores = search.coarse_search(st_, tbl, jnp.asarray(q), 8,
+                                           ef_coarse=64, metric=metric,
+                                           use_kernel=uk)
+        assert (np.asarray(ids) == np.asarray(want[0])).all()
+        assert (np.asarray(scores) == np.asarray(want[1])).all()
