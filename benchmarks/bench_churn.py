@@ -1,0 +1,176 @@
+"""DESIGN.md §11: ANN under churn — repair, re-link, and the planner.
+
+An interleaved insert/delete workload over the deterministic HNSW, every
+answer hash-checked on every run:
+
+  * the planner stays on ANN — with live rows above the exact threshold
+    the auto route must still pick HNSW after heavy deletes (deletes no
+    longer demote the graph to exact scan), and the plan records the
+    ``graph_gen`` it was made against;
+  * ANN vs exact QPS — the exact scan is timed against the HNSW route at
+    the beam-exhaustive point (ef >= capacity), where the retrieval hash
+    is asserted BIT-EQUAL to exact, and at the working ef, where
+    Recall@k against exact is measured;
+  * re-link amortization — one ``hnsw.relink`` pass is timed and charged
+    against the deletes it swept (us per delete); the pass must preserve
+    the layout-invariant content hash AND the exhaustive retrieval hash,
+    and the post-re-link working-ef route is re-timed to show the
+    recovered graph quality.
+
+The run FAILS (RuntimeError, counted by the harness) if the planner
+leaves the ANN route under churn or any asserted hash pair diverges.
+
+Run directly (``python benchmarks/bench_churn.py [--smoke]``) or via
+``benchmarks.run``. ``--smoke`` shrinks the corpus so CI exercises the
+whole churn path in seconds.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+import repro  # noqa: F401
+import jax.numpy as jnp
+from benchmarks.common import emit
+from repro.core import (boundary, commands, hashing, hnsw, machine, query,
+                        shard_wal)
+from repro.core.state import init_state
+
+
+def _time_min(fn, iters: int = 3):
+    """min-of-iters wall time (seconds), jax-synced; returns (t, out)."""
+    out = fn()
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn()
+        import jax
+        jax.tree.map(lambda x: x.block_until_ready()
+                     if hasattr(x, "block_until_ready") else x, out)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def _recall(got_ids, ref_ids, k: int) -> float:
+    g, r = np.asarray(got_ids), np.asarray(ref_ids)
+    return float(np.mean([len(set(g[i]) & set(r[i])) / k
+                          for i in range(len(g))]))
+
+
+def _churn(n: int, dim: int, rounds: int, del_batch: int):
+    """Seeded interleaved workload: insert n rows, then ``rounds`` of
+    (delete ``del_batch`` live ids, insert ``del_batch // 2`` fresh
+    rows). Returns (state, n_deletes)."""
+    rng = np.random.default_rng(41)
+    cap = 1 << (n - 1).bit_length()
+    vecs = boundary.normalize_embedding(
+        rng.normal(size=(n, dim)).astype(np.float32))
+    state = machine.bulk_apply(
+        init_state(cap, dim, hnsw_degree=16),
+        commands.insert_batch(jnp.arange(n, dtype=jnp.int64), vecs))
+    next_id, n_deletes = n, 0
+    for _ in range(rounds):
+        live_ids = np.asarray(state.ids)[np.asarray(state.valid)]
+        victims = rng.choice(live_ids, size=del_batch, replace=False)
+        state = machine.bulk_apply(
+            state, commands.delete_batch(
+                jnp.asarray(np.sort(victims), jnp.int64), dim))
+        n_deletes += del_batch
+        fresh_n = del_batch // 2
+        fresh = boundary.normalize_embedding(
+            rng.normal(size=(fresh_n, dim)).astype(np.float32))
+        state = machine.bulk_apply(state, commands.insert_batch(
+            jnp.arange(next_id, next_id + fresh_n, dtype=jnp.int64), fresh))
+        next_id += fresh_n
+    return state, n_deletes
+
+
+def run_tier(n: int, dim: int, k: int, rounds: int, del_batch: int,
+             working_ef: int, batch: int, exact_threshold: int) -> None:
+    state, n_deletes = _churn(n, dim, rounds, del_batch)
+    live = shard_wal.live_count(state)
+    cap = int(state.valid.shape[0])
+    rng = np.random.default_rng(43)
+    q = boundary.admit_query(
+        rng.normal(size=(batch, dim)).astype(np.float32))
+
+    # -- the planner stays on ANN under churn --------------------------- #
+    plan_auto = query.plan_query(live, k, working_ef,
+                                 exact_threshold=exact_threshold,
+                                 graph_gen=0)
+    emit(f"churn_plan_n{n}", 0.0,
+         f"live={live};deletes={n_deletes};route={plan_auto.route};"
+         f"graph_gen={plan_auto.graph_gen};reason={plan_auto.reason}")
+
+    # -- exact baseline ------------------------------------------------- #
+    plan_e = query.plan_query(live, k, working_ef, route="exact")
+    t_e, (ids_e, s_e) = _time_min(
+        lambda: query.execute_plan(state, q, k, plan_e))
+    h_exact = query.retrieval_hash(ids_e, s_e)
+    emit(f"churn_exact_n{n}", t_e / batch * 1e6,
+         f"qps={batch / t_e:.0f};hash={h_exact:#x}")
+
+    # -- ANN, beam-exhaustive: asserted bit-equal to exact -------------- #
+    plan_x = query.plan_query(live, k, cap, route="hnsw")
+    t_x, (ids_x, s_x) = _time_min(
+        lambda: query.execute_plan(state, q, k, plan_x))
+    h_x = query.retrieval_hash(ids_x, s_x)
+    emit(f"churn_hnsw_exhaustive_n{n}", t_x / batch * 1e6,
+         f"qps={batch / t_x:.0f};ef={cap};hash={h_x:#x};"
+         f"hash_equal={h_x == h_exact}")
+
+    # -- ANN, working ef: the production operating point ---------------- #
+    plan_w = query.plan_query(live, k, working_ef, route="hnsw")
+    t_w, (ids_w, s_w) = _time_min(
+        lambda: query.execute_plan(state, q, k, plan_w))
+    recall_w = _recall(ids_w, ids_e, k)
+    emit(f"churn_hnsw_ef{working_ef}_n{n}", t_w / batch * 1e6,
+         f"qps={batch / t_w:.0f};recall@{k}={recall_w:.3f};"
+         f"speedup_vs_exact={t_e / t_w:.2f}x")
+
+    # -- re-link: timed, amortized over the deletes it sweeps ----------- #
+    ch_before = hashing.content_hash(state)
+    t_r, relinked = _time_min(lambda: hnsw.relink(state), iters=2)
+    ch_after = hashing.content_hash(relinked)
+    _, (ids_rx, s_rx) = _time_min(
+        lambda: query.execute_plan(relinked, q, k, plan_x), iters=1)
+    h_rx = query.retrieval_hash(ids_rx, s_rx)
+    t_rw, (ids_rw, s_rw) = _time_min(
+        lambda: query.execute_plan(relinked, q, k, plan_w))
+    recall_rw = _recall(ids_rw, ids_e, k)
+    emit(f"churn_relink_n{n}", t_r * 1e6,
+         f"us_per_delete={t_r / n_deletes * 1e6:.1f};deletes={n_deletes};"
+         f"content_hash_stable={ch_after == ch_before};"
+         f"exhaustive_hash_equal={h_rx == h_exact}")
+    emit(f"churn_relinked_hnsw_ef{working_ef}_n{n}", t_rw / batch * 1e6,
+         f"qps={batch / t_rw:.0f};recall@{k}={recall_rw:.3f}")
+
+    # -- the acceptance floor ------------------------------------------- #
+    if plan_auto.route != query.ROUTE_HNSW:
+        raise RuntimeError(
+            f"planner left the ANN route under churn at live={live}: "
+            f"{plan_auto.route} ({plan_auto.reason})")
+    if h_x != h_exact or h_rx != h_exact:
+        raise RuntimeError(
+            f"churn hash violation at n={n}: exact={h_exact:#x} "
+            f"hnsw={h_x:#x} relinked={h_rx:#x}")
+    if ch_after != ch_before:
+        raise RuntimeError(
+            f"re-link mutated the live content: {ch_before:#x} -> "
+            f"{ch_after:#x}")
+
+
+def run(smoke: bool = False) -> None:
+    if smoke:
+        run_tier(n=512, dim=32, k=10, rounds=3, del_batch=64,
+                 working_ef=64, batch=8, exact_threshold=128)
+    else:
+        run_tier(n=4_096, dim=64, k=10, rounds=4, del_batch=512,
+                 working_ef=64, batch=16, exact_threshold=1024)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(smoke="--smoke" in sys.argv[1:])

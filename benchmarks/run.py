@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV (stdout). Mapping to the paper:
   bench_coarse      — DESIGN.md §10 (int8 coarse scan + exact re-rank vs
                                      planner-exact and HNSW; bytes-scanned
                                      model, coverage hash asserted)
+  bench_churn       — DESIGN.md §11 (ANN under churn: planner stays on
+                                     HNSW, exhaustive hash == exact,
+                                     re-link amortization, all asserted)
   bench_replication — DESIGN.md §8  (ingest with 0/1/2 verified replicas,
                                      cold-replica catch-up lag, hash-checked)
   bench_roofline    — EXPERIMENTS.md §Roofline (reads dry-run artifacts)
@@ -22,15 +25,15 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_coarse, bench_contracts, bench_divergence,
-                            bench_ingest, bench_latency, bench_recall,
-                            bench_replication, bench_roofline, bench_serve,
-                            bench_snapshot, bench_wal)
+    from benchmarks import (bench_churn, bench_coarse, bench_contracts,
+                            bench_divergence, bench_ingest, bench_latency,
+                            bench_recall, bench_replication, bench_roofline,
+                            bench_serve, bench_snapshot, bench_wal)
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_divergence, bench_contracts, bench_recall,
                 bench_snapshot, bench_latency, bench_ingest, bench_wal,
-                bench_serve, bench_replication, bench_coarse,
+                bench_serve, bench_replication, bench_coarse, bench_churn,
                 bench_roofline):
         try:
             mod.run()

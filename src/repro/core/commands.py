@@ -129,6 +129,22 @@ def insert_batch(ext_ids: jax.Array, raw_vecs: jax.Array,
     )
 
 
+def delete_batch(ext_ids: jax.Array, dim: int,
+                 contract: PrecisionContract = DEFAULT_CONTRACT) -> CommandLog:
+    """Batch of DELETEs in canonical (sorted-by-id) order — the churn twin
+    of ``insert_batch``. ``dim`` fixes the (all-zero) vec payload shape so
+    the batch concatenates with insert batches in one audit log."""
+    ext_ids = ext_ids[jnp.argsort(ext_ids)]
+    n = ext_ids.shape[0]
+    return CommandLog(
+        opcode=jnp.full((n,), DELETE, jnp.int32),
+        arg0=ext_ids.astype(jnp.int64),
+        arg1=jnp.zeros((n,), jnp.int64),
+        arg2=jnp.zeros((n,), jnp.int64),
+        vec=jnp.zeros((n, dim), contract.storage_dtype),
+    )
+
+
 def canonicalize_batch(log: CommandLog) -> CommandLog:
     """Sort a batch of same-opcode commands by (arg0, arg1) — the paper's
     'verified, sorted order'. Only safe for order-free batches (pure inserts

@@ -248,8 +248,10 @@ def distributed_bulk_apply(mesh: Mesh, axis: str, state: MemoryState,
     on the host and the result is materialized unsharded (≈1 extra arena
     copy on the default device) before the final re-shard — the ingest win
     is per-shard vectorization, not cross-shard parallelism. For arenas too
-    big to stage on one host, use ``distributed_replay``; moving the
-    segmentation device-side is future work.
+    big to stage on one host, use ``distributed_replay``; for the mesh-free
+    layout, ``shard_wal.apply_routed_device`` now runs the whole routed
+    apply as one vmapped device scan with no per-shard host loop
+    (DESIGN.md §11).
     """
     n_shards = mesh.shape[axis]
 

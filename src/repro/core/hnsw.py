@@ -7,10 +7,15 @@ The paper removes the three stochastic ingredients of classic HNSW:
      level is a pure function of its external id (trailing-zero count of a
      SplitMix64 avalanche), giving the same geometric(1/2) level profile with
      zero state.
-  3. *Fixed entry point* — the first inserted node is the entry forever.
-     (Consequence: node levels are capped at the entry's level; higher levels
-     would be unreachable from the fixed entry. Recorded deviation: classic
-     HNSW promotes the entry, the paper pins it.)
+  3. *Deterministic entry point* — the first inserted node is the entry
+     until a DELETE tombstones it; then ``ensure_live_entry`` promotes the
+     live node with the greatest *raw* (id-derived) level, lowest id first
+     (DESIGN.md §11) — a pure integer rule, so every layout picks the same
+     replacement. (Consequence: node levels are capped at the entry's
+     stored level at insert time; higher levels would be unreachable from
+     the entry. Recorded deviation: classic HNSW promotes the entry
+     opportunistically, here promotion happens only on entry death and by
+     integer order.)
 
 TPU adaptation (DESIGN.md §2): the adjacency is a dense
 ``[levels, capacity, degree]`` int32 array; search is a ``lax.while_loop``
@@ -21,10 +26,12 @@ is a pure integer comparison — bit-identical everywhere.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.state import MemoryState
 
@@ -78,6 +85,22 @@ def _wide_l2(state: MemoryState, q_raw: jax.Array, slots: jax.Array) -> jax.Arra
     dist = jnp.sum(d * d, axis=-1)
     ok = (slots >= 0) & state.valid[jnp.clip(slots, 0, state.capacity - 1)]
     return jnp.where(ok, dist, INF)
+
+
+def _wide_l2_traverse(state: MemoryState, q_raw: jax.Array,
+                      slots: jax.Array) -> jax.Array:
+    """Traversal distance: like ``_wide_l2`` but tombstoned rows keep their
+    true score (their vectors are still stored). The query-time beam ranks
+    dead nodes as waypoints — the classic soft-delete traversal — and the
+    caller masks them out of the *answer*; masking them out of the frontier
+    instead would strand every live node whose only paths run through a
+    tombstone (DESIGN.md §11). On a tombstone-free state this is exactly
+    ``_wide_l2``."""
+    safe = jnp.clip(slots, 0, state.capacity - 1)
+    rows = state.vectors[safe].astype(jnp.int64)  # [n, dim]
+    d = rows - q_raw.astype(jnp.int64)[None, :]
+    dist = jnp.sum(d * d, axis=-1)
+    return jnp.where(slots >= 0, dist, INF)
 
 
 def _lex_less(d_a, s_a, d_b, s_b):
@@ -165,11 +188,17 @@ def search_layer(
     neighbors_l: jax.Array | None = None,
     neighbors_full: jax.Array | None = None,
     static_level: int | None = None,
+    dead_ok: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """ef-beam search at ``level``; returns (dists[ef], slots[ef]) sorted.
 
     Carries fixed-size arrays + a capacity-sized expansion mask. Every merge
     is a (distance, slot) sort — deterministic including ties.
+
+    ``dead_ok=True`` (the query path under churn, DESIGN.md §11) ranks and
+    expands tombstoned nodes by their true stored-vector distance instead of
+    INF, so they remain traversal waypoints; the caller filters them from
+    the answer. Identical to the default on tombstone-free states.
 
     ``fast=True`` (the bulk-ingest construction path) computes the identical
     beam with less work per expansion: the merge is a single sort — the beam
@@ -185,10 +214,14 @@ def search_layer(
     degree = state.hnsw_degree
     if max_iters is None:
         max_iters = 2 * ef + 8
+    if fast and dead_ok:
+        raise ValueError("dead_ok is a query-path knob; the fast "
+                         "construction path never traverses tombstones")
+    dist_of = _wide_l2_traverse if dead_ok else _wide_l2
 
     d0 = jnp.full((ef,), INF, dtype=jnp.int64)
     s0 = jnp.full((ef,), jnp.int32(2**31 - 1), dtype=jnp.int32)
-    d0 = d0.at[0].set(_wide_l2(state, q_raw, entry_slot[None])[0])
+    d0 = d0.at[0].set(dist_of(state, q_raw, entry_slot[None])[0])
     s0 = s0.at[0].set(entry_slot.astype(jnp.int32))
     seen0 = jnp.zeros((capacity,), jnp.bool_).at[entry_slot].set(True)
 
@@ -269,7 +302,7 @@ def search_layer(
         nbrs = row_of(cur)  # [degree]
         nbr_safe = jnp.clip(nbrs, 0, capacity - 1)
         fresh = (nbrs >= 0) & (~seen[nbr_safe])
-        nd = _wide_l2(state, q_raw, nbrs)
+        nd = dist_of(state, q_raw, nbrs)
         nd = jnp.where(fresh, nd, INF)
         ns = jnp.where(fresh, nbr_safe, jnp.int32(2**31 - 1))
         seen = seen.at[nbr_safe].set(seen[nbr_safe] | (nbrs >= 0))
@@ -518,6 +551,159 @@ def hnsw_insert(state: MemoryState, new_slot: jax.Array, *, ef_construction: int
 
 
 # --------------------------------------------------------------------------- #
+# entry-point repair on delete (DESIGN.md §11)
+# --------------------------------------------------------------------------- #
+
+
+def raw_levels(state: MemoryState) -> jax.Array:
+    """``level_of_id`` over the whole arena: [capacity] int32.
+
+    The *raw* (uncapped) level is a pure function of each row's external id,
+    so every layout holding the same live rows computes the same values.
+    The repair and re-link orders below key on it instead of the stored
+    (entry-capped) ``hnsw_levels``, whose values depend on each graph's own
+    entry history and therefore differ across layouts."""
+    return jax.vmap(lambda i: level_of_id(i, state.hnsw_max_levels))(state.ids)
+
+
+def repair_entry(state: MemoryState) -> jax.Array:
+    """The deterministic replacement entry after the current one dies: the
+    live slot maximizing (raw level, then lowest id) — exactly the node a
+    fresh build of the same live rows makes its entry (``fresh_build``
+    inserts in this order, and a first insert is never level-capped).
+    Returns -1 when nothing is live. Pure integer ordering: every layout
+    picks the same replacement."""
+    lv = jnp.where(state.valid, raw_levels(state), jnp.int32(-1))
+    best = jnp.max(lv)
+    id_key = jnp.where(state.valid & (lv == best), state.ids,
+                       jnp.int64(1) << 62)
+    slot = jnp.argmin(id_key).astype(jnp.int32)
+    return jnp.where(jnp.any(state.valid), slot, jnp.int32(-1))
+
+
+def ensure_live_entry(state: MemoryState) -> MemoryState:
+    """Post-delete invariant: ``hnsw_entry`` is live, or -1 when the arena
+    holds no live rows (the next insert then re-seeds the graph through the
+    ordinary first-insert path). When a DELETE tombstones the entry, the
+    promotion rule of ``repair_entry`` runs; the level-cap rule re-anchors
+    to the promoted node's stored level automatically (``hnsw_insert``
+    reads ``hnsw_levels[entry]``). Repair touches ONLY ``hnsw_entry`` —
+    the tombstoned node keeps its edges and stays a traversal waypoint
+    until a re-link sweeps it (``relink``)."""
+    entry = state.hnsw_entry
+    safe = jnp.clip(entry, 0, state.capacity - 1)
+    dead = (entry >= 0) & jnp.logical_not(state.valid[safe])
+    new_entry = jax.lax.cond(dead, repair_entry,
+                             lambda s: s.hnsw_entry, state)
+    return dataclasses.replace(state, hnsw_entry=new_entry)
+
+
+# --------------------------------------------------------------------------- #
+# deterministic re-link: graph compaction (DESIGN.md §11)
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class RelinkPolicy:
+    """When the serve engine re-links (rebuilds) the HNSW graph from its
+    live rows — the graph twin of ``wal.CompactionPolicy``. Every
+    ``check_every`` ingested global commands (and only once at least
+    ``min_deletes`` effective deletes have accrued since the last re-link),
+    the pass fires when deletes reach ``dead_ratio`` of the graph's
+    (dead + live) node population. All three facts derive from the global
+    command stream, so flat and sharded engines fed the same batches fire
+    at the same batch boundaries — the schedule itself is layout-invariant
+    (per-shard cursors and per-slice tombstone counts are not, and are
+    never consulted)."""
+    dead_ratio: float = 0.5
+    min_deletes: int = 64
+    check_every: int = 64
+
+    def __post_init__(self):
+        if not 0.0 < self.dead_ratio <= 1.0:
+            raise ValueError("dead_ratio must be in (0, 1]")
+        if self.check_every < 1:
+            raise ValueError("check_every must be >= 1")
+        if self.min_deletes < 1:
+            raise ValueError("min_deletes must be >= 1")
+
+
+def relink_order(state: MemoryState) -> jax.Array:
+    """Canonical re-insertion order over the live slots: (raw level desc,
+    id asc), dead slots pushed to the tail as the ``capacity`` sentinel.
+    Returns [capacity] int32 slot indices. A pure function of the arena's
+    (ids, valid) — every holder of the same live rows derives the same
+    order, and its head is exactly ``repair_entry``'s choice."""
+    cap = state.capacity
+    lv = raw_levels(state)
+    big = jnp.int64(1) << 40
+    k1 = jnp.where(state.valid,
+                   (state.hnsw_max_levels - lv).astype(jnp.int64), big)
+    k2 = jnp.where(state.valid, state.ids, jnp.int64(1) << 62)
+    slots = jnp.arange(cap, dtype=jnp.int32)
+    k1s, _, order = jax.lax.sort((k1, k2, slots), num_keys=2)
+    return jnp.where(k1s < big, order, jnp.int32(cap))
+
+
+def _blank_graph(state: MemoryState) -> MemoryState:
+    return dataclasses.replace(
+        state,
+        hnsw_neighbors=jnp.full_like(state.hnsw_neighbors, -1),
+        hnsw_levels=jnp.full_like(state.hnsw_levels, -1),
+        hnsw_entry=jnp.asarray(-1, jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("ef_construction",))
+def relink(state: MemoryState, *, ef_construction: int = 32) -> MemoryState:
+    """Deterministic graph compaction: rebuild the HNSW arrays from the
+    live rows only, in ``relink_order``, leaving the arena (vectors / ids /
+    valid / meta / links and every scalar, ``version`` included) untouched.
+
+    The bit-exact contract (tests/test_hnsw.py): ``hash_pytree(relink(S))
+    == hash_pytree(fresh_build(S))`` — the jitted scan over the fast insert
+    path must land on exactly the graph the reference per-row build lands
+    on. Consequences of the canonical order: tombstoned waypoints vanish,
+    the new entry is ``repair_entry``'s choice, and no node's level is
+    capped (the first re-inserted node carries the maximal raw level), so a
+    re-linked graph is also a *better* graph than the churned one."""
+    blank = _blank_graph(state)
+    order = relink_order(state)
+    cap = state.capacity
+
+    def body(carry, slot):
+        def ins(c):
+            nbrs, lvls, ent = c
+            st = dataclasses.replace(
+                blank, hnsw_neighbors=nbrs, hnsw_levels=lvls, hnsw_entry=ent)
+            out = hnsw_insert(st, slot, ef_construction=ef_construction,
+                              fast=True)
+            return out.hnsw_neighbors, out.hnsw_levels, out.hnsw_entry
+
+        return jax.lax.cond(slot < cap, ins, lambda c: c, carry), None
+
+    carry0 = (blank.hnsw_neighbors, blank.hnsw_levels, blank.hnsw_entry)
+    (nbrs, lvls, ent), _ = jax.lax.scan(body, carry0, order)
+    return dataclasses.replace(
+        state, hnsw_neighbors=nbrs, hnsw_levels=lvls, hnsw_entry=ent)
+
+
+def fresh_build(state: MemoryState, *, ef_construction: int = 32
+                ) -> MemoryState:
+    """The definitional re-link reference: the same canonical order, one
+    reference-path ``hnsw_insert`` per live row on the host. ``relink``
+    must match it bit-for-bit — this is the oracle the contract test
+    runs, never the production path."""
+    out = _blank_graph(state)
+    order = np.asarray(relink_order(state))
+    for slot in order:
+        if int(slot) >= state.capacity:
+            break  # dead-slot sentinels are all at the tail
+        out = hnsw_insert(out, jnp.int32(int(slot)),
+                          ef_construction=ef_construction)
+    return out
+
+
+# --------------------------------------------------------------------------- #
 # query
 # --------------------------------------------------------------------------- #
 
@@ -540,7 +726,17 @@ def hnsw_search(state: MemoryState, q_raw: jax.Array, k: int, *, ef: int = 64
         return jnp.where(do, greedy_step_level(state, q_raw, lvl, cur), cur).astype(jnp.int32)
 
     cur = jax.lax.fori_loop(0, max_levels, descend, entry_safe.astype(jnp.int32))
-    d, s = search_layer(state, q_raw, cur, jnp.int32(0), ef)
+    # Level-0 beam traverses tombstones (dead_ok) so a churned graph stays
+    # fully reachable; dead rows are then dropped from the *answer*, not the
+    # frontier. On a tombstone-free state this is bit-identical to the
+    # live-only beam (every beamed slot is valid), so insert-only goldens
+    # are untouched.
+    d, s = search_layer(state, q_raw, cur, jnp.int32(0), ef, dead_ok=True)
+    safe = jnp.clip(s, 0, state.capacity - 1)
+    live = (d < INF) & state.valid[safe]
+    d = jnp.where(live, d, INF)
+    s = jnp.where(live, s, jnp.int32(2 ** 31 - 1))
+    d, s = jax.lax.sort((d, s), num_keys=2)
     d, s = d[:k], s[:k]
     ok = (d < INF) & have_graph
     slots = jnp.where(ok, s, jnp.int32(-1))

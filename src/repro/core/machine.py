@@ -17,8 +17,12 @@ advance logical time, so a log replays identically even past rejections):
   cross-layout ``content_hash`` contract (DESIGN.md §7). HNSW incremental
   insert runs for new rows.
 * DELETE(id): clear valid bit (tombstone). Slot becomes reusable; HNSW keeps
-  the tombstoned node as a traversal waypoint (classic soft-delete) but it
-  can never be returned (search masks on ``valid``).
+  the tombstoned node's edges so it stays a traversal waypoint (the query
+  beam traverses tombstones via ``dead_ok`` and drops them from the answer,
+  never the frontier), and when the delete kills the current entry point,
+  ``hnsw.ensure_live_entry`` promotes the deterministic replacement — the
+  live node with the greatest raw (id-derived) level, lowest id first
+  (DESIGN.md §11) — so every layout repairs to the same entry.
 * LINK(a, b) / UNLINK(a, b): typed user edges in ``links`` (first free /
   matching entry). Distinct from HNSW adjacency.
 * SET_META(id, slot, value): write a metadata word.
@@ -98,7 +102,8 @@ def _op_delete(state: MemoryState, rec: CommandLog, ef_construction: int) -> Mem
     valid = state.valid.at[safe].set(jnp.where(found, False, state.valid[safe]))
     ids = state.ids.at[safe].set(jnp.where(found, jnp.int64(-1), state.ids[safe]))
     count = state.count - jnp.where(found, 1, 0).astype(jnp.int32)
-    return dataclasses.replace(state, valid=valid, ids=ids, count=count)
+    return hnsw.ensure_live_entry(
+        dataclasses.replace(state, valid=valid, ids=ids, count=count))
 
 
 def _op_link(state: MemoryState, rec: CommandLog, ef_construction: int) -> MemoryState:
@@ -325,9 +330,14 @@ def _apply_delete_segment(state: MemoryState, arg0: jax.Array,
     valid = state.valid.at[tgt].set(False, mode="drop")
     ids = state.ids.at[tgt].set(jnp.int64(-1), mode="drop")
     count = state.count - jnp.sum(do).astype(jnp.int32)
-    return dataclasses.replace(
+    # One entry repair at batch end == per-command repair under replay: in a
+    # pure-DELETE run, each sequential repair picks the max-(raw level, -id)
+    # node over a superset of the batch's final live set, and the final
+    # repair keys on that final set alone — so the last choice is the same
+    # either way (and both land on -1 when nothing survives).
+    return hnsw.ensure_live_entry(dataclasses.replace(
         state, valid=valid, ids=ids, count=count,
-        version=state.version + n_real)
+        version=state.version + n_real))
 
 
 @jax.jit

@@ -88,12 +88,17 @@ class QueryPlan:
     # from (plan, log cursor, query) like every other route
     ef_coarse: int = 0
     dim: int = 0
+    # churn audit (DESIGN.md §11): how many re-link passes the serving
+    # graph has absorbed when this plan was made. A replayed plan is then
+    # checkable against the engine's re-link schedule — the same log prefix
+    # plus the same graph generation must reproduce this answer bit-exactly
+    graph_gen: int = 0
 
 
 def plan_query(live_count: int, k: int, ef: int, *,
                use_kernel: bool = False, exact_threshold: int = 1024,
                route: str = "auto", ef_coarse: int = 0,
-               dim: int = 0) -> QueryPlan:
+               dim: int = 0, graph_gen: int = 0) -> QueryPlan:
     """Pick exact-scan vs HNSW vs the compressed coarse tier from static
     facts — host ints only, so the same request against the same memory
     plans identically everywhere.
@@ -113,12 +118,16 @@ def plan_query(live_count: int, k: int, ef: int, *,
          pool is under 3/4 of the corpus (the break-even of
          live*dim*1 + ef*dim*4 vs live*dim*4); the dim cap is the qcoarse
          kernel's int32 exactness bound;
-      6. otherwise → HNSW.
+      6. otherwise → HNSW — including under churn. Deletes no longer
+         demote the graph to exact scan: entry-point repair keeps every
+         layout's entry live and the scheduled re-link pass (recorded in
+         ``graph_gen``) sweeps tombstoned waypoints, so ANN stays the
+         production route on churny traffic (DESIGN.md §11).
     """
     def mk(r, why):
         return QueryPlan(route=r, k=k, ef=ef, use_kernel=use_kernel,
                          live_count=live_count, reason=why,
-                         ef_coarse=ef_coarse, dim=dim)
+                         ef_coarse=ef_coarse, dim=dim, graph_gen=graph_gen)
 
     if route != "auto":
         if route not in (ROUTE_EXACT, ROUTE_HNSW, ROUTE_COARSE):

@@ -39,16 +39,18 @@ Layout of a store directory:
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import pathlib
+from functools import partial
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distributed, hashing, machine, search, snapshot, wal
+from repro.core import distributed, hashing, hnsw, machine, search, snapshot, wal
 from repro.core.commands import CommandLog
 from repro.core.durability import _RESTORE_ERRORS, DurableStore
 from repro.core.state import MemoryState
@@ -389,21 +391,154 @@ def live_count(state: MemoryState) -> int:
 
 def bulk_apply_sharded(state: MemoryState, log: CommandLog, n_shards: int,
                        *, ef_construction: int = 32,
-                       routed: Optional[CommandLog] = None) -> MemoryState:
-    """Route a global batch and bulk-apply each shard's share to its slice
-    of a sharded-layout state — the in-memory reference for what a
+                       routed: Optional[CommandLog] = None,
+                       device: Optional[bool] = None) -> MemoryState:
+    """Route a global batch and apply each shard's share to its slice of a
+    sharded-layout state — the in-memory reference for what a
     ``ShardedDurableStore`` ingest makes durable: applying the same batches
     here and recovering the store yield hash-identical merged states.
     Callers that already routed the batch (the serve engine routes once for
-    audit + apply + append) pass ``routed`` to skip re-routing."""
+    audit + apply + append) pass ``routed`` to skip re-routing.
+
+    ``device`` picks the apply driver. ``True`` runs every shard's share in
+    one jitted vmapped scan on device (``apply_routed_device``); ``False``
+    runs the host loop of per-shard ``machine.bulk_apply`` (whose
+    segmentation planner is host-side but wins on long shares); ``None``
+    (default) auto-selects: device for shares up to ``_DEVICE_APPLY_MAX``
+    commands — the serve-traffic regime — host for bulk loads beyond it.
+    All three are bit-identical (``bulk_apply == replay`` is proven by
+    tests/test_bulk_apply.py; the device path IS the replay scan)."""
     if routed is None:
         routed = distributed.route_commands(log, n_shards)
+    if device is None:
+        device = int(routed.opcode.shape[1]) <= _DEVICE_APPLY_MAX
+    if device:
+        return apply_routed_device(state, routed, n_shards,
+                                   ef_construction=ef_construction)
     parts = []
     for s in range(n_shards):
         local = distributed.shard_slice(state, s, n_shards)
         local_log = jax.tree.map(lambda a, s=s: a[s], routed)
         parts.append(machine.bulk_apply(local, local_log,
                                         ef_construction=ef_construction))
+    return distributed.merge_shards(parts)
+
+
+# --------------------------------------------------------------------------- #
+# device-side routed apply (DESIGN.md §11): no host round-trip per shard
+# --------------------------------------------------------------------------- #
+
+# auto-route threshold: shares at or under this many commands take the
+# vmapped device scan; longer shares amortize bulk_apply's host-side
+# segmentation planner instead
+_DEVICE_APPLY_MAX = 128
+
+
+def shard_stack(state: MemoryState, n_shards: int) -> MemoryState:
+    """Sharded layout → stacked layout: every array gains a leading
+    [n_shards] axis whose lanes are exactly ``distributed.shard_slice``'s
+    per-shard states (pure reshapes/transposes, no copies of row data).
+    The result is a vmap-ready pytree, not a valid flat MemoryState —
+    ``shard_unstack`` is the inverse."""
+    cap = state.capacity // n_shards
+
+    def rows(a):  # [n_shards*cap, ...] → [n_shards, cap, ...]
+        return a.reshape((n_shards, cap) + a.shape[1:])
+
+    nb = state.hnsw_neighbors  # [levels, n_shards*cap, degree]
+    nb = jnp.moveaxis(
+        nb.reshape(nb.shape[0], n_shards, cap, nb.shape[2]), 1, 0)
+    return dataclasses.replace(
+        state,
+        vectors=rows(state.vectors), ids=rows(state.ids),
+        valid=rows(state.valid), links=rows(state.links),
+        meta=rows(state.meta), hnsw_neighbors=nb,
+        hnsw_levels=rows(state.hnsw_levels),
+        # hnsw_entry / cursor / count / version are already [n_shards]
+    )
+
+
+def shard_unstack(stacked: MemoryState, n_shards: int) -> MemoryState:
+    """Inverse of ``shard_stack``: back to the shard-major sharded layout."""
+    def rows(a):  # [n_shards, cap, ...] → [n_shards*cap, ...]
+        return a.reshape((-1,) + a.shape[2:])
+
+    nb = jnp.moveaxis(stacked.hnsw_neighbors, 0, 1)  # [lv, ns, cap, deg]
+    nb = nb.reshape(nb.shape[0], -1, nb.shape[3])
+    return dataclasses.replace(
+        stacked,
+        vectors=rows(stacked.vectors), ids=rows(stacked.ids),
+        valid=rows(stacked.valid), links=rows(stacked.links),
+        meta=rows(stacked.meta), hnsw_neighbors=nb,
+        hnsw_levels=rows(stacked.hnsw_levels),
+    )
+
+
+def _pad_routed(routed: CommandLog, target: int) -> CommandLog:
+    """NOP-pad every shard's share from its routed length to ``target``
+    (pow2 buckets keep jit shapes logarithmic, exactly like
+    ``machine._pad_log``). All-zero records are NOPs."""
+    n = int(routed.opcode.shape[1])
+    if n == target:
+        return routed
+    pad = target - n
+    ns = int(routed.opcode.shape[0])
+
+    def z(a):
+        return jnp.concatenate(
+            [a, jnp.zeros((ns, pad) + a.shape[2:], a.dtype)], axis=1)
+
+    return CommandLog(opcode=z(routed.opcode), arg0=z(routed.arg0),
+                      arg1=z(routed.arg1), arg2=z(routed.arg2),
+                      vec=z(routed.vec))
+
+
+@partial(jax.jit, static_argnames=("ef_construction",))
+def _apply_routed_stacked(stacked: MemoryState, routed: CommandLog,
+                          n_real: jax.Array, *, ef_construction: int
+                          ) -> MemoryState:
+    """vmap-of-scan: every shard replays its (padded) share in lockstep on
+    device. ``n_real`` is the routed share length — the pow2 NOP padding
+    must not advance logical time, so ``version`` is pinned to base +
+    n_real afterwards (the ``_apply_seq_segment`` rule; the routing NOPs
+    *inside* the share do advance it, as on every other path)."""
+    def per_shard(local: MemoryState, share: CommandLog) -> MemoryState:
+        def step(s, rec):
+            return machine.apply_command(
+                s, rec, ef_construction=ef_construction), None
+
+        out, _ = jax.lax.scan(step, local, share)
+        return dataclasses.replace(out, version=local.version + n_real)
+
+    return jax.vmap(per_shard)(stacked, routed)
+
+
+def apply_routed_device(state: MemoryState, routed: CommandLog,
+                        n_shards: int, *, ef_construction: int = 32
+                        ) -> MemoryState:
+    """Apply an already-routed batch to a sharded-layout state entirely on
+    device: one reshape in, one jitted vmapped scan, one reshape out — no
+    per-shard host loop, no host-side segmentation round-trip. Bit-identical
+    to the host ``bulk_apply`` driver (both equal per-shard ``replay``)."""
+    n_real = int(routed.opcode.shape[1])
+    padded = _pad_routed(routed, machine._pow2(n_real))
+    stacked = shard_stack(state, n_shards)
+    out = _apply_routed_stacked(
+        stacked, padded, jnp.asarray(n_real, stacked.version.dtype),
+        ef_construction=ef_construction)
+    return shard_unstack(out, n_shards)
+
+
+def relink_sharded(state: MemoryState, n_shards: int, *,
+                   ef_construction: int = 32) -> MemoryState:
+    """Re-link every shard's graph from its own live rows (DESIGN.md §11):
+    the sharded twin of ``hnsw.relink``, applied slice-by-slice so each
+    shard lands on exactly the graph ``hnsw.fresh_build`` of its slice
+    lands on. Arena untouched; only the graph arrays and entries move."""
+    parts = []
+    for s in range(n_shards):
+        local = distributed.shard_slice(state, s, n_shards)
+        parts.append(hnsw.relink(local, ef_construction=ef_construction))
     return distributed.merge_shards(parts)
 
 

@@ -41,6 +41,7 @@ import numpy as np
 
 import repro  # noqa: F401
 from repro.configs import get_config, get_reduced_config
+from repro.core import hnsw
 from repro.models import transformer as tf
 from repro.serve.engine import MemoryAugmentedEngine, ServeConfig
 
@@ -92,6 +93,12 @@ def main() -> None:
     ap.add_argument("--ef-coarse", type=int, default=0,
                     help="coarse-tier candidate-set size (0 disables the "
                          "compressed tier under auto routing)")
+    ap.add_argument("--churn", type=int, default=0,
+                    help="delete N of the ingested docs before serving — "
+                         "exercises entry-point repair + the re-link pass")
+    ap.add_argument("--relink-dead-ratio", type=float, default=0.0,
+                    help="schedule the deterministic HNSW re-link pass at "
+                         "this dead fraction (DESIGN.md §11); 0 disables")
     args = ap.parse_args()
     if args.route == "coarse" and args.ef_coarse <= 0:
         # a forced coarse route needs a candidate-set size; cover the
@@ -131,7 +138,12 @@ def main() -> None:
             shards=args.shards if hosts is None else 1,
             hosts=hosts, durable_dir=durable_dir,
             replicas=args.replicas,
-            route=args.route, ef_coarse=args.ef_coarse))
+            route=args.route, ef_coarse=args.ef_coarse,
+            # floors scaled to the demo corpus so the pass actually fires
+            # at launcher scale; production defaults are the dataclass's
+            relink=(hnsw.RelinkPolicy(dead_ratio=args.relink_dead_ratio,
+                                      min_deletes=1, check_every=1)
+                    if args.relink_dead_ratio > 0 else None)))
 
         docs = rng.integers(0, cfg.vocab_size, (args.docs, args.doc_len),
                             dtype=np.int32)
@@ -139,6 +151,13 @@ def main() -> None:
         ids = engine.insert_documents(docs)
         print(f"ingested {len(ids)} docs in {time.time() - t0:.2f}s; "
               f"memory hash {engine.memory_hash():#x}")
+
+        if args.churn:
+            victims = ids[:min(args.churn, len(ids))]
+            removed = engine.delete_documents(victims)
+            print(f"churned {removed} docs; graph_gen={engine.graph_gen} "
+                  f"(re-links at {engine.relink_ts}); "
+                  f"memory hash {engine.memory_hash():#x}")
 
         if args.replicas:
             t = engine.sync_replicas()
@@ -151,7 +170,8 @@ def main() -> None:
         nn_ids, scores = engine.retrieve(prompts)
         print("retrieved neighbors:", nn_ids[:, 0].tolist())
         print(f"planned route: {engine.last_plan.route} "
-              f"({engine.last_plan.reason})")
+              f"({engine.last_plan.reason}) "
+              f"graph_gen={engine.last_plan.graph_gen}")
         if args.replicas:
             print(f"served by: {engine.last_plan.served_by}")
 

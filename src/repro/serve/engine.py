@@ -55,8 +55,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import boundary, commands, distributed, machine, query, \
-    shard_wal, snapshot
+from repro.core import boundary, commands, distributed, hnsw, machine, \
+    query, shard_wal, snapshot
 from repro.core import wal as wal_lib
 from repro.core.contracts import DEFAULT_CONTRACT, PrecisionContract
 from repro.core.durability import DurableStore, SideTable
@@ -117,6 +117,13 @@ class ServeConfig:
     # A compaction policy schedules dead-ratio-driven WAL compaction.
     group_commit: Optional[wal_lib.GroupCommitPolicy] = None
     compaction: Optional[wal_lib.CompactionPolicy] = None
+    # graph maintenance under churn (DESIGN.md §11): a RelinkPolicy
+    # schedules the deterministic HNSW re-link pass the way ``compaction``
+    # schedules WAL compaction — dead-ratio-driven from layout-invariant
+    # facts (global commands ingested, effective deletes, live count), so
+    # flat and sharded engines fed the same batches re-link at the same
+    # batch boundaries. None = manual only (``relink_now()``).
+    relink: Optional[hnsw.RelinkPolicy] = None
     # read scaling (DESIGN.md §9): replicas=k attaches k verified
     # log-shipping read replicas per shard (net.ReplicaStore followers of
     # the engine's own durable store(s), or of the shard hosts in
@@ -175,6 +182,15 @@ class MemoryAugmentedEngine:
         self.docs: Dict[int, np.ndarray] = {}   # id -> token prefix
         self._next_id = 0
         self.last_plan: Optional[query.QueryPlan] = None
+        # churn audit (DESIGN.md §11): cursors at which the serving graph
+        # was re-linked (``graph_gen == len(relink_ts)`` rides on every
+        # plan), plus the layout-invariant scheduling counters — global
+        # commands since the last schedule check and effective deletes
+        # since the last re-link
+        self.graph_gen = 0
+        self.relink_ts: List[int] = []
+        self._deletes_since_relink = 0
+        self._cmds_since_relink_check = 0
         # compressed tier (DESIGN.md §10): one code table per shard slice
         # (one entry in flat mode), built on first coarse read and then
         # maintained incrementally on ingest; None until needed and after
@@ -474,8 +490,102 @@ class MemoryAugmentedEngine:
             self.memory = shard_wal.bulk_apply_sharded(
                 self.memory, batch_log, self.n_shards, routed=routed)
         self._refresh_code_tables(ids)
+        self._cmds_since_relink_check += len(batch_log)
+        self._maybe_relink()
         self._maybe_checkpoint()
         return [int(i) for i in ids]
+
+    def delete_documents(self, doc_ids) -> int:
+        """Delete documents by id through the same durable path INSERTs
+        take: one canonical DELETE batch is WAL-appended (or group-
+        submitted) before its effects are visible, applied with the same
+        bulk driver, and recorded on the same audit logs — a churny
+        workload is just a log with more opcodes, not a different engine.
+        Unknown ids are deterministic no-ops (they still advance logical
+        time, like every rejected command). Returns the number of rows
+        actually tombstoned.
+
+        The HNSW graph survives: ``machine`` repairs a tombstoned entry
+        point on the spot (DESIGN.md §11) and the scheduled re-link pass
+        (``ServeConfig.relink``) sweeps dead waypoints, so the planner
+        keeps the ANN route under churn."""
+        if len(doc_ids) == 0:
+            return 0
+        ids = np.asarray(sorted(int(i) for i in doc_ids), dtype=np.int64)
+        batch_log = commands.delete_batch(jnp.asarray(ids), self.cfg.d_model,
+                                          self.sc.contract)
+        routed = None if not self._layout_sharded else \
+            distributed.route_commands(batch_log, self.n_shards)
+        if self._group is not None:
+            self._group.submit(batch_log, routed=routed)
+        elif self.durable is not None:
+            if self._doc_table is not None:
+                self._doc_table.sync()
+            if not self._layout_sharded:
+                self.durable.append(batch_log)
+            else:
+                self.durable.append(batch_log, routed=routed)
+        self.log = self.log.concat(batch_log)
+        before = shard_wal.live_count(self.memory)
+        if not self._layout_sharded:
+            self.memory = machine.bulk_apply(self.memory, batch_log)
+        else:
+            for s in range(self.n_shards):
+                self._shard_logs[s] = self._shard_logs[s].concat(
+                    jax.tree.map(lambda a, s=s: a[s], routed))
+            self.memory = shard_wal.bulk_apply_sharded(
+                self.memory, batch_log, self.n_shards, routed=routed)
+        removed = before - shard_wal.live_count(self.memory)
+        for tid in ids:
+            # the doc cache drops now; the side table's record stays — a
+            # dead id is never retrieved, and the engine's sequential id
+            # allocation never reuses it, so the stale bytes are inert
+            self.docs.pop(int(tid), None)
+        # deletes touch layout-dependent slots; the lazy rebuild is a pure
+        # function of the live rows, so it is always bit-identical
+        self._code_tables = None
+        self._deletes_since_relink += removed
+        self._cmds_since_relink_check += len(batch_log)
+        self._maybe_relink()
+        self._maybe_checkpoint()
+        return removed
+
+    # ------------------------------------------------------------------ #
+    # graph maintenance: scheduled deterministic re-link (DESIGN.md §11)
+    # ------------------------------------------------------------------ #
+
+    def _maybe_relink(self) -> None:
+        """The schedule of ``ServeConfig.relink``, checked at batch
+        boundaries from layout-invariant facts only — flat and sharded
+        engines fed the same batches fire at the same boundaries."""
+        pol = self.sc.relink
+        if pol is None or self._cmds_since_relink_check < pol.check_every:
+            return
+        self._cmds_since_relink_check = 0
+        dead = self._deletes_since_relink
+        live = shard_wal.live_count(self.memory)
+        if dead < pol.min_deletes or dead < pol.dead_ratio * (dead + live):
+            return
+        self.relink_now()
+
+    def relink_now(self) -> int:
+        """Re-link the serving graph from its live rows right now (each
+        shard's slice in sharded mode) and record the firing cursor on
+        ``relink_ts`` — the pass mutates the graph without a logged
+        command, so the audit trail must know where it fired for
+        ``replay_log_fresh`` to reproduce the serving state. Returns the
+        cursor. Arena, WAL and durable artifacts are untouched: a re-link
+        changes how the graph routes, never what the memory contains."""
+        t = self._cursor()
+        if not self._layout_sharded:
+            self.memory = hnsw.relink(self.memory)
+        else:
+            self.memory = shard_wal.relink_sharded(self.memory,
+                                                   self.n_shards)
+        self.relink_ts.append(t)
+        self.graph_gen = len(self.relink_ts)
+        self._deletes_since_relink = 0
+        return t
 
     # ------------------------------------------------------------------ #
     # READ path
@@ -510,7 +620,8 @@ class MemoryAugmentedEngine:
             shard_wal.live_count(self.memory), k, self.sc.ef,
             use_kernel=self.sc.use_kernel,
             exact_threshold=self.sc.exact_threshold, route=self.sc.route,
-            ef_coarse=self.sc.ef_coarse, dim=self.cfg.d_model)
+            ef_coarse=self.sc.ef_coarse, dim=self.cfg.d_model,
+            graph_gen=self.graph_gen)
         pool = None
         if self.read_replicas:
             slot = self._pick_replica(q_raw)
@@ -751,6 +862,7 @@ class MemoryAugmentedEngine:
         self._last_ckpt_t = t     # first coarse read (pure function of it)
         self._reload_audit_logs(t)
         self._reload_serving_caches()
+        h = self._canonicalize_graph(t, h)
         return t, h
 
     def rollback_to(self, t: int) -> Tuple[int, int]:
@@ -769,7 +881,36 @@ class MemoryAugmentedEngine:
         self._last_ckpt_t = t
         self._reload_audit_logs(t)
         self._reload_serving_caches()
+        h = self._canonicalize_graph(t, h)
         return t, h
+
+    def _canonicalize_graph(self, t: int, h: int) -> int:
+        """Post-restore graph canonicalization (DESIGN.md §11). The durable
+        WAL holds commands only — a restored graph is the pure-replay
+        graph, not the re-linked one the engine was serving. With a re-link
+        policy configured, one re-link of the restored state puts every
+        recovered engine (and every layout) on the same canonical footing:
+        ``relink_ts=[t]``, ``graph_gen=1``, counters reset — and the
+        returned hash becomes the post-re-link ``state_hash()`` (the
+        pre-re-link state was already verified against the durable records
+        by the restore itself). Retrieval is unaffected either way in the
+        beam-exhaustive regime; the canonical graph is simply the one whose
+        provenance ``replay_log_fresh`` can restate. Without a policy the
+        restore is returned untouched (graph audit state just resets)."""
+        self._deletes_since_relink = 0
+        self._cmds_since_relink_check = 0
+        if self.sc.relink is None:
+            self.relink_ts = []
+            self.graph_gen = 0
+            return h
+        if not self._layout_sharded:
+            self.memory = hnsw.relink(self.memory)
+        else:
+            self.memory = shard_wal.relink_sharded(self.memory,
+                                                   self.n_shards)
+        self.relink_ts = [t]
+        self.graph_gen = 1
+        return self.state_hash()
 
     # ------------------------------------------------------------------ #
     # audit / replay (paper §8.1, §9; DESIGN.md §7)
@@ -801,16 +942,36 @@ class MemoryAugmentedEngine:
         equal ``state_hash()`` (the paper's replayability guarantee). In
         sharded mode each shard's (routed, padded) log replays on its
         genesis slice and the merge is hashed — the sharded form of the
-        same audit."""
+        same audit.
+
+        Re-links mutate the graph without a logged command, so the replay
+        interleaves ``hnsw.relink`` at the recorded ``relink_ts`` cursors —
+        the flat cursor is the global log index, a per-shard cursor is the
+        per-shard padded log offset, so slicing each log at the recorded
+        cursors replays exactly the prefix each firing saw (DESIGN.md §11).
+        """
         from repro.core import hashing
         if not self._layout_sharded:
-            fresh = init_state(self.sc.capacity, self.cfg.d_model,
-                               contract=self.sc.contract)
-            return hashing.hash_pytree(machine.replay(fresh, self.log))
+            st = init_state(self.sc.capacity, self.cfg.d_model,
+                            contract=self.sc.contract)
+            pos = 0
+            for t in self.relink_ts:
+                st = machine.replay(st, self.log.slice(pos, t))
+                st = hnsw.relink(st)
+                pos = t
+            st = machine.replay(st, self.log.slice(pos, len(self.log)))
+            return hashing.hash_pytree(st)
         genesis = distributed.init_sharded_host(
             self.n_shards, self.sc.capacity // self.n_shards,
             self.cfg.d_model, contract=self.sc.contract)
-        parts = [machine.replay(
-            distributed.shard_slice(genesis, s, self.n_shards),
-            self._shard_logs[s]) for s in range(self.n_shards)]
+        parts = []
+        for s in range(self.n_shards):
+            st = distributed.shard_slice(genesis, s, self.n_shards)
+            log = self._shard_logs[s]
+            pos = 0
+            for t in self.relink_ts:
+                st = machine.replay(st, log.slice(pos, t))
+                st = hnsw.relink(st)
+                pos = t
+            parts.append(machine.replay(st, log.slice(pos, len(log))))
         return hashing.hash_pytree(distributed.merge_shards(parts))

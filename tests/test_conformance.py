@@ -15,10 +15,12 @@ it; the suite demands one answer:
   the flat replay of the same durable prefix.
 * **across everything — one ``query.retrieval_hash``.** Exact fan-out at
   every shard count equals the single-kernel scan on the full six-opcode
-  logs; the HNSW route joins on insert-only logs in the beam-exhaustive
-  regime (ef >= live count AND every live node graph-reachable — deletes
-  may tombstone an entry point and legally strand a beam, in any layout;
-  DESIGN.md §7 pins the regime).
+  logs — and the HNSW route joins on the SAME full six-opcode logs:
+  entry-point repair keeps every layout's entry live through deletes,
+  tombstoned waypoints stay traversable at query time, and the
+  deterministic re-link pass preserves the answer (DESIGN.md §11). In the
+  beam-exhaustive regime (ef >= live count) the beamed answer equals the
+  exact scan, live and after re-link and after kill+recover.
 * **both engine modes.** ``ServeConfig(shards=1)`` and
   ``ServeConfig(shards=N)`` fed the same documents report one
   ``memory_hash()`` and one ``retrieval_hash()`` on both routes —
@@ -57,7 +59,7 @@ from _pbt import strategies as st
 import repro  # noqa: F401
 from repro.configs import get_reduced_config
 from repro.core import (boundary, commands, distributed, durability, hashing,
-                        machine, query, search, shard_wal, wal)
+                        hnsw, machine, query, search, shard_wal, wal)
 from repro.core.state import init_state
 from repro.models import transformer as tf
 from repro.serve.engine import MemoryAugmentedEngine, ServeConfig
@@ -119,20 +121,19 @@ def test_one_answer_across_every_stack(seed):
     ids_ref, s_ref = search.exact_search(s_flat, q, K)
     rh = query.retrieval_hash(ids_ref, s_ref)
 
-    # the HNSW conformance regime (DESIGN.md §7) needs every live node
-    # graph-reachable: an insert-only twin log drives that route (a delete
-    # may tombstone an entry point and legally strand a beam in any layout)
-    rng = np.random.default_rng(seed)
-    ins_vecs = boundary.normalize_embedding(
-        rng.normal(size=(18, D)).astype(np.float32))
-    ins_ids = rng.permutation(ID_SPACE * 3)[:18].astype(np.int64)
-    ins_log = commands.insert_batch(jnp.asarray(ins_ids), ins_vecs)
-    s_ins = machine.replay(init_state(4 * CAP_PER_SHARD, D), ins_log)
-    ids_ie, s_ie = search.exact_search(s_ins, q, K)
-    rh_ins = query.retrieval_hash(ids_ie, s_ie)
-    plan_h = query.plan_query(18, K, EF, route="hnsw")
-    ids_ih, s_ih = query.execute_plan(s_ins, q, K, plan_h)
-    assert query.retrieval_hash(ids_ih, s_ih) == rh_ins, "flat hnsw != exact"
+    # the HNSW route runs on the SAME full six-opcode log (DESIGN.md §11):
+    # entry-point repair keeps the entry live through every delete, the
+    # query beam traverses tombstoned waypoints, and EF >= live makes the
+    # beam exhaustive — so ANN must reproduce the exact scan bit-for-bit,
+    # live AND after a deterministic re-link of the churned graph
+    plan_h = query.plan_query(shard_wal.live_count(s_flat), K, EF,
+                              route="hnsw")
+    ids_fh, s_fh = query.execute_plan(s_flat, q, K, plan_h)
+    assert query.retrieval_hash(ids_fh, s_fh) == rh, \
+        "flat hnsw != exact on the churny log"
+    ids_fr, s_fr = query.execute_plan(hnsw.relink(s_flat), q, K, plan_h)
+    assert query.retrieval_hash(ids_fr, s_fr) == rh, \
+        "re-linked flat hnsw != exact"
 
     # -- sharded stacks at 1/2/4 shards --------------------------------- #
     for ns in SHARD_COUNTS:
@@ -156,13 +157,18 @@ def test_one_answer_across_every_stack(seed):
             assert query.retrieval_hash(i2, s2) == rh, \
                 f"sharded exact retrieval diverged (n_shards={ns})"
 
-            # cap 32 per shard: even all-on-one-shard routing cannot reject
-            sh_ins = shard_wal.bulk_apply_sharded(
-                distributed.init_sharded_host(ns, 32, D), ins_log, ns)
-            assert hashing.content_hash(sh_ins) == hashing.content_hash(s_ins)
-            i3, s3 = query.sharded_host_query(sh_ins, ns, q, K, plan_h)
-            assert query.retrieval_hash(i3, s3) == rh_ins, \
+            # the HNSW route on the restored churny sharded state — one
+            # retrieval hash with the flat graph and the exact scan, live
+            # and after every shard re-links its slice (DESIGN.md §11)
+            i3, s3 = query.sharded_host_query(state, ns, q, K, plan_h)
+            assert query.retrieval_hash(i3, s3) == rh, \
                 f"sharded hnsw retrieval diverged (n_shards={ns})"
+            relinked = shard_wal.relink_sharded(state, ns)
+            assert hashing.content_hash(relinked) == ch, \
+                "re-link must not touch the arena"
+            i4, s4 = query.sharded_host_query(relinked, ns, q, K, plan_h)
+            assert query.retrieval_hash(i4, s4) == rh, \
+                f"re-linked sharded hnsw diverged (n_shards={ns})"
 
 
 @given(st.integers(0, 2**31 - 1))
@@ -202,8 +208,15 @@ def test_kill_mid_log_recovers_to_the_flat_prefix(seed):
         assert hashing.content_hash(state) == hashing.content_hash(flat_ref)
         i_r, s_r = shard_wal.exact_search_sharded(state, ns, q, K)
         i_f, s_f = search.exact_search(flat_ref, q, K)
-        assert (query.retrieval_hash(i_r, s_r)
-                == query.retrieval_hash(i_f, s_f))
+        rh_acked = query.retrieval_hash(i_f, s_f)
+        assert query.retrieval_hash(i_r, s_r) == rh_acked
+        # the ANN route survives the kill too: the recovered churned graph
+        # answers bit-identically to the flat prefix's exact scan
+        plan_h = query.plan_query(shard_wal.live_count(state), K, EF,
+                                  route="hnsw")
+        i_h, s_h = query.sharded_host_query(state, ns, q, K, plan_h)
+        assert query.retrieval_hash(i_h, s_h) == rh_acked, \
+            "recovered sharded hnsw diverged from the acked prefix"
 
 
 # --------------------------------------------------------------------------- #
@@ -275,6 +288,76 @@ def test_engine_modes_conform_including_kill_recover(model, tmp_path):
             eng.sc.route = route
             hashes.add(eng.retrieval_hash(prompts))
         assert len(hashes) == 1, f"recovered engines diverged on {route}"
+    for eng in recovered.values():
+        assert eng.state_hash() == eng.replay_log_fresh()
+
+
+def test_engine_modes_conform_under_churn(model, tmp_path):
+    """Six-opcode serving (DESIGN.md §11): both engine modes ingest the
+    same docs, DELETE the same ids (entry points included), and re-link on
+    the same layout-invariant schedule — one memory_hash, one
+    retrieval_hash on the exact AND hnsw routes, live and after a kill +
+    ``recover()``, with the audit replay restating the serving state."""
+    cfg, params = model
+    rng = np.random.default_rng(11)
+    docs = rng.integers(0, cfg.vocab_size, (14, 12), dtype=np.int32)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 8), dtype=np.int32)
+
+    def sc(shards, d):
+        return ServeConfig(
+            capacity=64, retrieve_k=3, max_new_tokens=4, s_cache=96,
+            context_tokens=8, shards=shards, durable_dir=str(d),
+            relink=hnsw.RelinkPolicy(dead_ratio=0.25, min_deletes=4,
+                                     check_every=8),
+            group_commit=wal.GroupCommitPolicy(max_batch=1 << 20,
+                                               max_delay_s=3600))
+
+    engines = {
+        1: MemoryAugmentedEngine(cfg, params, sc(1, tmp_path / "flat")),
+        2: MemoryAugmentedEngine(cfg, params, sc(2, tmp_path / "shard")),
+    }
+    for eng in engines.values():
+        ids = eng.insert_documents(docs)
+        # kills the flat entry (first insert) and, with high likelihood,
+        # per-shard entries too; either way repair keeps every entry live
+        assert eng.delete_documents(ids[:8]) == 8
+        assert eng.delete_documents([10_000]) == 0  # no-op, advances time
+    assert engines[1].graph_gen == engines[2].graph_gen == 1, \
+        "the re-link schedule must fire at the same batch boundary"
+    assert engines[1].memory_hash() == engines[2].memory_hash()
+    for route in ("exact", "hnsw"):
+        hashes = set()
+        for eng in engines.values():
+            eng.sc.route = route
+            hashes.add(eng.retrieval_hash(prompts))
+            assert eng.last_plan.graph_gen == 1  # the plan records the gen
+        assert len(hashes) == 1, f"churny engines diverged on route {route}"
+    for eng in engines.values():
+        assert eng.state_hash() == eng.replay_log_fresh()
+
+    # kill + recover: deletes flushed, a trailing insert batch un-acked
+    killed = {
+        1: MemoryAugmentedEngine(cfg, params, sc(1, tmp_path / "flat2")),
+        2: MemoryAugmentedEngine(cfg, params, sc(2, tmp_path / "shard2")),
+    }
+    for eng in killed.values():
+        ids = eng.insert_documents(docs)
+        eng.delete_documents(ids[:8])
+        eng.flush()
+        eng.insert_documents(docs[:3])  # never flushed, never acked
+    recovered = {
+        1: MemoryAugmentedEngine(cfg, params, sc(1, tmp_path / "flat2")),
+        2: MemoryAugmentedEngine(cfg, params, sc(2, tmp_path / "shard2")),
+    }
+    for eng in recovered.values():
+        eng.recover()
+    assert recovered[1].memory_hash() == recovered[2].memory_hash()
+    for route in ("exact", "hnsw"):
+        hashes = set()
+        for eng in recovered.values():
+            eng.sc.route = route
+            hashes.add(eng.retrieval_hash(prompts))
+        assert len(hashes) == 1, f"recovered churny engines diverged ({route})"
     for eng in recovered.values():
         assert eng.state_hash() == eng.replay_log_fresh()
 

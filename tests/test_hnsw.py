@@ -88,3 +88,117 @@ def test_entry_point_fixed_to_first_insert():
     q = boundary.admit_query(np.random.default_rng(0).normal(size=(D,)))
     ids, d, slots = hnsw.hnsw_search(s, q, 3)
     assert 0 not in np.asarray(ids).tolist()  # masked from results
+    # and the entry was repaired on the spot: live, and exactly the node
+    # the deterministic promotion rule names (DESIGN.md §11)
+    e = int(s.hnsw_entry)
+    assert bool(s.valid[e])
+    assert e == int(hnsw.repair_entry(s))
+
+
+# --------------------------------------------------------------------------- #
+# churn: entry-point repair + the re-link contract (DESIGN.md §11)
+# --------------------------------------------------------------------------- #
+
+
+def _churn_flat(seed: int, n: int, capacity: int = 32):
+    """A seeded churny log that repeatedly kills the current entry point:
+    insert n rows, then alternate delete-the-entry / insert-a-fresh-row.
+    Returns (state, log) with the log being the exact command sequence."""
+    rng = np.random.default_rng(seed)
+    vecs = boundary.normalize_embedding(
+        rng.normal(size=(n, D)).astype(np.float32))
+    log = commands.insert_batch(jnp.arange(n, dtype=jnp.int64), vecs)
+    s = machine.replay(init_state(capacity, D), log)
+    next_id = n
+    for _ in range(n // 2):
+        victim = int(s.ids[int(s.hnsw_entry)])
+        step = commands.delete_cmd(victim, D)
+        if rng.integers(2):
+            fresh = boundary.normalize_embedding(
+                rng.normal(size=(1, D)).astype(np.float32))
+            step = step.concat(commands.insert_batch(
+                jnp.asarray([next_id], jnp.int64), fresh))
+            next_id += 1
+        s = machine.replay(s, step)
+        log = log.concat(step)
+    return s, log
+
+
+def test_entry_repair_property_across_layouts():
+    """Seeded logs that keep deleting the current entry: every layout —
+    sequential replay, chunked replay, bulk_apply — repairs to the same
+    live entry, that entry is the one a fresh build of the live rows
+    elects, and the retrieval set equals the exact scan's (the graph
+    stayed fully reachable through the churn)."""
+    from repro.core import query
+    for seed in range(3):
+        s, log = _churn_flat(seed, n=12)
+        layouts = {
+            "replay": machine.replay(init_state(32, D), log),
+            "chunked": machine.apply_chunked(init_state(32, D), log, 7),
+            "bulk": machine.bulk_apply(init_state(32, D), log),
+        }
+        entries = {k: int(v.hnsw_entry) for k, v in layouts.items()}
+        assert len(set(entries.values())) == 1, entries
+        e = entries["replay"]
+        assert e < 0 or bool(s.valid[e])
+        # the repaired entry is exactly the fresh build's election
+        assert e == int(hnsw.fresh_build(s).hnsw_entry)
+
+        rng = np.random.default_rng(100 + seed)
+        qs = boundary.admit_query(
+            rng.normal(size=(4, D)).astype(np.float32))
+        exact_ids, exact_s = search.exact_search(s, qs, 5)
+        ref = query.retrieval_hash(exact_ids, exact_s)
+        for name, st in layouts.items():
+            ids, dists, _ = query.batched_hnsw_search(st, qs, 5, ef=64)
+            assert query.retrieval_hash(ids, dists) == ref, (seed, name)
+
+
+def test_relink_matches_fresh_build_bit_for_bit():
+    """The re-link contract: ``hash(relink(S)) == hash(fresh_build(S))``
+    on seeded churny states — the jitted scan over the fast insert path
+    lands on exactly the graph the reference per-row build lands on, with
+    the arena untouched."""
+    for seed in range(3):
+        s, _ = _churn_flat(seed, n=12)
+        r = hnsw.relink(s)
+        f = hnsw.fresh_build(s)
+        assert hashing.hash_pytree(r) == hashing.hash_pytree(f), seed
+        # arena untouched: only the graph arrays may differ from s
+        for field in ("vectors", "ids", "valid", "meta", "links",
+                      "count", "version", "cursor"):
+            assert (np.asarray(getattr(r, field))
+                    == np.asarray(getattr(s, field))).all(), field
+        # the re-linked graph serves the same answers (beam-exhaustive)
+        from repro.core import query
+        rng = np.random.default_rng(200 + seed)
+        qs = boundary.admit_query(
+            rng.normal(size=(3, D)).astype(np.float32))
+        a, b, _ = query.batched_hnsw_search(s, qs, 5, ef=64)
+        c, d, _ = query.batched_hnsw_search(r, qs, 5, ef=64)
+        assert (np.asarray(a) == np.asarray(c)).all()
+        assert (np.asarray(b) == np.asarray(d)).all()
+
+
+def test_relink_of_empty_and_all_dead_states():
+    """Degenerate re-links: an empty arena and a fully-tombstoned arena
+    both re-link to the blank graph (entry -1), and the next insert
+    re-seeds through the ordinary first-insert path."""
+    empty = init_state(16, D)
+    r = hnsw.relink(empty)
+    assert int(r.hnsw_entry) == -1
+    s, _ = _build(n=6, capacity=16)
+    ids = jnp.arange(6, dtype=jnp.int64)
+    dead = machine.replay(
+        s, commands.delete_batch(ids, D))
+    assert int(dead.hnsw_entry) == -1  # repair found nothing live
+    r = hnsw.relink(dead)
+    assert int(r.hnsw_entry) == -1
+    assert (np.asarray(r.hnsw_levels) == -1).all()
+    fresh = boundary.normalize_embedding(
+        np.random.default_rng(1).normal(size=(1, D)).astype(np.float32))
+    reseed = machine.replay(r, commands.insert_batch(
+        jnp.asarray([50], jnp.int64), fresh))
+    e = int(reseed.hnsw_entry)
+    assert e >= 0 and bool(reseed.valid[e])

@@ -324,3 +324,109 @@ def test_empty_ingest_batch_is_a_true_noop_in_both_modes(engine, tmp_path):
         assert eng.state_hash() == h0 and eng.durable.t == 0
         assert eng._cursor() == 0 and eng._next_id == 0
         eng.close()
+
+
+# --------------------------------------------------------------------------- #
+# churn serving: delete_documents + the re-link schedule (DESIGN.md §11)
+# --------------------------------------------------------------------------- #
+
+
+def _churn_engine(engine, shards=1, relink=None, **kw):
+    return MemoryAugmentedEngine(engine.cfg, engine.params, ServeConfig(
+        capacity=64, retrieve_k=3, max_new_tokens=4, s_cache=96,
+        context_tokens=8, shards=shards, relink=relink, **kw))
+
+
+def test_delete_documents_through_the_full_serving_path(engine):
+    """DELETEs ride the same audit/apply/doc-cache path INSERTs do: rows
+    tombstone, the doc cache drops them, retrieval never returns them,
+    unknown ids are counted-as-zero no-ops, and the audit replay still
+    restates the serving state bit-for-bit."""
+    from repro.core import hnsw
+    rng = np.random.default_rng(23)
+    docs = rng.integers(0, engine.cfg.vocab_size, (12, 16), dtype=np.int32)
+    prompts = rng.integers(0, engine.cfg.vocab_size, (2, 8), dtype=np.int32)
+    eng = _churn_engine(engine)
+    ids = eng.insert_documents(docs)
+    assert eng.delete_documents(ids[:5]) == 5
+    assert eng.delete_documents([]) == 0
+    assert eng.delete_documents([9999]) == 0     # unknown: no-op
+    assert eng.delete_documents(ids[:2]) == 0    # already dead: no-op
+    assert all(i not in eng.docs for i in ids[:5])
+    from repro.core import shard_wal
+    assert shard_wal.live_count(eng.memory) == 7
+    got, _ = eng.retrieve(prompts, k=7)
+    assert not (set(ids[:5]) & set(got.reshape(-1).tolist()))
+    assert eng.state_hash() == eng.replay_log_fresh()
+    # the entry survived the churn (repair invariant)
+    e = int(np.asarray(eng.memory.hnsw_entry).reshape(-1)[0])
+    assert e >= 0 and bool(np.asarray(eng.memory.valid)[e])
+
+
+def test_relink_policy_fires_on_dead_ratio(engine):
+    """Scheduling parity with CompactionPolicy: the pass fires once
+    effective deletes reach the dead fraction, at a check boundary."""
+    from repro.core import hnsw
+    rng = np.random.default_rng(29)
+    docs = rng.integers(0, engine.cfg.vocab_size, (16, 16), dtype=np.int32)
+    eng = _churn_engine(engine, relink=hnsw.RelinkPolicy(
+        dead_ratio=0.25, min_deletes=4, check_every=8))
+    ids = eng.insert_documents(docs)     # 16 cmds: checked, 0 dead → skip
+    assert eng.graph_gen == 0 and eng.relink_ts == []
+    eng.delete_documents(ids[:3])        # 3 dead < min_deletes=4 → skip
+    assert eng.graph_gen == 0
+    eng.delete_documents(ids[3:8])       # 8 dead >= 4, 8 >= .25*16 → FIRE
+    assert eng.graph_gen == 1 and len(eng.relink_ts) == 1
+    assert eng._deletes_since_relink == 0  # counter reset at the firing
+    assert eng.state_hash() == eng.replay_log_fresh()
+
+
+def test_relink_policy_respects_min_deletes_and_check_every(engine):
+    """Below min_deletes, or between check boundaries, the pass must not
+    fire no matter the dead fraction."""
+    from repro.core import hnsw
+    rng = np.random.default_rng(31)
+    docs = rng.integers(0, engine.cfg.vocab_size, (8, 16), dtype=np.int32)
+    eng = _churn_engine(engine, relink=hnsw.RelinkPolicy(
+        dead_ratio=0.01, min_deletes=10_000, check_every=1))
+    ids = eng.insert_documents(docs)
+    eng.delete_documents(ids[:6])        # dead fraction huge, min not met
+    assert eng.graph_gen == 0 and eng.relink_ts == []
+
+    eng2 = _churn_engine(engine, relink=hnsw.RelinkPolicy(
+        dead_ratio=0.01, min_deletes=1, check_every=10_000))
+    ids2 = eng2.insert_documents(docs)
+    eng2.delete_documents(ids2[:6])      # no check boundary reached yet
+    assert eng2.graph_gen == 0 and eng2.relink_ts == []
+
+
+def test_relink_policy_validation():
+    from repro.core import hnsw
+    with pytest.raises(ValueError, match="dead_ratio"):
+        hnsw.RelinkPolicy(dead_ratio=0.0)
+    with pytest.raises(ValueError, match="dead_ratio"):
+        hnsw.RelinkPolicy(dead_ratio=1.5)
+    with pytest.raises(ValueError, match="check_every"):
+        hnsw.RelinkPolicy(check_every=0)
+    with pytest.raises(ValueError, match="min_deletes"):
+        hnsw.RelinkPolicy(min_deletes=0)
+
+
+def test_plan_records_graph_gen_and_manual_relink(engine):
+    """``QueryPlan.graph_gen`` makes replayed plans auditable against the
+    re-link schedule; ``relink_now()`` bumps it and keeps retrieval and
+    the audit replay bit-stable."""
+    from repro.core import hnsw
+    rng = np.random.default_rng(37)
+    docs = rng.integers(0, engine.cfg.vocab_size, (10, 16), dtype=np.int32)
+    prompts = rng.integers(0, engine.cfg.vocab_size, (2, 8), dtype=np.int32)
+    eng = _churn_engine(engine, relink=hnsw.RelinkPolicy())
+    ids = eng.insert_documents(docs)
+    eng.delete_documents(ids[:4])
+    rh = eng.retrieval_hash(prompts)
+    assert eng.last_plan.graph_gen == 0
+    t = eng.relink_now()
+    assert eng.graph_gen == 1 and eng.relink_ts == [t]
+    assert eng.retrieval_hash(prompts) == rh
+    assert eng.last_plan.graph_gen == 1
+    assert eng.state_hash() == eng.replay_log_fresh()

@@ -22,6 +22,7 @@ from test_bulk_apply import _random_log
 
 D = 8
 NS = 3
+ID_SPACE_SMALL = 12  # < hnsw degree: every live node provably reachable
 
 
 def _genesis(n_shards=NS, cap=16):
@@ -421,3 +422,74 @@ def test_pre_routed_submit_path_is_bit_identical(tmp_path):
     with pytest.raises(ValueError, match="shares"):
         b_store.append_many_routed(
             [distributed.route_commands(batches[0], NS + 1)])
+
+
+# --------------------------------------------------------------------------- #
+# device-side routed apply + sharded re-link (DESIGN.md §11)
+# --------------------------------------------------------------------------- #
+
+
+def test_device_apply_matches_host_apply_bit_for_bit():
+    """``apply_routed_device`` (one vmapped device scan, no per-shard host
+    loop) must land on exactly the state the host ``bulk_apply`` driver
+    lands on, on randomized six-opcode logs at every shard count — the
+    knob is a driver choice, never a semantic one."""
+    for seed in range(3):
+        log = _random_log(seed + 77, 40, id_space=ID_SPACE_SMALL)
+        for ns in (1, 2, 4):
+            genesis = distributed.init_sharded_host(ns, 16, D)
+            routed = distributed.route_commands(log, ns)
+            host = shard_wal.bulk_apply_sharded(genesis, log, ns,
+                                                routed=routed, device=False)
+            dev = shard_wal.apply_routed_device(genesis, routed, ns)
+            assert hashing.hash_pytree(host) == hashing.hash_pytree(dev), \
+                (seed, ns)
+
+
+def test_device_apply_auto_threshold():
+    """``device=None`` auto-routes by share length: at or under
+    ``_DEVICE_APPLY_MAX`` both drivers are interchangeable (and must be
+    bit-identical); either way the result matches the explicit drivers."""
+    log = _random_log(5, 24, id_space=ID_SPACE_SMALL)
+    genesis = _genesis()
+    routed = distributed.route_commands(log, NS)
+    assert int(routed.opcode.shape[1]) <= shard_wal._DEVICE_APPLY_MAX
+    auto = shard_wal.bulk_apply_sharded(genesis, log, NS, routed=routed)
+    dev = shard_wal.bulk_apply_sharded(genesis, log, NS, routed=routed,
+                                       device=True)
+    host = shard_wal.bulk_apply_sharded(genesis, log, NS, routed=routed,
+                                        device=False)
+    assert (hashing.hash_pytree(auto) == hashing.hash_pytree(dev)
+            == hashing.hash_pytree(host))
+
+
+def test_shard_stack_unstack_roundtrip():
+    log = _random_log(9, 30, id_space=ID_SPACE_SMALL)
+    state = shard_wal.bulk_apply_sharded(_genesis(), log, NS)
+    back = shard_wal.shard_unstack(shard_wal.shard_stack(state, NS), NS)
+    assert hashing.hash_pytree(back) == hashing.hash_pytree(state)
+    # each stacked lane IS the shard slice
+    stacked = shard_wal.shard_stack(state, NS)
+    for s in range(NS):
+        lane = jax.tree.map(lambda a, s=s: a[s], stacked)
+        sl = distributed.shard_slice(state, s, NS)
+        for la, lb in zip(jax.tree_util.tree_leaves(lane),
+                          jax.tree_util.tree_leaves(sl)):
+            assert (np.asarray(la) == np.asarray(lb)).all()
+
+
+def test_relink_sharded_matches_per_slice_contract():
+    """``relink_sharded`` == slice-by-slice ``hnsw.relink`` == slice-by-
+    slice ``hnsw.fresh_build`` (the bit-exact re-link contract applied per
+    shard), with the merged arena untouched."""
+    from repro.core import hnsw
+    log = _random_log(21, 48, id_space=ID_SPACE_SMALL)
+    state = shard_wal.bulk_apply_sharded(_genesis(), log, NS)
+    relinked = shard_wal.relink_sharded(state, NS)
+    assert hashing.content_hash(relinked) == hashing.content_hash(state)
+    for s in range(NS):
+        sl = distributed.shard_slice(state, s, NS)
+        got = distributed.shard_slice(relinked, s, NS)
+        assert (hashing.hash_pytree(got)
+                == hashing.hash_pytree(hnsw.relink(sl))
+                == hashing.hash_pytree(hnsw.fresh_build(sl))), s
