@@ -14,7 +14,12 @@ the primary's exact state would be meaningless):
      t+1 while slice t applies, DESIGN.md §9), same hashes either way;
   3. replica-read QPS: the same planned batch retrieval served by the
      primary vs by a caught-up replica — the read-scaling payoff — with
-     the replica's answers hash-checked against the primary's.
+     the replica's answers hash-checked against the primary's;
+  4. follower-mode replica reads UNDER LIVE WRITES (DESIGN.md §12): the
+     replica runs a background tailer (``start_following``) and serves
+     ``snapshot()`` reads while the primary keeps ingesting — no sync
+     call anywhere — then must converge to the primary's exact state
+     and retrieval hash once the writes quiesce.
 
 Everything runs through the real wire protocol (``LocalTransport`` is the
 full encode/decode round trip), so the measured numbers include codec +
@@ -145,12 +150,12 @@ def table_catch_up(n: int, step: int) -> None:
                                           hnsw_degree=2),
                                replica_id=9, prefetch=prefetch)
             t0 = time.perf_counter()
-            t = rep.catch_up(max_commands=step,
-                             max_rounds=2 * (n // step + 2),
-                             pipeline=mode == "pipelined")
+            lag = rep.catch_up(max_commands=step,
+                               max_rounds=2 * (n // step + 2),
+                               pipeline=mode == "pipelined")
             dt = time.perf_counter() - t0
 
-            state_ok = (t == host.store.t
+            state_ok = (lag == 0 and rep.t == host.store.t
                         and rep.state_hash() == host.state_hash())
             read_ok = rep.retrieval_hash(q, K) == rh_primary
             emit(f"replica_catch_up_{mode}", dt / n * 1e6,
@@ -160,7 +165,7 @@ def table_catch_up(n: int, step: int) -> None:
             if not (state_ok and read_ok):
                 raise RuntimeError(
                     f"{mode} caught-up replica diverged from the primary "
-                    f"(t={t} vs {host.store.t})")
+                    f"(residual lag {lag}, t={rep.t} vs {host.store.t})")
             rep.close()
 
 
@@ -216,15 +221,86 @@ def table_replica_read_qps(n: int, step: int, *, rounds: int = 20) -> None:
         rep.close()
 
 
+def table_follower_read_qps_live(n: int, step: int, *, rounds: int = 20
+                                 ) -> None:
+    """Live followers (DESIGN.md §12): replica-read QPS while the primary
+    keeps ingesting — NO sync call anywhere, the background tailer earns
+    every cursor on its own. Each sampled read runs on a ``snapshot()``
+    (one proven (state, hash, t) triple); after the writes quiesce the
+    follower must converge to the primary's exact state and retrieval
+    hash, or the number is refused."""
+    from repro.core.state import init_state
+    from repro.net.replica import FollowerPolicy
+    batches = _insert_batches(n, step, seed=7)
+    q = _queries(seed=8)
+    with tempfile.TemporaryDirectory() as tmp:
+        host = ShardHost(f"{tmp}/primary",
+                         init_state(2 * n, DIM, hnsw_levels=1,
+                                    hnsw_degree=2),
+                         segment_records=max(n, 1024))
+        writer = RemoteShardClient(LocalTransport(host))
+        half = max(1, len(batches) // 2)
+        for b in batches[:half]:
+            writer.append(b)
+        rep = ReplicaStore(RemoteShardClient(LocalTransport(host)),
+                           init_state(2 * n, DIM, hnsw_levels=1,
+                                      hnsw_degree=2),
+                           replica_id=2)
+        rep.start_following(FollowerPolicy(max_delay_s=0.002))
+        deadline = time.time() + 120
+        while rep.t < host.store.t:
+            if time.time() > deadline:
+                raise RuntimeError("follower never reached the warm cursor")
+            time.sleep(0.002)
+
+        nq = int(np.asarray(q).shape[0])
+        pending = list(batches[half:])
+        ingested = 0
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            if pending:  # the live writes the follower must absorb
+                writer.append(pending.pop(0))
+                ingested += 1
+            state, _, _ = rep.snapshot()
+            plan = query.plan_query(live_count(state), K, 64)
+            ids, _ = query.execute_plan(state, q, K, plan)
+            np.asarray(ids)  # materialize inside the timed region
+        dt = time.perf_counter() - t0
+        for b in pending:
+            writer.append(b)
+
+        deadline = time.time() + 120
+        while rep.t < host.store.t:
+            if time.time() > deadline:
+                raise RuntimeError(
+                    "follower never converged after the writes quiesced")
+            time.sleep(0.002)
+        hashes_ok = (rep.follow_error is None
+                     and rep.state_hash() == host.state_hash()
+                     and rep.retrieval_hash(q, K)
+                     == _primary_retrieval_hash(host, q))
+        emit("follower_read_qps_live_writes", dt / (rounds * nq) * 1e6,
+             f"queries_per_sec={rounds * nq / dt:.0f};batch={nq};"
+             f"batches_ingested_during_reads={ingested};"
+             f"hashes_equal={hashes_ok}")
+        if not hashes_ok:
+            raise RuntimeError(
+                "live follower diverged from the primary — the QPS number "
+                "would be meaningless")
+        rep.close()
+
+
 def run(*, smoke: bool = False) -> None:
     if smoke:
         table_ingest(n=96, step=16)
         table_catch_up(n=96, step=16)
         table_replica_read_qps(n=96, step=16, rounds=5)
+        table_follower_read_qps_live(n=96, step=16, rounds=5)
     else:
         table_ingest(n=512, step=32)
         table_catch_up(n=512, step=32)
         table_replica_read_qps(n=512, step=32)
+        table_follower_read_qps_live(n=512, step=32)
 
 
 if __name__ == "__main__":

@@ -43,6 +43,7 @@ import repro  # noqa: F401
 from repro.configs import get_config, get_reduced_config
 from repro.core import hnsw
 from repro.models import transformer as tf
+from repro.net.replica import FollowerPolicy
 from repro.serve.engine import MemoryAugmentedEngine, ServeConfig
 
 
@@ -87,6 +88,14 @@ def main() -> None:
     ap.add_argument("--replicas", type=int, default=0,
                     help="verified read replicas per shard; retrieval "
                          "routes to the pool at proven cursors")
+    ap.add_argument("--follow", action="store_true",
+                    help="run the replica pool as live followers: each "
+                         "replica tails the primary on a background "
+                         "thread (DESIGN.md §12), so reads route to the "
+                         "pool without a manual sync_replicas()")
+    ap.add_argument("--follow-delay", type=float, default=0.05,
+                    help="follower staleness bound in seconds "
+                         "(FollowerPolicy.max_delay_s)")
     ap.add_argument("--route", default="auto",
                     choices=["auto", "exact", "hnsw", "coarse"],
                     help="read route: planner's choice (auto) or forced")
@@ -138,6 +147,8 @@ def main() -> None:
             shards=args.shards if hosts is None else 1,
             hosts=hosts, durable_dir=durable_dir,
             replicas=args.replicas,
+            follow=(FollowerPolicy(max_delay_s=args.follow_delay)
+                    if args.follow else None),
             route=args.route, ef_coarse=args.ef_coarse,
             # floors scaled to the demo corpus so the pass actually fires
             # at launcher scale; production defaults are the dataclass's
@@ -159,10 +170,23 @@ def main() -> None:
                   f"(re-links at {engine.relink_ts}); "
                   f"memory hash {engine.memory_hash():#x}")
 
-        if args.replicas:
-            t = engine.sync_replicas()
-            print(f"synced {args.replicas} replicas/shard to proven "
-                  f"cursor t={t}")
+        if args.replicas and not args.follow:
+            lag = engine.sync_replicas()
+            print(f"synced {args.replicas} replicas/shard "
+                  f"(residual lag {lag} commands)")
+        elif args.replicas:
+            # live followers: no manual barrier — wait until the pool
+            # proves the flush cursor, bounded so a fault is visible
+            flush_t = engine.flush()
+            deadline = time.time() + 30.0
+            while (min(r.t for pool in engine.read_replicas for r in pool)
+                   < flush_t):
+                if time.time() > deadline:
+                    raise SystemExit("followers failed to reach the "
+                                     f"flush cursor t={flush_t}")
+                time.sleep(0.01)
+            print(f"{args.replicas} followers/shard tailed to proven "
+                  f"cursor t={flush_t} (no sync_replicas call)")
 
         prompts = rng.integers(0, cfg.vocab_size,
                                (args.requests, args.prompt_len),

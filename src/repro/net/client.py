@@ -41,7 +41,13 @@ from repro.net.server import ShardHost, read_frame
 
 class SocketTransport:
     """One TCP connection to a ``ShardServer``; lazily connected, one
-    reconnect attempt when the connection died between requests."""
+    reconnect attempt when the connection died between requests.
+
+    ``timeout`` bounds EVERY socket operation — connect, send and each
+    recv — and a deadline miss surfaces as ``TransportError``: a wedged
+    (accepting but not answering) host looks exactly like a dead one to
+    callers, instead of hanging the follower thread or ``sync_replicas``
+    forever. The failure detector's lease math relies on this bound."""
 
     def __init__(self, address: str, port: int, *, timeout: float = 30.0):
         self.address = address
@@ -54,6 +60,10 @@ class SocketTransport:
             try:
                 self._sock = socket.create_connection(
                     (self.address, self.port), timeout=self.timeout)
+                # persistent per-operation deadline (explicit, even though
+                # create_connection leaves its timeout on the socket): every
+                # send/recv after this point is bounded by ``timeout``
+                self._sock.settimeout(self.timeout)
             except OSError as e:
                 raise p.TransportError(
                     f"cannot reach shard host {self.address}:{self.port}: "
@@ -72,6 +82,15 @@ class SocketTransport:
                 raise
             # stale connection (server restarted): retry once on a fresh
             # one — idempotent requests make the possible re-execution safe
+            return self.request(data)
+        except OSError as e:
+            # sendall deadline miss / reset: same lost-message semantics as
+            # a torn read — map it into the retriable TransportError family
+            self.close()
+            if fresh:
+                raise p.TransportError(
+                    f"send to shard host {self.address}:{self.port} "
+                    f"failed: {e}") from e
             return self.request(data)
         if resp is None:
             self.close()
@@ -136,10 +155,10 @@ class RemoteShardClient:
     a response lost in transit leaves it stale-low, which the server's
     duplicate detection turns into a safe re-ack on retry."""
 
-    def __init__(self, transport, *, contract=None):
+    def __init__(self, transport, *, contract=None, epoch: int = 0):
         self.transport = transport
         self._rid = 0
-        ack = self._request(p.Hello(), p.HelloAck)
+        ack = self._request(p.Hello(epoch=epoch), p.HelloAck)
         self.dim = ack.dim
         self.itemsize = ack.itemsize
         self.contract = get_contract(ack.contract)
@@ -148,6 +167,9 @@ class RemoteShardClient:
                 f"shard host speaks contract {self.contract.name!r}, "
                 f"coordinator expects {contract.name!r}")
         self._t = ack.t
+        # fencing epoch (DESIGN.md §12): carried on every APPEND; the
+        # handshake leaves both ends at the max epoch either had seen
+        self.epoch = max(epoch, ack.epoch)
         self.wal = _RemoteWal(self)
 
     # ------------------------------------------------------------------ #
@@ -189,11 +211,28 @@ class RemoteShardClient:
         if not logs:
             return self._t
         ack = self._request(
-            p.Append(base_t=self._t,
+            p.Append(base_t=self._t, epoch=self.epoch,
                      logs=tuple(log_to_bytes(log) for log in logs)),
             p.AppendAck)
         self._t = ack.t
         return ack.t
+
+    def bump_epoch(self, epoch: int) -> int:
+        """Raise this writer's fencing epoch (monotone; a lower value is a
+        no-op). The failover coordinator calls this after a promotion so
+        the surviving write path speaks the new regime's epoch."""
+        self.epoch = max(self.epoch, int(epoch))
+        return self.epoch
+
+    def heartbeat(self, *, node_id: int = 0) -> Tuple[int, int, int]:
+        """One lease beat (DESIGN.md §12): proves the host alive within the
+        transport timeout and stamps it with ``self.epoch`` (the host
+        adopts a greater epoch durably). Returns the host's
+        (durable cursor, durable epoch, applied state hash)."""
+        ack = self._request(
+            p.Heartbeat(node_id=node_id, epoch=self.epoch), p.HeartbeatAck)
+        self.epoch = max(self.epoch, ack.epoch)
+        return ack.t, ack.epoch, ack.state_hash
 
     def checkpoint(self, state) -> Dict[str, int]:
         """Checkpoint by hash, not by shipping state: the server snapshots

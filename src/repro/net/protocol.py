@@ -5,7 +5,7 @@ record discipline (docs/wal-format.md) applied to the network:
 
   offset  size  field
   0       4     magic  b"VWIR"
-  4       4     u32 format = 1
+  4       4     u32 format = 2
   8       4     u32 msg_type
   12      8     u64 request_id   (echoed by the response; reordered or
                                   foreign responses are detected, not
@@ -42,7 +42,11 @@ from typing import Dict, Tuple, Type
 from repro.core import hashing
 
 MAGIC = b"VWIR"
-WIRE_FORMAT = 1
+# format 2: HEARTBEAT/HEARTBEAT_ACK lease frames + the fencing epoch
+# carried by HELLO / HELLO_ACK / APPEND (DESIGN.md §12). Any payload
+# change is a format bump + a deliberate golden-fixture regeneration
+# (scripts/gen_golden_wire.py) — never a silent reinterpretation.
+WIRE_FORMAT = 2
 HEADER_BYTES = 24
 DIGEST_BYTES = 8
 
@@ -75,6 +79,8 @@ RETAIN = 24
 RETAIN_ACK = 25
 SIDE_TAIL = 26
 SIDE_TAIL_ACK = 27
+HEARTBEAT = 28
+HEARTBEAT_ACK = 29
 ERROR = 255
 
 
@@ -101,6 +107,14 @@ class RemoteError(ValueError):
         super().__init__(f"{kind}: {message}")
         self.kind = kind
         self.remote_message = message
+
+
+class StaleEpochError(ValueError):
+    """A write carried an epoch below the host's durable epoch — the
+    writer belongs to a fenced (pre-failover) regime. A revived old
+    primary that was stamped with the fleet epoch refuses its old
+    clients' APPENDs with this, so a split brain can never commit; the
+    refusal crosses the wire as ``RemoteError(kind="StaleEpochError")``."""
 
 
 # --------------------------------------------------------------------------- #
@@ -259,21 +273,26 @@ class Message:
 
 @dataclasses.dataclass(frozen=True)
 class Hello(Message):
-    """Open a session: learn the shard's shape before trusting it."""
+    """Open a session: learn the shard's shape before trusting it.
+    ``epoch`` is the client's fencing epoch (DESIGN.md §12) — the host
+    adopts a greater one and advertises its own in the ack, so both ends
+    leave the handshake agreeing on the newest regime either has seen."""
     TYPE = HELLO
-    FIELDS = ()
+    FIELDS = (("epoch", "u64"),)
+    epoch: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
 class HelloAck(Message):
     TYPE = HELLO_ACK
     FIELDS = (("dim", "u32"), ("itemsize", "u32"), ("contract", "str"),
-              ("t", "u64"), ("state_hash", "u64"))
+              ("t", "u64"), ("state_hash", "u64"), ("epoch", "u64"))
     dim: int = 0
     itemsize: int = 0
     contract: str = ""
     t: int = 0
     state_hash: int = 0
+    epoch: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -297,10 +316,14 @@ class Append(Message):
     ``base_t`` is the precondition cursor: the server applies only when its
     durable cursor equals it, and recognizes an exact re-delivery (same
     base, same bytes, cursor already advanced) as a duplicate to re-ack —
-    exactly-once commit semantics over an at-least-once transport."""
+    exactly-once commit semantics over an at-least-once transport.
+    ``epoch`` is the writer's fencing epoch: a host whose durable epoch is
+    greater refuses the append with ``StaleEpochError`` — the fence that
+    keeps a revived pre-failover primary's clients from committing."""
     TYPE = APPEND
-    FIELDS = (("base_t", "u64"), ("logs", "bytes_list"))
+    FIELDS = (("base_t", "u64"), ("epoch", "u64"), ("logs", "bytes_list"))
     base_t: int = 0
+    epoch: int = 0
     logs: Tuple[bytes, ...] = ()
 
 
@@ -512,6 +535,30 @@ class SideTailAck(Message):
 
 
 @dataclasses.dataclass(frozen=True)
+class Heartbeat(Message):
+    """One lease beat from the failure detector (DESIGN.md §12): proves
+    the host is alive AND stamps it with the detector's fleet epoch —
+    the host adopts a greater epoch durably, which is what fences a
+    revived old primary's writers. ``node_id`` identifies the detector
+    (diagnostics only; liveness is per-connection)."""
+    TYPE = HEARTBEAT
+    FIELDS = (("node_id", "u64"), ("epoch", "u64"))
+    node_id: int = 0
+    epoch: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class HeartbeatAck(Message):
+    """The host's durable cursor, durable epoch and applied state hash —
+    one beat doubles as a liveness proof and a divergence tripwire."""
+    TYPE = HEARTBEAT_ACK
+    FIELDS = (("t", "u64"), ("epoch", "u64"), ("state_hash", "u64"))
+    t: int = 0
+    epoch: int = 0
+    state_hash: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
 class ErrorMsg(Message):
     TYPE = ERROR
     FIELDS = (("kind", "str"), ("message", "str"))
@@ -525,9 +572,10 @@ MESSAGE_TYPES: Dict[int, Type[Message]] = {
         QueryAck, Checkpoint, CheckpointAck, RestoreAt, StateAck, Recover,
         Rollback, RollbackAck, Tail, TailAck, ReplicaCursorAck,
         ReplicaCursorAckAck, StateHashReq, StateHashAck, ReadRange, LogAck,
-        Retain, RetainAck, SideTail, SideTailAck, ErrorMsg)
+        Retain, RetainAck, SideTail, SideTailAck, Heartbeat, HeartbeatAck,
+        ErrorMsg)
 }
-assert len(MESSAGE_TYPES) == 28, "duplicate message type id"
+assert len(MESSAGE_TYPES) == 30, "duplicate message type id"
 
 
 # --------------------------------------------------------------------------- #

@@ -36,9 +36,19 @@ Two additions make replicas a first-class availability layer (§9):
 
 ``LocalPrimary`` exposes the same replication surface over a
 ``DurableStore`` the caller already owns — how the serve engine attaches
-in-process read replicas to its own durable stores without a server."""
+in-process read replicas to its own durable stores without a server.
+
+Replicas can also be **live followers** (DESIGN.md §12): under a
+``FollowerPolicy``, ``start_following()`` runs ``catch_up`` on a daemon
+thread — waking at least every ``max_delay_s`` and immediately when the
+primary nudges it past ``max_lag_commands`` — so the read pool advances
+between explicit barriers. The safety discipline is UNCHANGED: the
+follower thread runs the same verify-then-ack path, rides transport
+faults, and **stops** on ``ReplicaDivergence`` (recorded on
+``follow_error``), never relaxing the hash check to go faster."""
 from __future__ import annotations
 
+import dataclasses
 import os
 import struct
 import threading
@@ -59,6 +69,21 @@ class ReplicaDivergence(ValueError):
     hash was tampered with), and serving must not continue from here."""
 
 
+@dataclasses.dataclass(frozen=True)
+class FollowerPolicy:
+    """Bounded-staleness policy for a background follower (§12).
+
+    ``max_lag_commands`` — the lag (in commands past the replica's proven
+    cursor) the primary tolerates before nudging the follower awake
+    immediately; 0 nudges on every flush. It also bounds each shipped
+    TAIL slice, so one wake replays bounded work per round.
+    ``max_delay_s`` — the follower wakes at least this often regardless
+    of nudges, so staleness is bounded by wall clock even when nobody
+    writes (the lease heartbeat of the read path)."""
+    max_lag_commands: int = 0
+    max_delay_s: float = 0.05
+
+
 class LocalPrimary:
     """The replica-facing surface of a ``DurableStore`` the caller already
     owns: ``tail`` / ``replica_ack`` / ``side_tail`` with the exact
@@ -76,6 +101,11 @@ class LocalPrimary:
         self.side_table = side_table
         self.ef_construction = ef_construction
         self.replica_cursors: Dict[int, int] = {}
+        # serialize tails/acks against the owner's concurrent appends: a
+        # live follower thread reads the WAL while the engine extends it,
+        # and the store's own mutation lock is the correct fence (falls
+        # back to a private lock for store-likes without one)
+        self._lock = getattr(store, "_lock", None) or threading.RLock()
 
     def _hash_at(self, t: int) -> int:
         if self._state_fn is not None:
@@ -86,14 +116,21 @@ class LocalPrimary:
             t, ef_construction=self.ef_construction)[1]
 
     def tail(self, from_t: int, *, max_commands: int = 0):
-        if from_t > self.store.t:
-            raise ValueError(
-                f"tail from t={from_t} is ahead of durable cursor "
-                f"{self.store.t}")
-        log, t_end = self.store.wal.tail(from_t, max_commands=max_commands)
-        return log, t_end, self._hash_at(t_end)
+        with self._lock:
+            if from_t > self.store.t:
+                raise ValueError(
+                    f"tail from t={from_t} is ahead of durable cursor "
+                    f"{self.store.t}")
+            log, t_end = self.store.wal.tail(from_t,
+                                             max_commands=max_commands)
+            return log, t_end, self._hash_at(t_end)
 
     def replica_ack(self, replica_id: int, t: int, state_hash: int) -> int:
+        with self._lock:
+            return self._replica_ack_locked(replica_id, t, state_hash)
+
+    def _replica_ack_locked(self, replica_id: int, t: int,
+                            state_hash: int) -> int:
         if t > self.store.t:
             raise ValueError(
                 f"replica acked t={t} ahead of the primary's durable "
@@ -147,6 +184,17 @@ class ReplicaStore:
         self.side_table: Optional[SideTable] = None
         self._closed = False
         self._prefetch_thread: Optional[threading.Thread] = None
+        # live-follower machinery (§12): one catch-up at a time, whether
+        # driven by the background thread or an explicit sync_replicas();
+        # the commit lock publishes (state, hash, t) atomically so a
+        # concurrent reader never pairs a new state with an old cursor
+        self._sync_lock = threading.Lock()
+        self._commit_lock = threading.Lock()
+        self.follow_policy: Optional[FollowerPolicy] = None
+        self.follow_error: Optional[Exception] = None
+        self._follow_thread: Optional[threading.Thread] = None
+        self._follow_stop = threading.Event()
+        self._follow_wake = threading.Event()
         if directory is not None:
             self.store = DurableStore(directory, genesis)
             self.state, self._hash, self.t = self.store.recover(
@@ -175,9 +223,10 @@ class ReplicaStore:
         — nothing is committed in that case — and lets transport faults
         (``TransportError`` / ``ProtocolError``) propagate: the step is
         idempotent, so the caller just runs it again."""
-        log, t_end, advertised = self.primary.tail(
-            self.t, max_commands=max_commands)
-        return self._commit_slice(log, t_end, advertised)
+        with self._sync_lock:
+            log, t_end, advertised = self.primary.tail(
+                self.t, max_commands=max_commands)
+            return self._commit_slice(log, t_end, advertised)
 
     def _commit_slice(self, log, t_end: int, advertised: int) -> int:
         """Verify-commit-ack one shipped slice (the body of ``sync``,
@@ -207,9 +256,10 @@ class ReplicaStore:
         # state commit is repaired by recover() — the WAL is authoritative)
         if self.store is not None:
             self.store.append(log)
-        self.state = candidate
-        self._hash = h
-        self.t = t_end
+        with self._commit_lock:
+            self.state = candidate
+            self._hash = h
+            self.t = t_end
         self._ack()
         self._sync_side()
         return self.t
@@ -263,7 +313,12 @@ class ReplicaStore:
                  pipeline: bool = False) -> int:
         """Run ``sync`` until the replica reaches the primary's cursor,
         riding through transport faults (lost/reordered messages) but
-        never through divergence. Returns the final cursor.
+        never through divergence. Returns the **residual lag**: 0 means
+        the replica *proved* it reached the primary's cursor (a
+        fault-free round shipped nothing new); a positive value is the
+        best-known number of commands still ahead of us when the round
+        budget ran out — a hot primary outran this catch-up, and the
+        caller can tell "caught up" from "gave up".
 
         With ``pipeline=True`` (requires the ``prefetch`` client), the
         next TAIL is requested on the second connection *while the current
@@ -274,7 +329,13 @@ class ReplicaStore:
         if pipeline and self.prefetch is None:
             raise ValueError("pipelined catch-up needs a prefetch client "
                              "(a second connection to the same primary)")
+        with self._sync_lock:
+            return self._catch_up_locked(max_commands, max_rounds, pipeline)
+
+    def _catch_up_locked(self, max_commands: int, max_rounds: int,
+                         pipeline: bool) -> int:
         pending: Optional[Tuple[threading.Thread, dict, int]] = None
+        last_t_end = self.t
         for _ in range(max_rounds):
             t_before = self.t
             try:
@@ -294,6 +355,7 @@ class ReplicaStore:
                         self.t, max_commands=max_commands)
             except (p.TransportError, p.ProtocolError):
                 continue  # the step is idempotent: just ask again
+            last_t_end = max(last_t_end, t_end)
             if pipeline and t_end > self.t:
                 pending = self._start_prefetch(t_end, max_commands)
             try:
@@ -301,8 +363,28 @@ class ReplicaStore:
             except (p.TransportError, p.ProtocolError):
                 continue
             if self.t == t_before:
-                return self.t  # a fault-free round with no progress: caught up
-        return self.t
+                # a fault-free round shipped nothing past our cursor:
+                # t_end == t proves the primary's cursor == ours
+                return 0
+        return self._residual_lag(last_t_end)
+
+    def _residual_lag(self, last_t_end: int) -> int:
+        """Best-known commands still ahead of the replica when catch-up
+        gives up: the primary's cursor when it is probeable, else the
+        newest shipped ``t_end`` (a lower bound — a bounded TAIL never
+        advertises the full cursor). Never 0: reaching the cursor exits
+        through the proven fault-free path above, so a give-up is always
+        reported as real lag."""
+        try:
+            refresh = getattr(self.primary, "refresh_t", None)
+            if refresh is not None:
+                return max(1, refresh() - self.t)
+            store = getattr(self.primary, "store", None)
+            if store is not None:
+                return max(1, store.t - self.t)
+        except (p.TransportError, p.ProtocolError):
+            pass
+        return max(1, last_t_end - self.t)
 
     def _start_prefetch(self, from_t: int, max_commands: int
                         ) -> Tuple[threading.Thread, dict, int]:
@@ -320,6 +402,77 @@ class ReplicaStore:
         self._prefetch_thread = thread
         return thread, box, from_t
 
+    # ------------------------------------------------------------------ #
+    # live following: the background tailer (DESIGN.md §12)
+    # ------------------------------------------------------------------ #
+
+    @property
+    def following(self) -> bool:
+        """True while the background follower thread is alive."""
+        thread = self._follow_thread
+        return thread is not None and thread.is_alive()
+
+    def start_following(self, policy: Optional[FollowerPolicy] = None
+                        ) -> None:
+        """Start the background tailer: a daemon thread loops ``catch_up``
+        under ``policy``, waking at least every ``max_delay_s`` and
+        immediately on ``notify_writes()``. Same verify-then-ack path as
+        an explicit sync — every cursor the follower commits is proven —
+        and the thread rides transport faults but STOPS on divergence
+        (``follow_error`` records why; a diverged follower must not keep
+        serving reads as if it were healthy). Idempotent while a follower
+        is already running."""
+        if self._closed:
+            raise ValueError("cannot follow on a closed replica")
+        if self.following:
+            return
+        self.follow_policy = policy or FollowerPolicy()
+        self.follow_error = None
+        self._follow_stop.clear()
+        self._follow_wake.set()  # first round runs immediately
+        self._follow_thread = threading.Thread(
+            target=self._follow_loop, daemon=True,
+            name=f"replica-{self.replica_id}-follower")
+        self._follow_thread.start()
+
+    def notify_writes(self) -> None:
+        """Nudge the follower awake (the primary's flush hook): the next
+        catch-up round starts now instead of at the ``max_delay_s`` tick.
+        Safe to call from any thread; a no-op without a follower."""
+        self._follow_wake.set()
+
+    def stop_following(self, *, timeout: float = 10.0) -> None:
+        """Stop the background tailer and join it (idempotent). The
+        replica stays valid — explicit ``catch_up`` still works, and
+        ``start_following`` may be called again."""
+        self._follow_stop.set()
+        self._follow_wake.set()
+        thread = self._follow_thread
+        if thread is not None and thread.is_alive():
+            thread.join(timeout=timeout)
+        self._follow_thread = None
+
+    def _follow_loop(self) -> None:
+        policy = self.follow_policy
+        while not self._follow_stop.is_set():
+            self._follow_wake.wait(timeout=policy.max_delay_s)
+            self._follow_wake.clear()
+            if self._follow_stop.is_set():
+                return
+            try:
+                self.catch_up(max_commands=policy.max_lag_commands)
+            except (p.TransportError, p.ProtocolError):
+                continue  # transient: the next tick retries idempotently
+            except Exception as e:  # noqa: BLE001 — recorded, never silent
+                if self._follow_stop.is_set():
+                    return  # teardown race: the primary is going away
+                # divergence (or any non-transient refusal): stop serving
+                # the illusion of a healthy follower — record and halt;
+                # the hash check is never relaxed and never retried past
+                # a proven mismatch
+                self.follow_error = e
+                return
+
     def checkpoint(self) -> None:
         """Snapshot the replica's own verified state (durable replicas
         only) — bounds restart catch-up to the WAL tail past the newest
@@ -332,7 +485,7 @@ class ReplicaStore:
     # failover: promotion
     # ------------------------------------------------------------------ #
 
-    def promote(self):
+    def promote(self, *, epoch: Optional[int] = None):
         """Turn this durable replica into the new primary (DESIGN.md §9).
 
         The replica's WAL is already a *verified prefix*: every slice in
@@ -350,6 +503,7 @@ class ReplicaStore:
         if self.store is None:
             raise ValueError("only a durable replica can be promoted "
                              "(an in-memory follower has no WAL to adopt)")
+        self.stop_following()  # the old primary is gone; stop tailing it
         if self.store.t != self.t:
             # crash window: the WAL holds a verified slice the in-memory
             # state never committed — recover() lands on the durable prefix
@@ -365,7 +519,8 @@ class ReplicaStore:
             side.close()  # the promoted host reopens the mirror file
             self.side_table = None
         return ShardHost.adopt(self.store, self.state, self._hash,
-                               ef_construction=self.ef_construction)
+                               ef_construction=self.ef_construction,
+                               epoch=epoch)
 
     # ------------------------------------------------------------------ #
     # serving reads
@@ -376,6 +531,14 @@ class ReplicaStore:
         primary's at the same cursor, by construction (that equality is
         the ack precondition)."""
         return self._hash
+
+    def snapshot(self) -> Tuple[MemoryState, int, int]:
+        """A consistent (state, state_hash, t) triple under the commit
+        lock — what a reader racing a live follower must use: commits
+        publish the triple atomically, so the pair a read serves from is
+        always a *proven* (state, cursor), never a torn mix of two."""
+        with self._commit_lock:
+            return self.state, self._hash, self.t
 
     def retrieve(self, queries_raw, k: int, *, ef: int = 64,
                  use_kernel: bool = False, route: str = "auto"
@@ -400,6 +563,7 @@ class ReplicaStore:
         if self._closed:
             return
         self._closed = True
+        self.stop_following()
         thread = self._prefetch_thread
         if thread is not None and thread.is_alive():
             thread.join(timeout=5.0)

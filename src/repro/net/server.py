@@ -21,10 +21,19 @@ Two invariants make the host correct under an at-least-once transport:
     verification) is ``hashing.hash_pytree`` of a state the determinism
     contract makes bit-reproducible, so the remote end can *check* it
     rather than trust it.
+
+A third invariant fences failover (DESIGN.md §12): the host keeps a
+**durable fencing epoch** (an ``epoch`` file beside the store) that only
+ever increases — adopted from HELLO, HEARTBEAT or APPEND frames carrying
+a greater one, persisted *before* it takes effect. An APPEND whose epoch
+is below the host's durable epoch is refused with ``StaleEpochError``:
+once the failure detector stamps a revived old primary with the fleet
+epoch, that host's pre-failover writers can never commit again.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import pathlib
 import socket
 import struct
@@ -44,6 +53,30 @@ from repro.core.state import MemoryState, init_state
 from repro.net import protocol as p
 
 _VDT = {1: "<i1", 2: "<i2", 4: "<i4", 8: "<i8"}
+
+EPOCH_FILE = "epoch"
+
+
+def load_epoch(directory) -> int:
+    """The shard's durable fencing epoch (0 when never stamped)."""
+    path = pathlib.Path(directory) / EPOCH_FILE
+    try:
+        return int(path.read_text().strip())
+    except (FileNotFoundError, ValueError):
+        return 0
+
+
+def persist_epoch(directory, epoch: int) -> None:
+    """Durably record the fencing epoch (write-then-rename + fsync, the
+    WAL discipline: the fence must survive exactly the crashes it exists
+    to fence)."""
+    path = pathlib.Path(directory) / EPOCH_FILE
+    tmp = path.with_suffix(".tmp")
+    with open(tmp, "w") as f:
+        f.write(f"{int(epoch)}\n")
+        f.flush()
+        os.fsync(f.fileno())
+    tmp.replace(path)
 
 
 class ShardHost:
@@ -77,16 +110,23 @@ class ShardHost:
         # token prefixes and friends, torn-tail-truncated on open like the
         # engine's own table
         self.side_table = SideTable(self.store.dir / "docs.sdt")
+        # fencing epoch (§12): survives restarts — a revived host stays
+        # fenced at whatever epoch it was last stamped with
+        self.epoch = load_epoch(self.store.dir)
         self._closed = False
 
     @classmethod
     def adopt(cls, store: DurableStore, state: MemoryState, state_hash: int,
-              *, ef_construction: int = 32) -> "ShardHost":
+              *, ef_construction: int = 32,
+              epoch: Optional[int] = None) -> "ShardHost":
         """Wrap an already-open store + verified applied state as a host
         WITHOUT the recovery replay — the promotion path (DESIGN.md §9):
         a replica's state is proven bit-identical at its cursor, so the
         new primary adopts it after one lockstep check instead of
-        rebuilding it from the WAL."""
+        rebuilding it from the WAL. ``epoch``, when given, stamps the
+        promoted host with the new fleet epoch durably (§12) — promotion
+        IS an epoch change, so the old regime's writers are fenced from
+        the first request the new primary serves."""
         if int(state.version) != store.t:
             raise ValueError(
                 f"adopt: applied cursor {int(state.version)} != durable "
@@ -100,8 +140,19 @@ class ShardHost:
         host.state = state
         host._hash = state_hash
         host.side_table = SideTable(store.dir / "docs.sdt")
+        host.epoch = load_epoch(store.dir)
         host._closed = False
+        if epoch is not None:
+            host._adopt_epoch(epoch)
         return host
+
+    def _adopt_epoch(self, epoch: int) -> None:
+        """Monotone epoch adoption: persist BEFORE honoring, so a crash
+        can only lose an *advance* (re-stamped by the next beat), never
+        resurrect a fenced regime."""
+        if epoch > self.epoch:
+            persist_epoch(self.store.dir, epoch)
+            self.epoch = epoch
 
     def close(self) -> None:
         """Idempotent teardown (the side table holds the only file handle
@@ -145,11 +196,16 @@ class ShardHost:
 
     def _dispatch(self, msg: p.Message) -> p.Message:
         if isinstance(msg, p.Hello):
+            self._adopt_epoch(msg.epoch)
             isz = np.dtype(jnp.dtype(self.contract.storage_dtype).name
                            ).itemsize
             return p.HelloAck(dim=self.store.wal.dim, itemsize=isz,
                               contract=self.contract.name, t=self.store.t,
-                              state_hash=self._hash)
+                              state_hash=self._hash, epoch=self.epoch)
+        if isinstance(msg, p.Heartbeat):
+            self._adopt_epoch(msg.epoch)
+            return p.HeartbeatAck(t=self.store.t, epoch=self.epoch,
+                                  state_hash=self._hash)
         if isinstance(msg, p.Cursor):
             return p.CursorAck(t=self.store.t)
         if isinstance(msg, p.Append):
@@ -207,6 +263,15 @@ class ShardHost:
     # ------------------------------------------------------------------ #
 
     def _do_append(self, msg: p.Append) -> p.AppendAck:
+        if msg.epoch < self.epoch:
+            # the fence (§12): this writer belongs to a pre-failover
+            # regime — refuse BEFORE any cursor/duplicate logic, so a
+            # fenced client cannot even re-ack old work
+            raise p.StaleEpochError(
+                f"append carries epoch {msg.epoch}, host is fenced at "
+                f"epoch {self.epoch}: this writer was superseded by a "
+                "promotion and must not commit")
+        self._adopt_epoch(msg.epoch)
         if not msg.logs:
             return p.AppendAck(t=self.store.t)
         digest = hashing.digest_bytes(b"".join(msg.logs))

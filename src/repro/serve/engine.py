@@ -136,6 +136,15 @@ class ServeConfig:
     # operator/cron concern, like checkpoints). Requires durable_dir —
     # a replica follows a WAL, and without one there is nothing to tail.
     replicas: int = 0
+    # live followers (DESIGN.md §12): with a FollowerPolicy
+    # (net.replica.FollowerPolicy), every attached replica runs a
+    # background tailer — catch-up loops on a daemon thread, nudged by
+    # ``flush()`` whenever the pool lags past ``max_lag_commands`` and
+    # ticking at least every ``max_delay_s`` — so the read pool absorbs
+    # traffic between barriers with NO manual sync_replicas(). Admission
+    # is unchanged: a replica serves only at/past the flush cursor, so
+    # liveness changes and correctness doesn't. Requires replicas > 0.
+    follow: Optional[Any] = None
 
 
 class MemoryAugmentedEngine:
@@ -252,6 +261,10 @@ class MemoryAugmentedEngine:
         # verified follower of shard s (one list in flat mode)
         self.read_replicas: List[List[Any]] = []
         self._closed = False
+        if serve_cfg.follow is not None and not serve_cfg.replicas:
+            raise ValueError(
+                "follow=FollowerPolicy(...) needs replicas > 0: a "
+                "follower policy paces read replicas, and there are none")
         if serve_cfg.replicas:
             if self.durable is None:
                 raise ValueError(
@@ -259,6 +272,7 @@ class MemoryAugmentedEngine:
                     "a durable WAL, and without one there is nothing to "
                     "tail")
             self._spawn_replicas(serve_cfg.replicas)
+            self._start_followers()
 
         self._embed_fn = jax.jit(self._embed_batch)
         self._prefill = jax.jit(
@@ -332,26 +346,64 @@ class MemoryAugmentedEngine:
              for i in range(k)]
             for s, make_primary in enumerate(primaries)]
 
-    def _pick_replica(self, q_raw) -> int:
+    def _start_followers(self) -> None:
+        """Start one background tailer per replica under the configured
+        ``FollowerPolicy`` (DESIGN.md §12); a no-op without one — the
+        pool then advances only on explicit ``sync_replicas()``."""
+        if self.sc.follow is None:
+            return
+        for pool in self.read_replicas:
+            for rep in pool:
+                rep.start_following(self.sc.follow)
+
+    def _reset_replicas(self) -> None:
+        """Tear the read pool down and respawn it (recover/rollback):
+        follower threads stop, transports close, and fresh replicas
+        re-earn their cursors through the same verify-then-ack catch-up —
+        a pool must never serve a state the *current* durable history
+        cannot prove (rollback rewrites history; recovery may land on an
+        older cursor)."""
+        if not self.read_replicas:
+            return
+        for pool in self.read_replicas:
+            for rep in pool:
+                rep.close()  # close() stops the follower thread first
+        self.read_replicas = []
+        self._spawn_replicas(self.sc.replicas)
+        self._start_followers()
+
+    def _pick_replica(self, q_raw) -> Optional[int]:
         """Deterministic replica choice from the request bytes — the same
         query always lands on the same pool slot, so a served answer is
-        replayable from (log cursor, query, plan)."""
+        replayable from (log cursor, query, plan). The slot must exist on
+        EVERY shard's pool (the read fans out across shards at one slot),
+        so the usable pool size is the min across shards: a ragged pool
+        (a replica failed to spawn or was closed) shrinks the pool rather
+        than routing to a missing slot, and an empty pool returns None —
+        the primary serves."""
         from repro.core import hashing
-        return (hashing.digest_bytes(np.asarray(q_raw).tobytes())
-                % len(self.read_replicas[0]))
+        sizes = [len(pool) for pool in self.read_replicas]
+        n = min(sizes) if sizes else 0
+        if n == 0:
+            return None
+        return (hashing.digest_bytes(np.asarray(q_raw).tobytes()) % n)
 
     def sync_replicas(self, *, max_commands: int = 0) -> int:
         """Catch every attached replica up to the current flush cursor
         (each slice verified against the primary's hash before commit).
-        Returns the flush cursor. Like checkpoints, replica advancement is
-        an explicit serving-loop concern — ``retrieve()`` never blocks a
+        Returns the **max residual lag** across the pool — 0 means every
+        replica proved the flush cursor; a positive value means a hot
+        primary outran at least one catch-up (the caller can tell "caught
+        up" from "gave up"). Like checkpoints, replica advancement is an
+        explicit serving-loop concern — ``retrieve()`` never blocks a
         read on it; a lagging replica just loses the route until it
         catches up."""
-        t = self.flush()
+        self.flush()
+        lag = 0
         for pool in self.read_replicas:
             for rep in pool:
-                rep.catch_up(max_commands=max_commands)
-        return t
+                lag = max(lag, rep.catch_up(max_commands=max_commands))
+        return lag
 
     # ------------------------------------------------------------------ #
     # compressed tier: per-slice code tables (DESIGN.md §10)
@@ -622,16 +674,22 @@ class MemoryAugmentedEngine:
             exact_threshold=self.sc.exact_threshold, route=self.sc.route,
             ef_coarse=self.sc.ef_coarse, dim=self.cfg.d_model,
             graph_gen=self.graph_gen)
-        pool = None
+        pool_states = None
         if self.read_replicas:
             slot = self._pick_replica(q_raw)
-            chosen = [shard_pool[slot] for shard_pool in self.read_replicas]
-            if all(rep.t >= flush_t for rep in chosen):
-                pool = chosen
-                plan = dataclasses.replace(plan, served_by=f"replica:{slot}")
+            if slot is not None:
+                # consistent (state, hash, t) per replica: a live follower
+                # may commit concurrently, and admission + serving must
+                # read ONE proven pair, not a torn mix of two
+                snaps = [shard_pool[slot].snapshot()
+                         for shard_pool in self.read_replicas]
+                if all(t >= flush_t for _, _, t in snaps):
+                    pool_states = [state for state, _, _ in snaps]
+                    plan = dataclasses.replace(plan,
+                                               served_by=f"replica:{slot}")
         self.last_plan = plan
-        if pool is not None:
-            ids, scores = self._replica_query(pool, q_raw, k, plan)
+        if pool_states is not None:
+            ids, scores = self._replica_query(pool_states, q_raw, k, plan)
         elif self._clients is not None:
             # the networked read: every shard host executes the same plan
             # on its applied state, candidates merge with the one
@@ -655,7 +713,8 @@ class MemoryAugmentedEngine:
                 self.memory, self.n_shards, q_raw, k, plan, tables=tables)
         return np.asarray(ids), np.asarray(scores)
 
-    def _replica_query(self, pool, q_raw, k: int, plan: query.QueryPlan
+    def _replica_query(self, pool_states, q_raw, k: int,
+                       plan: query.QueryPlan
                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Execute the engine's plan on the chosen replicas' verified
         states: the flat state directly, per-shard states merged with the
@@ -665,10 +724,10 @@ class MemoryAugmentedEngine:
         it)."""
         from repro.core import search
         if not self._layout_sharded:
-            return query.execute_plan(pool[0].state, q_raw, k, plan)
+            return query.execute_plan(pool_states[0], q_raw, k, plan)
         ids_parts, score_parts = [], []
-        for rep in pool:
-            ids_s, scores_s = query.execute_plan(rep.state, q_raw, k, plan)
+        for state in pool_states:
+            ids_s, scores_s = query.execute_plan(state, q_raw, k, plan)
             ids_parts.append(jnp.asarray(ids_s, jnp.int64))
             score_parts.append(jnp.asarray(scores_s, jnp.int64))
         flat_ids = jnp.concatenate(ids_parts, axis=-1)
@@ -726,12 +785,24 @@ class MemoryAugmentedEngine:
         calls this before serving — the sync-on-read barrier that keeps
         retrieval from ever observing un-durable commands — and it is the
         ack point for upstream callers under group commit. The doc side
-        table syncs here too, so its durability never lags the barrier."""
+        table syncs here too, so its durability never lags the barrier.
+        With live followers, the barrier doubles as the staleness nudge:
+        any follower lagging the new cursor past the policy's
+        ``max_lag_commands`` is woken immediately (never waited on)."""
         if self._doc_table is not None:
             self._doc_table.sync()
         if self._group is not None:
-            return self._group.flush()
-        return self.durable.t if self.durable is not None else self._cursor()
+            t = self._group.flush()
+        else:
+            t = self.durable.t if self.durable is not None \
+                else self._cursor()
+        if self.sc.follow is not None:
+            lag_bound = self.sc.follow.max_lag_commands
+            for pool in self.read_replicas:
+                for rep in pool:
+                    if t - rep.t > lag_bound:
+                        rep.notify_writes()
+        return t
 
     def close(self) -> None:
         """Flush pending ingest, join background work and release durable
@@ -862,6 +933,10 @@ class MemoryAugmentedEngine:
         self._last_ckpt_t = t     # first coarse read (pure function of it)
         self._reload_audit_logs(t)
         self._reload_serving_caches()
+        # recovery may land below the replicas' cursors (lost unflushed
+        # suffix): respawn the pool so every served cursor re-earns its
+        # proof against the recovered history (follower threads restart)
+        self._reset_replicas()
         h = self._canonicalize_graph(t, h)
         return t, h
 
@@ -881,6 +956,9 @@ class MemoryAugmentedEngine:
         self._last_ckpt_t = t
         self._reload_audit_logs(t)
         self._reload_serving_caches()
+        # rollback rewrites history: replicas ahead of ``t`` proved a
+        # prefix that no longer exists — tear the pool down and re-earn
+        self._reset_replicas()
         h = self._canonicalize_graph(t, h)
         return t, h
 

@@ -641,7 +641,7 @@ def test_replica_reads_join_the_equivalence_class(seed):
         _grouped_ingest(store, batches)
         for rid in range(2):
             rep = ReplicaStore(LocalPrimary(store), genesis, replica_id=rid)
-            assert rep.catch_up() == store.t
+            assert rep.catch_up() == 0 and rep.t == store.t
             assert rep.state_hash() == h_flat, \
                 f"replica {rid} left the one-hash class"
             assert rep.retrieval_hash(q, K) == rh, \
@@ -715,6 +715,102 @@ def test_engine_replica_pools_conform_and_stale_pools_fall_back(
     for eng in engines.values():
         eng.close()
         eng.close()  # regression: engine teardown must be idempotent
+
+
+def test_engine_live_followers_serve_replica_reads_without_sync(
+        model, tmp_path):
+    """The §12 acceptance property: with ``follow=FollowerPolicy(...)``
+    and continuous ingest, retrieval gets served by ``replica:<i>`` with
+    NO manual ``sync_replicas()`` call ever — the background tailers earn
+    the flush cursor on their own — and every replica-served answer is
+    bit-identical to a primary-only engine's."""
+    from repro.net.replica import FollowerPolicy
+
+    cfg, params = model
+    rng = np.random.default_rng(7)
+    docs = rng.integers(0, cfg.vocab_size, (12, 12), dtype=np.int32)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 8), dtype=np.int32)
+
+    def sc(shards, d, **kw):
+        return ServeConfig(
+            capacity=64, retrieve_k=3, max_new_tokens=4, s_cache=96,
+            context_tokens=8, shards=shards,
+            durable_dir=str(d) if d is not None else None, **kw)
+
+    ref = MemoryAugmentedEngine(cfg, params, sc(1, None))
+    live = {
+        1: MemoryAugmentedEngine(
+            cfg, params, sc(1, tmp_path / "flat", replicas=2,
+                            follow=FollowerPolicy(max_delay_s=0.005))),
+        2: MemoryAugmentedEngine(
+            cfg, params, sc(2, tmp_path / "shard", replicas=2,
+                            follow=FollowerPolicy(max_delay_s=0.005))),
+    }
+    try:
+        for burst in (docs[:6], docs[6:]):
+            ref.insert_documents(burst)
+            for eng in live.values():
+                eng.insert_documents(burst)
+        rh = ref.retrieval_hash(prompts)
+        for key, eng in live.items():
+            # NO sync_replicas(): the followers must earn the cursor alone
+            deadline = time.time() + 60.0
+            while True:
+                got = eng.retrieval_hash(prompts)
+                assert got == rh, f"engine {key} diverged from the class"
+                if eng.last_plan.served_by.startswith("replica:"):
+                    break
+                assert time.time() < deadline, \
+                    f"engine {key}: followers never earned the flush cursor"
+                time.sleep(0.005)
+            for pool in eng.read_replicas:
+                for rep in pool:
+                    assert rep.following and rep.follow_error is None
+    finally:
+        ref.close()
+        for eng in live.values():
+            eng.close()
+    for eng in live.values():
+        for pool in eng.read_replicas:
+            for rep in pool:
+                assert not rep.following, "close() left a tailer running"
+
+
+def test_ragged_or_empty_replica_pools_fall_back_not_crash(model, tmp_path):
+    """Regression: ``_pick_replica`` sized the pool from shard 0's list —
+    a ragged pool (one shard lost a replica) could route the fan-out to a
+    missing slot on another shard, and an empty pool indexed into nothing.
+    The usable pool is the min size across shards; an empty pool means
+    the primary serves — same bits either way."""
+    cfg, params = model
+    rng = np.random.default_rng(3)
+    docs = rng.integers(0, cfg.vocab_size, (8, 12), dtype=np.int32)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 8), dtype=np.int32)
+    eng = MemoryAugmentedEngine(cfg, params, ServeConfig(
+        capacity=64, retrieve_k=3, max_new_tokens=4, s_cache=96,
+        context_tokens=8, shards=2, replicas=2,
+        durable_dir=str(tmp_path / "d")))
+    try:
+        eng.insert_documents(docs)
+        assert eng.sync_replicas() == 0
+        rh = eng.retrieval_hash(prompts)
+        assert eng.last_plan.served_by.startswith("replica:")
+
+        # ragged: shard 1 loses a replica — the slot range shrinks to the
+        # min pool size, so the fan-out can never index a missing slot
+        eng.read_replicas[1][1].close()
+        eng.read_replicas[1] = eng.read_replicas[1][:1]
+        assert eng.retrieval_hash(prompts) == rh
+        assert eng.last_plan.served_by == "replica:0"
+
+        # empty pool on one shard: the read falls back to the primary
+        for rep in eng.read_replicas[1]:
+            rep.close()
+        eng.read_replicas[1] = []
+        assert eng.retrieval_hash(prompts) == rh
+        assert eng.last_plan.served_by == "primary"
+    finally:
+        eng.close()
 
 
 # --------------------------------------------------------------------------- #

@@ -52,13 +52,13 @@ def _golden_messages():
     ids = (0).to_bytes(8, "little") + (5).to_bytes(8, "little")
     scores = (123).to_bytes(8, "little") + (-4 % (1 << 64)).to_bytes(8, "little")
     return [
-        ("hello", p.Hello(), 1),
+        ("hello", p.Hello(epoch=3), 1),
         ("hello_ack",
          p.HelloAck(dim=4, itemsize=4, contract="Q16.16", t=9,
-                    state_hash=0x1122334455667788), 1),
+                    state_hash=0x1122334455667788, epoch=3), 1),
         ("cursor", p.Cursor(), 2),
         ("cursor_ack", p.CursorAck(t=13), 2),
-        ("append", p.Append(base_t=13, logs=(blob, blob)), 3),
+        ("append", p.Append(base_t=13, epoch=3, logs=(blob, blob)), 3),
         ("append_ack", p.AppendAck(t=21), 3),
         ("query",
          p.Query(k=5, ef=64, route="exact", use_kernel=False, nq=2, dim=4,
@@ -96,6 +96,10 @@ def _golden_messages():
                        table_digest=0xFEEDFACE01020304,
                        records=(b"\x01side-record-a\xfe",
                                 b"\x02side-record-bb\xfd")), 15),
+        ("heartbeat", p.Heartbeat(node_id=2, epoch=3), 16),
+        ("heartbeat_ack",
+         p.HeartbeatAck(t=9, epoch=3,
+                        state_hash=0xFEEDFACE01020304), 16),
         ("error",
          p.ErrorMsg(kind="ValueError", message="cursor 99 ahead of WAL"),
          14),
@@ -274,6 +278,19 @@ def test_transport_error_is_oserror():
     assert issubclass(p.TransportError, OSError)
     assert issubclass(p.RemoteError, ValueError)
     assert issubclass(p.ProtocolError, ValueError)
+
+
+def test_stale_epoch_error_crosses_wire_as_remote_kind():
+    """A fenced primary sees ``StaleEpochError`` as a RemoteError whose
+    ``kind`` names the fencing class — clients distinguish "I was
+    deposed" from every other append failure without a new frame type."""
+    assert issubclass(p.StaleEpochError, ValueError)
+    err = p.ErrorMsg(kind="StaleEpochError",
+                     message="append epoch 1 < host epoch 2: fenced")
+    with pytest.raises(p.RemoteError) as ei:
+        p.raise_if_error(err)
+    assert ei.value.kind == "StaleEpochError"
+    assert "fenced" in str(ei.value)
 
 
 def test_error_round_trips_exact_kind():

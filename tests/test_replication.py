@@ -14,9 +14,11 @@ shard exactly as it would a local one.
 import dataclasses
 import os
 import pathlib
+import socket
 import subprocess
 import sys
 import tempfile
+import time
 
 import numpy as np
 import pytest
@@ -33,10 +35,10 @@ from repro.core.state import init_state
 from repro.net import protocol as p
 from repro.net.client import LocalTransport, RemoteShardClient, \
     SocketTransport
-from repro.net.replica import ReplicaDivergence, ReplicaStore
-from repro.net.server import ShardHost, ShardServer
-from repro.runtime.coordinator import promote_on_primary_loss, \
-    promote_sharded, proven_cursor
+from repro.net.replica import FollowerPolicy, ReplicaDivergence, ReplicaStore
+from repro.net.server import ShardHost, ShardServer, load_epoch
+from repro.runtime.coordinator import FailureDetector, LeaseConfig, \
+    promote_on_primary_loss, promote_sharded, proven_cursor
 from test_bulk_apply import _random_log
 
 D = 8
@@ -174,11 +176,11 @@ def test_replica_converges_under_lossy_transport(seed):
             return faulty["t"]
 
         rep = _replica_over(host, factory, replica_id=3)
-        t = rep.catch_up(max_commands=2, max_rounds=400)
-
-        assert t == host.store.t
+        assert rep.catch_up(max_commands=2, max_rounds=400) == 0, \
+            "catch-up gave up under the fault schedule"
+        assert rep.t == host.store.t
         assert rep.state_hash() == host.state_hash()
-        assert host.replica_cursors[3] == t  # the ack round-tripped
+        assert host.replica_cursors[3] == rep.t  # the ack round-tripped
         q = _queries(seed)
         plan = query_lib.plan_query(shard_wal.live_count(host.state), K, 64)
         ids, scores = query_lib.execute_plan(host.state, q, K, plan)
@@ -201,8 +203,8 @@ def test_replica_interleaved_with_ingest_under_faults():
             replica_id=9)
         for i in range(4):
             writer.append(_random_log(7 * i + 1, 4, ID_SPACE))
-            t = rep.catch_up(max_commands=3, max_rounds=200)
-            assert t == host.store.t
+            assert rep.catch_up(max_commands=3, max_rounds=200) == 0
+            assert rep.t == host.store.t
             assert rep.state_hash() == host.state_hash()
         assert host.replica_cursors[9] == host.store.t
 
@@ -360,7 +362,8 @@ def test_crashed_durable_replica_resumes_from_its_wal(seed, cut):
         rep2 = ReplicaStore(RemoteShardClient(LocalTransport(host)),
                             directory=rdir, replica_id=6)
         assert rep2.t == t_crash, "durable cursor survived the crash"
-        assert rep2.catch_up() == host.store.t
+        assert rep2.catch_up() == 0
+        assert rep2.t == host.store.t
         assert rep2.state_hash() == host.state_hash()
 
 
@@ -385,8 +388,8 @@ if rounds:
         print("ACKED", rep.sync(max_commands=2), flush=True)
     time.sleep(600)  # hold the cursor until the parent SIGKILLs us
 else:
-    t = rep.catch_up()
-    print("DONE", t, hex(rep.state_hash()), flush=True)
+    assert rep.catch_up() == 0
+    print("DONE", rep.t, hex(rep.state_hash()), flush=True)
 """
 
 
@@ -549,9 +552,11 @@ def _sigkill_failover_case(root, seed):
                 for i in range(2)]
 
         writer.append_many(batches[:2])   # grouped ingest, part 1
-        t_lag = reps[0].catch_up()        # replica 0 stops following here
+        assert reps[0].catch_up() == 0    # replica 0 stops following here
+        t_lag = reps[0].t
         writer.append(batches[2])
-        t_max = reps[1].catch_up()        # replica 1 proves one batch more
+        assert reps[1].catch_up() == 0    # replica 1 proves one batch more
+        t_max = reps[1].t
         assert 0 < t_lag < t_max == writer.t
         acked = {r.replica_id: r.t for r in reps}
 
@@ -582,7 +587,8 @@ def _sigkill_failover_case(root, seed):
         new_writer.append(_random_log(seed + 7, 3, ID_SPACE))
         straggler = reps[0]
         straggler.primary = new_writer
-        assert straggler.catch_up() == host.store.t
+        assert straggler.catch_up() == 0
+        assert straggler.t == host.store.t
         assert straggler.state_hash() == host.state_hash()
         host.close()
     finally:
@@ -770,8 +776,8 @@ def test_pipelined_catch_up_is_bit_identical_to_serial(tmp_path):
     piped = ReplicaStore(RemoteShardClient(LocalTransport(host)),
                          _genesis(), replica_id=1,
                          prefetch=RemoteShardClient(LocalTransport(host)))
-    assert piped.catch_up(max_commands=3, pipeline=True) == serial.t \
-        == host.store.t
+    assert piped.catch_up(max_commands=3, pipeline=True) == 0
+    assert piped.t == serial.t == host.store.t
     assert piped.state_hash() == serial.state_hash() == host.state_hash()
     q = _queries(11)
     assert piped.retrieval_hash(q, K) == serial.retrieval_hash(q, K)
@@ -787,7 +793,8 @@ def test_pipelined_catch_up_rides_prefetch_faults(tmp_path):
     rep = ReplicaStore(RemoteShardClient(LocalTransport(host)), _genesis(),
                        replica_id=2, prefetch=flaky)
     assert rep.catch_up(max_commands=2, pipeline=True,
-                        max_rounds=200) == host.store.t
+                        max_rounds=200) == 0
+    assert rep.t == host.store.t
     assert rep.state_hash() == host.state_hash()
 
 
@@ -807,4 +814,282 @@ def test_replica_double_close_is_a_noop(tmp_path):
     rep.close()
     rep.close()  # regression: the second close must be a no-op
     host.close()
+    host.close()
+
+
+# --------------------------------------------------------------------------- #
+# residual lag: "caught up" vs "gave up" (DESIGN.md §12)
+# --------------------------------------------------------------------------- #
+
+
+def test_catch_up_reports_residual_lag_when_outrun(tmp_path):
+    """A hot primary that writes between the replica's tails outruns a
+    bounded catch-up: the call must report the residual lag, not return
+    silently looking identical to convergence. Regression for catch_up's
+    give-up path being indistinguishable from the caught-up path."""
+    host, writer = _primary(tmp_path / "primary", batches=1, seed=21)
+
+    class HotPrimary:
+        """Every TAIL the replica sends lands AFTER a fresh ingest burst —
+        the primary's cursor always moves first."""
+
+        def __init__(self, inner):
+            self.inner = inner
+            self.hot = True
+            self.rounds = 0
+
+        def request(self, data):
+            msg, _, _ = p.decode_frame(data)
+            if isinstance(msg, p.Tail) and self.hot:
+                self.rounds += 1
+                writer.append(_random_log(200 + self.rounds, 3, ID_SPACE))
+            return self.inner.request(data)
+
+        def close(self):
+            self.inner.close()
+
+    hot = {}
+
+    def factory(inner):
+        hot["t"] = HotPrimary(inner)
+        return hot["t"]
+
+    rep = _replica_over(host, factory, replica_id=0)
+    lag = rep.catch_up(max_commands=2, max_rounds=3)
+    assert lag > 0, "an outrun catch-up must report residual lag, not 0"
+    assert rep.t < host.store.t
+    # the reported lag is the primary's probed cursor distance exactly
+    assert rep.t + lag == host.store.t
+    # the writer quiesces: the next catch-up proves convergence (lag 0)
+    hot["t"].hot = False
+    assert rep.catch_up() == 0
+    assert rep.t == host.store.t
+    assert rep.state_hash() == host.state_hash()
+
+
+# --------------------------------------------------------------------------- #
+# live followers: the background tailer (DESIGN.md §12)
+# --------------------------------------------------------------------------- #
+
+
+def _await(cond, *, timeout=60.0, tick=0.002):
+    deadline = time.time() + timeout
+    while not cond():
+        assert time.time() < deadline, "condition never held"
+        time.sleep(tick)
+
+
+def test_follower_thread_converges_without_explicit_sync(tmp_path):
+    """The tentpole property: under a FollowerPolicy the replica tails the
+    primary on its own thread — repeated ingest bursts converge with NO
+    caller-side sync, every converged cursor is hash-proven, and the
+    follower stops/restarts cleanly."""
+    host, writer = _primary(tmp_path / "primary", batches=1, seed=31)
+    rep = ReplicaStore(RemoteShardClient(LocalTransport(host)), _genesis(),
+                       replica_id=0)
+    rep.start_following(FollowerPolicy(max_lag_commands=0, max_delay_s=0.01))
+    assert rep.following
+    rep.start_following()  # idempotent while running
+    try:
+        for i in range(3):
+            writer.append(_random_log(40 + i, 4, ID_SPACE))
+            rep.notify_writes()
+            _await(lambda: rep.t >= host.store.t)
+            state, h, t = rep.snapshot()
+            assert t == host.store.t and h == host.state_hash()
+        assert rep.follow_error is None
+        assert host.replica_cursors[0] == host.store.t
+    finally:
+        rep.stop_following()
+    assert not rep.following
+    # the stopped follower is still a valid replica, and restartable
+    writer.append(_random_log(99, 3, ID_SPACE))
+    assert rep.catch_up() == 0
+    rep.start_following(FollowerPolicy(max_delay_s=0.01))
+    assert rep.following
+    rep.close()  # close() stops the thread too
+    assert not rep.following
+
+
+def test_follower_rides_transport_faults(tmp_path):
+    """A lossy wire only delays the follower — the thread retries
+    idempotently and still converges to the proven cursor."""
+    host, writer = _primary(tmp_path / "primary", batches=2, seed=37)
+    rep = _replica_over(
+        host,
+        lambda inner: FaultyTransport(inner, 37, drop_req=0.3,
+                                      drop_resp=0.3, duplicate=0.2),
+        replica_id=4)
+    rep.start_following(FollowerPolicy(max_delay_s=0.005))
+    try:
+        writer.append(_random_log(55, 4, ID_SPACE))
+        _await(lambda: rep.t >= host.store.t)
+        assert rep.state_hash() == host.state_hash()
+        assert rep.follow_error is None and rep.following
+    finally:
+        rep.stop_following()
+
+
+def test_follower_halts_on_divergence_and_records_why(tmp_path):
+    """Divergence is terminal for a follower: the thread must STOP (not
+    spin retrying a proven mismatch), record the exception on
+    ``follow_error``, and commit nothing."""
+    host, _ = _primary(tmp_path / "primary", batches=2, seed=33)
+    rep = _replica_over(
+        host,
+        lambda inner: _TamperTransport(
+            inner,
+            lambda m: dataclasses.replace(m, state_hash=m.state_hash ^ 1)),
+        replica_id=1)
+    rep.start_following(FollowerPolicy(max_delay_s=0.005))
+    _await(lambda: not rep.following)
+    assert isinstance(rep.follow_error, ReplicaDivergence)
+    assert rep.t == 0, "a diverged follower committed a cursor"
+    assert host.replica_cursors == {}, "a diverged follower acked"
+
+
+def test_wedged_host_times_out_as_transport_error():
+    """A host that accepts but never answers must surface as a bounded
+    ``TransportError`` — the hang the failure detector cannot see.
+    Regression for the socket deadline not covering request I/O."""
+    wedge = socket.socket()
+    try:
+        wedge.bind(("127.0.0.1", 0))
+        wedge.listen(1)  # connections complete in the backlog; no reads
+        port = wedge.getsockname()[1]
+        tr = SocketTransport("127.0.0.1", port, timeout=0.2)
+        t0 = time.time()
+        with pytest.raises(p.TransportError):
+            tr.request(p.encode_frame(p.Cursor(), 1))
+        assert time.time() - t0 < 5.0, "the deadline did not bound the hang"
+        tr.close()
+    finally:
+        wedge.close()
+
+
+# --------------------------------------------------------------------------- #
+# lease-based failure detection → automatic verified promotion (§12)
+# --------------------------------------------------------------------------- #
+
+
+def test_detector_auto_promotes_sigkilled_primary_to_max_proven_prefix(
+        tmp_path):
+    """The full loop, against a real SIGKILLed subprocess primary: healthy
+    beats hold the lease; the kill expires it after ``lease_misses``
+    bounded probes; the detector auto-promotes WITHOUT any caller action;
+    and the promoted host's state equals an independent in-memory apply of
+    exactly the max proven WAL prefix — the unshipped suffix dies with
+    the primary, every acked cursor survives."""
+    proc, mk_writer = _spawn_primary(tmp_path / "primary")
+    try:
+        writer = mk_writer()
+        batches = [_random_log(9000 + i, 4, ID_SPACE) for i in range(4)]
+        reps = [ReplicaStore(mk_writer(), _genesis(),
+                             directory=tmp_path / f"replica_{i}",
+                             replica_id=i)
+                for i in range(2)]
+        writer.append_many(batches[:2])
+        assert reps[0].catch_up() == 0    # the straggler stops here
+        writer.append(batches[2])
+        assert reps[1].catch_up() == 0    # the winner proves one batch more
+        t_max = reps[1].t
+        assert 0 < reps[0].t < t_max == writer.t
+        writer.append(batches[3])         # unshipped: dies with the primary
+
+        det = FailureDetector(
+            [mk_writer()], [reps],
+            lease=LeaseConfig(interval_s=0.01, lease_misses=2), epoch=1)
+        assert det.poll() == {}           # healthy: the lease holds
+        assert det.events[-1]["event"] == "beat"
+        assert det.misses == [0]
+
+        proc.kill()
+        proc.wait(timeout=30)
+        det.start()                       # automatic from here on
+        _await(lambda: 0 in det.promoted)
+        det.stop()
+        host = det.promoted[0]
+        assert host.store.t == t_max, \
+            "promotion missed the max proven prefix (or resurrected " \
+            "the dead primary's suffix)"
+        ref = _apply_prefix(batches, t_max)
+        assert host.state_hash() == hashing.hash_pytree(ref), \
+            "promoted state != independent apply of the proven prefix"
+        assert det.epoch == 2, "failover did not bump the fleet epoch"
+        assert host.epoch == 2, "the promoted host was not stamped"
+        assert load_epoch(host.store.dir) == 2, "the stamp is not durable"
+        kinds = [e["event"] for e in det.events]
+        assert kinds.count("miss") >= 2 and "lease_expired" in kinds \
+            and "promoted" in kinds
+        host.close()
+    finally:
+        proc.kill()
+        proc.wait(timeout=30)
+
+
+def test_stale_epoch_append_is_fenced_after_failover(tmp_path):
+    """The fencing invariant: after a promotion bumps the fleet epoch, a
+    revived old primary is stamped by the first beat that reaches it and
+    its pre-failover writers' APPENDs are refused with StaleEpochError —
+    durably, across a host restart."""
+    host = ShardHost(tmp_path / "old", _genesis())
+    old_writer = RemoteShardClient(LocalTransport(host))
+    old_writer.append(_random_log(1, 4, ID_SPACE))
+    rep = ReplicaStore(RemoteShardClient(LocalTransport(host)), _genesis(),
+                       directory=tmp_path / "replica", replica_id=0)
+    assert rep.catch_up() == 0
+
+    # failover (the detector's move): epoch 1 -> 2, verified promotion
+    new_host, _, t = promote_on_primary_loss([rep], epoch=2)
+    assert new_host.epoch == 2 and load_epoch(new_host.store.dir) == 2
+
+    # the "dead" primary comes back; the detector's beat stamps it
+    probe = RemoteShardClient(LocalTransport(host))
+    assert probe.epoch == 0               # handshake predates the stamp
+    probe.bump_epoch(2)                   # the detector's fleet epoch
+    _, host_epoch, _ = probe.heartbeat()
+    assert host_epoch == 2
+    assert host.epoch == 2 and load_epoch(host.store.dir) == 2
+
+    # the old regime's writer can never commit again
+    t_before = host.store.t
+    with pytest.raises(p.RemoteError) as ei:
+        old_writer.append(_random_log(2, 4, ID_SPACE))
+    assert ei.value.kind == "StaleEpochError"
+    assert host.store.t == t_before, "a fenced append advanced the cursor"
+
+    # the fence survives a restart of the old host
+    host.close()
+    revived = ShardHost(tmp_path / "old")
+    assert revived.epoch == 2
+    err = revived.handle(p.Append(
+        base_t=revived.store.t, epoch=0,
+        logs=(log_to_bytes(_random_log(3, 4, ID_SPACE)),)))
+    assert isinstance(err, p.ErrorMsg) and err.kind == "StaleEpochError"
+
+    # a fresh client learns the current epoch at handshake and may write
+    fresh = RemoteShardClient(LocalTransport(revived))
+    assert fresh.epoch == 2
+    fresh.append(_random_log(4, 4, ID_SPACE))
+
+    # and the NEW primary serves the new regime's writes
+    nw = RemoteShardClient(LocalTransport(new_host))
+    assert nw.epoch == 2
+    nw.append(_random_log(5, 4, ID_SPACE))
+    new_host.close()
+    revived.close()
+
+
+def test_detector_adopts_a_greater_epoch_from_beats(tmp_path):
+    """Two detectors, one fleet: a beat against a host stamped by a newer
+    regime out-epochs this detector — it adopts (fleet epoch is a max),
+    so a later promotion by EITHER detector still fences the older one."""
+    host = ShardHost(tmp_path / "s", _genesis())
+    stamped = RemoteShardClient(LocalTransport(host))
+    stamped.bump_epoch(7)
+    stamped.heartbeat()                   # host durably at epoch 7
+    det = FailureDetector([RemoteShardClient(LocalTransport(host))], [[]],
+                          epoch=1)
+    det.poll()
+    assert det.epoch == 7, "the detector did not adopt the newer epoch"
     host.close()
